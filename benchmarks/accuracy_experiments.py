@@ -1,0 +1,171 @@
+"""Accuracy-side benchmarks: Table 2 / Figs 10-12 (QAT + co-exploration).
+
+These train small CNNs on the procedural cifar_like dataset (CPU budget);
+scale is reduced vs the paper (documented in EXPERIMENTS.md) but the
+comparisons are like-for-like across PE types, which is what the paper's
+claims are about.  Budgets are kept small so `python -m benchmarks.run`
+finishes; examples/coexplore_cnn.py runs the bigger version.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cnn, dse
+from repro.core.pe import PAPER_PE_TYPES
+from repro.data.synthetic import CifarLike, CifarLikeConfig
+from repro.train import optimizer as opt_lib
+
+_STEPS = 120
+_BATCH = 64
+_IMG = 16
+
+
+def _train_qat(model_kind: str, pe_type: str, seed: int = 0,
+               steps: int = _STEPS) -> float:
+  data = CifarLike(CifarLikeConfig(n_classes=10, image_size=_IMG,
+                                   seed=seed))
+  key = jax.random.PRNGKey(seed)
+  if model_kind == "vgg":
+    params = cnn.init_vgg_supernet(key, 10)
+    r_use, c_use = cnn.arch_masks(cnn.max_arch())
+    fwd = functools.partial(cnn.apply_vgg, pe_type=pe_type,
+                            r_use=r_use, c_use=c_use)
+  else:
+    depth = int(model_kind.replace("resnet", ""))
+    params = cnn.init_resnet(key, depth, 10, width=8)
+    fwd = functools.partial(cnn.apply_resnet, depth=depth, pe_type=pe_type)
+
+  def loss_fn(p, x, y):
+    return cnn.xent(fwd(p, x), y)
+
+  grad = jax.jit(jax.value_and_grad(loss_fn))
+  ocfg = opt_lib.SGDConfig(lr=0.05, steps_per_epoch=40, drops=(2, 3))
+  opt = opt_lib.sgd_init(params)
+  for step in range(steps):
+    x, y = data.sample(_BATCH, split_seed=step)
+    _, g = grad(params, jnp.asarray(x), jnp.asarray(y))
+    params, opt, _ = opt_lib.sgd_update(ocfg, params, g, opt)
+  xv, yv = data.sample(512, split_seed=10_000_019)
+  logits = jax.jit(fwd)(params, jnp.asarray(xv))
+  return float(cnn.accuracy(logits, jnp.asarray(yv)))
+
+
+def table2_accuracy() -> None:
+  """Table 2 (accuracy columns): QAT top-1 per PE type per network."""
+  rows = []
+  t0 = time.perf_counter()
+  for model_kind in ("resnet20",):
+    for pe_type in PAPER_PE_TYPES:
+      acc = _train_qat(model_kind, pe_type)
+      rows.append(f"{model_kind}/{pe_type}={acc:.3f}")
+  us = (time.perf_counter() - t0) * 1e6
+  emit("table2_accuracy", us,
+       ";".join(rows) + ";paper_claim=on_par_across_types")
+
+
+def fig10_11_pareto_fronts() -> None:
+  """Figs 10-11: accuracy vs perf-per-area / energy Pareto fronts."""
+  from benchmarks.paper_figures import _explorer
+  from repro.core.workloads import get_network
+  t0 = time.perf_counter()
+  accs = {t: _train_qat("resnet20", t, steps=_STEPS)
+          for t in PAPER_PE_TYPES}
+  ex = _explorer()
+  layers = get_network("resnet20")
+  res = ex.explore(layers, "resnet20", n_per_type=150, measure_oracle=0)
+  ppa_n, en_n = dse.normalized_metrics(res.points)
+  types = np.asarray([p.cfg.pe_type for p in res.points])
+  pts = []
+  for t in PAPER_PE_TYPES:
+    m = types == t
+    pts.append((t, accs[t], float(ppa_n[m].max()), float(en_n[m].min())))
+  err = np.asarray([1 - a for (_, a, _, _) in pts])
+  inv_ppa = np.asarray([1.0 / p for (_, _, p, _) in pts])
+  en = np.asarray([e for (_, _, _, e) in pts])
+  front_ppa = dse.pareto_front(np.stack([err, inv_ppa], 1))
+  front_en = dse.pareto_front(np.stack([err, en], 1))
+  on_front_ppa = [pts[i][0] for i in range(len(pts)) if front_ppa[i]]
+  on_front_en = [pts[i][0] for i in range(len(pts)) if front_en[i]]
+  us = (time.perf_counter() - t0) * 1e6
+  emit("fig10_11_pareto_fronts", us,
+       ";".join(f"{t}:acc={a:.3f},ppa={p:.2f}x,energy={e:.3f}x"
+                for (t, a, p, e) in pts)
+       + f";front_ppa={'/'.join(on_front_ppa)}"
+       + f";front_energy={'/'.join(on_front_en)}"
+       + ";paper_claim=LightPEs_on_front")
+
+
+def fig12_coexploration() -> None:
+  """Fig 12: joint HW x NN co-exploration fronts (supernet proxy)."""
+  from benchmarks.paper_figures import _explorer
+  from repro.core.coexplore import co_explore, normalize_and_front
+  from repro.core.supernet import Supernet, SupernetConfig
+  t0 = time.perf_counter()
+  sn = Supernet(SupernetConfig(steps=80, batch=32, image_size=_IMG))
+  sn.train(log_every=0)
+  arch_accs = sn.sample_and_evaluate(n_archs=12, n_val=256)
+  ex = _explorer()
+  points = co_explore(ex.models, arch_accs, n_hw_per_type=8)
+  res = normalize_and_front(points)
+  on_front = set(res["types"][res["front_energy"]])
+  us = (time.perf_counter() - t0) * 1e6
+  emit("fig12_coexploration", us,
+       f"pairs={len(points)};front_energy_types={'/'.join(sorted(on_front))};"
+       f"acc_range={min(a for _, a in arch_accs):.3f}-"
+       f"{max(a for _, a in arch_accs):.3f};"
+       f"paper_claim=LightPEs_on_joint_front")
+
+
+ALL = [table2_accuracy, fig10_11_pareto_fronts, fig12_coexploration]
+
+
+def lm_qat_ablation() -> None:
+  """Beyond-paper: QUIDAM's PE-type axis on a LANGUAGE model.
+
+  Trains the same reduced olmo-family LM under each PE type's QAT policy
+  on the Markov stream and reports final train loss — the LM analogue of
+  Table 2's on-par-accuracy claim.
+  """
+  from repro.configs import get_config, reduce_for_smoke
+  from repro.data.synthetic import MarkovTokenStream, TokenStreamConfig
+  from repro.models.model import build_model
+  from repro.quant.policy import QuantPolicy
+  from repro.train import optimizer as opt_lib
+  from repro.train import train_step as ts_lib
+
+  t0 = time.perf_counter()
+  cfg = reduce_for_smoke(get_config("olmo-1b"), d_model=128, n_layers=4,
+                         d_ff=256, vocab_size=2048)
+  stream = MarkovTokenStream(TokenStreamConfig(vocab_size=cfg.vocab_size,
+                                               branching=4))
+  model = build_model(cfg)
+  rows = []
+  for pe_type in PAPER_PE_TYPES:
+    tcfg = ts_lib.TrainConfig(
+        optimizer=opt_lib.AdamWConfig(lr=3e-3, warmup_steps=0,
+                                      schedule="constant",
+                                      weight_decay=0.0),
+        quant=QuantPolicy(pe_type=pe_type))
+    state = ts_lib.make_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step = ts_lib.jit_train_step(model, tcfg, donate=False)
+    losses = []
+    for i in range(60):
+      toks, labels = stream.sample_batch(8, 64, i)
+      state, m = step(state, {"tokens": jnp.asarray(toks),
+                              "labels": jnp.asarray(labels)})
+      losses.append(float(m["loss"]))
+    rows.append(f"{pe_type}={np.mean(losses[-10:]):.3f}")
+  us = (time.perf_counter() - t0) * 1e6
+  emit("lm_qat_ablation", us,
+       "final_loss:" + ";".join(rows)
+       + ";extension=paper_claim_generalizes_to_LMs")
+
+
+ALL = ALL + [lm_qat_ablation]

@@ -1,0 +1,19 @@
+"""Benchmark harness utilities: timing + the name,us_per_call,derived CSV."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+
+def time_call(fn: Callable, n: int = 3, warmup: int = 1) -> float:
+  """Mean wall-time per call in microseconds."""
+  for _ in range(warmup):
+    fn()
+  t0 = time.perf_counter()
+  for _ in range(n):
+    fn()
+  return (time.perf_counter() - t0) / n * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+  print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,85 @@
+"""Framework-side benchmarks: kernel codecs, train step, serve step."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+
+
+def kernel_codecs() -> None:
+  """HBM bytes per weight for each deploy codec + interpret-mode check."""
+  from repro.kernels.pow2_matmul import ops as pow2_ops
+  from repro.kernels.int8_matmul import ops as i8_ops
+  key = jax.random.PRNGKey(0)
+  k, n = 512, 512
+  w = jax.random.normal(key, (k, n)) * 0.05
+  x = jax.random.normal(key, (64, k))
+  rows = []
+  for kt in (1, 2):
+    pw = pow2_ops.quantize_weights(w, k_terms=kt)
+    t0 = time.perf_counter()
+    out = pow2_ops.pow2_matmul(x, pw, interpret=True)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    ref = pow2_ops.pow2_matmul_reference(x, pw)
+    err = float(jnp.max(jnp.abs(out - ref)) / jnp.max(jnp.abs(ref)))
+    rows.append(f"pow2_k{kt}:bytes/weight={pw.hbm_bytes / (k * n):.3f},"
+                f"err={err:.1e}")
+  i8 = i8_ops.quantize_weights(w)
+  rows.append(f"int8:bytes/weight={i8.hbm_bytes / (k * n):.3f}")
+  rows.append("bf16_dense:bytes/weight=2.0")
+  emit("kernel_codecs", 0.0, ";".join(rows))
+
+
+def train_step_small_lm() -> None:
+  """Micro end-to-end: one optimizer step of a tiny zoo model."""
+  from repro.configs import get_config, reduce_for_smoke
+  from repro.models.model import build_model
+  from repro.train import train_step as ts_lib
+  cfg = reduce_for_smoke(get_config("olmo-1b"))
+  model = build_model(cfg)
+  tcfg = ts_lib.TrainConfig()
+  state = ts_lib.make_train_state(model, tcfg, jax.random.PRNGKey(0))
+  step = ts_lib.jit_train_step(model, tcfg, donate=False)
+  key = jax.random.PRNGKey(1)
+  batch = {"tokens": jax.random.randint(key, (4, 128), 0, cfg.vocab_size),
+           "labels": jax.random.randint(key, (4, 128), 0, cfg.vocab_size)}
+  state, m = step(state, batch)  # compile
+  t0 = time.perf_counter()
+  for _ in range(3):
+    state, m = step(state, batch)
+  jax.block_until_ready(state)
+  us = (time.perf_counter() - t0) / 3 * 1e6
+  emit("train_step_small_lm", us,
+       f"loss={float(m['loss']):.3f};tokens/step=512")
+
+
+def serve_engine_throughput() -> None:
+  """Batched serving engine throughput on a tiny model."""
+  from repro.configs import get_config, reduce_for_smoke
+  from repro.models.model import build_model
+  from repro.serve.engine import EngineConfig, ServeEngine
+  import dataclasses
+  cfg = reduce_for_smoke(get_config("qwen3-0.6b"))
+  cfg = dataclasses.replace(cfg, kv_quant="int8")
+  model = build_model(cfg)
+  params = model.init(jax.random.PRNGKey(0))
+  eng = ServeEngine(model, params, EngineConfig(
+      batch_slots=4, max_len=128, prompt_bucket=32))
+  rng = np.random.RandomState(0)
+  for _ in range(6):
+    eng.submit(rng.randint(0, cfg.vocab_size, size=12), max_new_tokens=8)
+  t0 = time.perf_counter()
+  out = eng.run_until_drained()
+  dt = time.perf_counter() - t0
+  total_tokens = sum(len(v) for v in out.values())
+  emit("serve_engine_throughput", dt / max(total_tokens, 1) * 1e6,
+       f"requests={len(out)};tokens={total_tokens};kv_quant=int8")
+
+
+ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput]

@@ -1,0 +1,39 @@
+"""Benchmark runner: one function per paper table/figure + framework perf.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--only", default=None,
+                  help="run only benchmarks whose name contains this")
+  args = ap.parse_args()
+
+  from benchmarks import accuracy_experiments, framework_perf, paper_figures
+  benches = (paper_figures.ALL + accuracy_experiments.ALL
+             + framework_perf.ALL)
+  print("name,us_per_call,derived")
+  failures = 0
+  for fn in benches:
+    if args.only and args.only not in fn.__name__:
+      continue
+    try:
+      fn()
+    except Exception as e:  # noqa: BLE001
+      failures += 1
+      print(f"{fn.__name__},nan,FAILED:{type(e).__name__}:{e}",
+            flush=True)
+      traceback.print_exc(file=sys.stderr)
+  if failures:
+    sys.exit(1)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,33 @@
+"""QUIDAM quickstart: fit PPA models, explore the design space, print the
+paper's headline comparison (LightPE vs INT16) in under a minute.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import dse
+from repro.core.workloads import get_network
+
+
+def main():
+  layers = get_network("resnet20")
+  print("Fitting power/area/latency polynomial models (4 PE types)...")
+  explorer = dse.DesignSpaceExplorer(degree=5, n_train=200, layers=layers)
+  res = explorer.explore(layers, "resnet20", n_per_type=200)
+  ppa_n, en_n = dse.normalized_metrics(res.points)
+  types = np.asarray([p.cfg.pe_type for p in res.points])
+  print(f"\n{len(res.points)} design points (ResNet-20), normalized to the "
+        "best INT16 configuration:")
+  print(f"{'PE type':12s} {'best perf/area':>15s} {'best energy':>12s}")
+  for t in ("FP32", "INT16", "LightPE-2", "LightPE-1"):
+    m = types == t
+    print(f"{t:12s} {ppa_n[m].max():14.2f}x {en_n[m].min():11.3f}x")
+  print(f"\nmodel eval: {res.seconds_model / len(res.points) * 1e6:.0f} "
+        f"us/design vs oracle {res.seconds_oracle_per_design * 1e3:.1f} "
+        "ms/design (vs hours for real synthesis)")
+  best = res.points[int(np.argmax(ppa_n))]
+  print(f"best design: {best.cfg}")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,16 @@
+"""repro: QUIDAM on TPU — quantization-aware accelerator/model co-exploration
+as a first-class feature of a multi-pod JAX training/serving framework.
+
+Subpackages:
+  core      the paper's contribution (PE types, PPA models, DSE, supernet)
+  quant     framework-level quantization policies (QAT + deploy codecs)
+  models    architecture zoo (dense / MoE / hybrid / SSM / enc-dec / VLM)
+  configs   assigned architectures x input shapes
+  parallel  sharding rules, mesh logic, compressed collectives
+  train     optimizer, train step, checkpointing, fault tolerance
+  serve     batched serving engine with quantized KV caches
+  data      synthetic token + image pipelines
+  kernels   Pallas TPU kernels (pow2/int8 matmul, quant decode attn, rwkv6)
+  launch    mesh / dryrun / train / serve / roofline drivers
+"""
+__version__ = "1.0.0"

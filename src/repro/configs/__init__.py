@@ -1,0 +1,14 @@
+"""Architecture registry: importing this package registers all configs."""
+from repro.configs import (granite_34b, jamba_1_5_large, minitron_4b,  # noqa
+                           mixtral_8x22b, olmo_1b, pixtral_12b,
+                           qwen2_moe_a2_7b, qwen3_0_6b, rwkv6_1_6b,
+                           whisper_base)
+from repro.configs.base import ModelConfig, get_config, list_archs  # noqa
+from repro.configs.shapes import (SHAPES, input_specs,  # noqa
+                                  reduce_for_smoke, shape_supported)
+
+ALL_ARCHS = (
+    "olmo-1b", "granite-34b", "qwen3-0.6b", "minitron-4b", "mixtral-8x22b",
+    "qwen2-moe-a2.7b", "jamba-1.5-large", "whisper-base", "rwkv6-1.6b",
+    "pixtral-12b",
+)

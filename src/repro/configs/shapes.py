@@ -1,0 +1,124 @@
+"""Assigned input shapes x dry-run input specs.
+
+Four shapes per architecture (LM-family grid):
+  train_4k     seq 4,096  x global batch 256   (training step)
+  prefill_32k  seq 32,768 x global batch 32    (inference prefill)
+  decode_32k   seq 32,768 x global batch 128   (one token, 32k KV cache)
+  long_500k    seq 524,288 x global batch 1    (one token, 500k context)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (single new token against a
+KV/state cache of the given length), NOT ``train_step``.  ``long_500k``
+requires sub-quadratic attention: it runs for mixtral (SWA), jamba
+(hybrid) and rwkv6 (attention-free) and is a documented skip for the pure
+full-attention architectures (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+  name: str
+  seq_len: int
+  global_batch: int
+  mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_supported(cfg: ModelConfig, shape: str) -> Optional[str]:
+  """None if the (arch, shape) cell runs; else the documented skip reason."""
+  spec = SHAPES[shape]
+  if spec.name == "long_500k" and not cfg.supports_long_context:
+    return ("full quadratic attention with unbounded KV: long_500k requires "
+            "sub-quadratic attention (SWA / SSM / hybrid)")
+  if cfg.family == "encdec" and spec.name == "long_500k":
+    return "enc-dec full attention (448-token decoder design)"
+  return None
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+  """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+  Modality frontends are STUBS per the assignment: whisper gets precomputed
+  frame embeddings, pixtral gets precomputed patch embeddings.
+  """
+  spec = SHAPES[shape]
+  b = batch_override or spec.global_batch
+  s = seq_override or spec.seq_len
+  f32 = jnp.float32
+  i32 = jnp.int32
+  d = cfg.d_model
+
+  out: Dict[str, jax.ShapeDtypeStruct] = {}
+  if spec.mode == "train":
+    out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+  elif spec.mode == "prefill":
+    out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+  else:  # decode: one new token against an s-deep cache
+    out["tokens"] = jax.ShapeDtypeStruct((b,), i32)
+
+  if cfg.family == "encdec":
+    # conv frontend stub: precomputed log-mel frame embeddings
+    enc_len = min(cfg.encoder_seq, s)
+    out["enc_frames"] = jax.ShapeDtypeStruct((b, enc_len, d), f32)
+    if spec.mode == "train":
+      # decoder consumes seq/4 tokens (audio>text token ratio)
+      dec = max(s // 4, 8)
+      out["tokens"] = jax.ShapeDtypeStruct((b, dec), i32)
+      out["labels"] = jax.ShapeDtypeStruct((b, dec), i32)
+    elif spec.mode == "prefill":
+      out["tokens"] = jax.ShapeDtypeStruct((b, max(s // 4, 8)), i32)
+  if cfg.family == "vlm" and spec.mode != "decode":
+    # ViT frontend stub: precomputed patch embeddings
+    out["img_embeds"] = jax.ShapeDtypeStruct((b, cfg.n_image_tokens, d), f32)
+  return out
+
+
+def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
+  """Tiny same-family config for CPU smoke tests (one fwd/train step)."""
+  period = len(cfg.layer_kinds())
+  base = dict(
+      n_layers=2 * period,
+      d_model=64,
+      n_heads=4 if cfg.n_heads else 0,
+      n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_heads else 0,
+      head_dim=16,
+      d_ff=128,
+      vocab_size=512,
+      attn_chunk=64,
+      loss_chunk_tokens=256,
+      moe_group_size=64,
+      ssm_chunk=16,
+      dtype="float32",
+  )
+  if cfg.family == "ssm":
+    base.update(n_heads=4, head_dim=16)  # wkv heads
+  if cfg.n_experts:
+    base.update(n_experts=4, n_experts_active=min(cfg.n_experts_active, 2),
+                d_ff_expert=128,
+                d_ff_shared=128 if cfg.n_shared_experts else 0)
+  if cfg.family == "encdec":
+    base.update(n_encoder_layers=2, encoder_seq=32)
+  if cfg.family == "vlm":
+    base.update(n_image_tokens=8)
+  if cfg.sliding_window:
+    base.update(sliding_window=32)
+  base.update(overrides)
+  return dataclasses.replace(cfg, **base)

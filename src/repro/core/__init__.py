@@ -1,0 +1,20 @@
+"""QUIDAM core: the paper's contribution.
+
+Quantization-aware DNN accelerator + model co-exploration:
+  quant      power-of-two (LightNN) and integer quantizers, QAT STE
+  pe         processing-element types (FP32/INT16/INT8/INT4/LightPE-1/2)
+  dataflow   row-stationary spatial-array dataflow model
+  oracle     synthesis stand-in (Synopsys DC + VCS @ FreePDK45)
+  ppa        polynomial PPA regression models + k-fold CV degree selection
+  dse        design-space exploration, Pareto fronts, normalization
+  workloads  VGG/ResNet workloads + transformer-as-workload bridge
+  supernet   weight-sharing VGG supernet accuracy proxy (Table 4 space)
+  coexplore  joint HW x NN co-exploration (Fig. 12)
+"""
+from repro.core.dataflow import AcceleratorConfig, ConvLayer
+from repro.core.pe import PAPER_PE_TYPES, PE_TYPES, pe_type
+
+__all__ = [
+    "AcceleratorConfig", "ConvLayer", "PAPER_PE_TYPES", "PE_TYPES",
+    "pe_type",
+]

@@ -1,0 +1,233 @@
+"""CNN substrate for the paper's accuracy experiments (pure JAX).
+
+Conv-BN-ReLU stacks (VGG plans, channel/repeat-sliceable for the weight-
+sharing supernet) and CIFAR-style basic-block ResNets, trained with the
+paper's SGD recipe on the procedural `cifar_like` dataset, under any
+QUIDAM PE-type fake-quant policy (FP32 / INT16 / LightPE-1 / LightPE-2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as quant_lib
+
+Params = Any
+
+
+def conv_init(key, k: int, c_in: int, c_out: int) -> jax.Array:
+  fan_in = k * k * c_in
+  return jax.random.normal(key, (k, k, c_in, c_out), jnp.float32) \
+      * (2.0 / fan_in) ** 0.5
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+  return jax.lax.conv_general_dilated(
+      x, w, (stride, stride), padding,
+      dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batch_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+  mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+  var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+  return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def maxpool(x: jax.Array) -> jax.Array:
+  return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                               (1, 2, 2, 1), "VALID")
+
+
+def _maybe_fq(w: jax.Array, pe_type: str) -> jax.Array:
+  if pe_type == "FP32":
+    return w
+  # per-output-channel (last axis) weight fake quant
+  return quant_lib.fake_quant_for_pe(w, pe_type, channel_axis=-1)
+
+
+def _maybe_fq_act(x: jax.Array, pe_type: str) -> jax.Array:
+  if pe_type == "FP32":
+    return x
+  return quant_lib.act_fake_quant_for_pe(x, pe_type)
+
+
+# ---------------------------------------------------------------------------
+# VGG (plan-parameterized; supernet-sliceable)
+# ---------------------------------------------------------------------------
+
+# Table 4 search space: (repeat choices, channel choices) per stage.
+SEARCH_SPACE: Tuple[Tuple[Tuple[int, ...], Tuple[int, ...]], ...] = (
+    ((1, 2), (40, 48, 56, 64)),
+    ((1, 2), (80, 96, 112, 128)),
+    ((1, 2, 3), (160, 192, 224, 256)),
+    ((1, 2, 3), (320, 384, 448, 512)),
+    ((1, 2, 3), (320, 384, 448, 512)),
+)
+
+MAX_PLAN = tuple((max(reps), max(chs)) for reps, chs in SEARCH_SPACE)
+SPACE_SIZE = 1
+for _reps, _chs in SEARCH_SPACE:
+  SPACE_SIZE *= (len(_reps) * len(_chs)) ** 1  # per stage: reps x channels
+SPACE_SIZE = 1
+for _reps, _chs in SEARCH_SPACE:
+  SPACE_SIZE *= len(_reps) * len(_chs)         # = 110,592
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchChoice:
+  """One point of the Table-4 space: per-stage (repeats, channels)."""
+  stages: Tuple[Tuple[int, int], ...]
+
+  def as_plan(self) -> List[Tuple[int, int]]:
+    return [(c, r) for (r, c) in self.stages]
+
+
+def sample_arch(key) -> ArchChoice:
+  ks = jax.random.split(key, len(SEARCH_SPACE))
+  stages = []
+  for (reps, chs), k in zip(SEARCH_SPACE, ks):
+    kr, kc = jax.random.split(k)
+    r = reps[int(jax.random.randint(kr, (), 0, len(reps)))]
+    c = chs[int(jax.random.randint(kc, (), 0, len(chs)))]
+    stages.append((r, c))
+  return ArchChoice(tuple(stages))
+
+
+def max_arch() -> ArchChoice:
+  return ArchChoice(MAX_PLAN)
+
+
+def init_vgg_supernet(key, n_classes: int = 10, in_ch: int = 3) -> Params:
+  """Weights for the LARGEST config; subnets slice channels/repeats."""
+  params: Dict[str, Any] = {"stages": []}
+  c_prev = in_ch
+  for si, (reps, c_out) in enumerate(MAX_PLAN):
+    stage = []
+    for r in range(reps):
+      key, k1 = jax.random.split(key)
+      stage.append({
+          "w": conv_init(k1, 3, c_prev, c_out),
+          "scale": jnp.ones((c_out,), jnp.float32),
+          "bias": jnp.zeros((c_out,), jnp.float32),
+      })
+      c_prev = c_out
+    params["stages"].append(stage)
+  key, k1 = jax.random.split(key)
+  params["head"] = jax.random.normal(
+      k1, (MAX_PLAN[-1][1], n_classes), jnp.float32) * 0.01
+  return params
+
+
+def arch_masks(arch: ArchChoice):
+  """Dynamic (r_use, c_use) arrays so ONE compiled graph serves the whole
+  110,592-point space (channel masking is mathematically identical to
+  channel slicing: masked inputs contribute zero to every conv)."""
+  r = jnp.asarray([r for (r, _) in arch.stages], jnp.int32)
+  c = jnp.asarray([c for (_, c) in arch.stages], jnp.int32)
+  return r, c
+
+
+def apply_vgg(params: Params, images: jax.Array,
+              arch: Optional[ArchChoice] = None,
+              pe_type: str = "FP32",
+              r_use: Optional[jax.Array] = None,
+              c_use: Optional[jax.Array] = None) -> jax.Array:
+  """images (B, H, W, 3) -> logits; masks the supernet per `arch`."""
+  if arch is not None:
+    r_use, c_use = arch_masks(arch)
+  x = images
+  for si, stage in enumerate(params["stages"]):
+    c_max = stage[0]["w"].shape[-1]
+    cmask = (jnp.arange(c_max) < c_use[si]).astype(x.dtype)
+    for r, blk in enumerate(stage):
+      y = conv2d(_maybe_fq_act(x, pe_type), _maybe_fq(blk["w"], pe_type))
+      y = batch_norm(y, blk["scale"], blk["bias"])
+      y = jax.nn.relu(y) * cmask[None, None, None, :]
+      if r == 0:
+        x = y  # first conv changes the channel count: always applied
+      else:
+        keep = (r < r_use[si]).astype(x.dtype)
+        x = keep * y + (1.0 - keep) * x
+    if x.shape[1] > 1:
+      x = maxpool(x)
+  x = jnp.mean(x, axis=(1, 2))                     # global average pool
+  return jnp.einsum("bc,cn->bn", x, _maybe_fq(params["head"], pe_type))
+
+
+# ---------------------------------------------------------------------------
+# CIFAR ResNets (reduced-width variants for the QAT accuracy studies)
+# ---------------------------------------------------------------------------
+
+def init_resnet(key, depth: int, n_classes: int = 10, width: int = 16,
+                in_ch: int = 3) -> Params:
+  assert (depth - 2) % 6 == 0
+  n = (depth - 2) // 6
+  params: Dict[str, Any] = {}
+  key, k = jax.random.split(key)
+  params["stem"] = {"w": conv_init(k, 3, in_ch, width),
+                    "scale": jnp.ones((width,)), "bias": jnp.zeros((width,))}
+  blocks = []
+  c_prev = width
+  for stage, mult in enumerate((1, 2, 4)):
+    c = width * mult
+    for b in range(n):
+      key, k1, k2, k3 = jax.random.split(key, 4)
+      blk = {
+          "w1": conv_init(k1, 3, c_prev, c),
+          "s1": jnp.ones((c,)), "b1": jnp.zeros((c,)),
+          "w2": conv_init(k2, 3, c, c),
+          "s2": jnp.ones((c,)), "b2": jnp.zeros((c,)),
+      }
+      if c_prev != c:
+        blk["proj"] = conv_init(k3, 1, c_prev, c)
+      blocks.append(blk)
+      c_prev = c
+    params[f"stage{stage}"] = None  # layout marker
+  params["blocks"] = blocks
+  key, k = jax.random.split(key)
+  params["head"] = jax.random.normal(k, (c_prev, n_classes)) * 0.01
+  return params
+
+
+def apply_resnet(params: Params, images: jax.Array, depth: int,
+                 pe_type: str = "FP32") -> jax.Array:
+  n = (depth - 2) // 6
+  x = conv2d(images, _maybe_fq(params["stem"]["w"], pe_type))
+  x = jax.nn.relu(batch_norm(x, params["stem"]["scale"],
+                             params["stem"]["bias"]))
+  bi = 0
+  for stage in range(3):
+    for b in range(n):
+      blk = params["blocks"][bi]
+      bi += 1
+      stride = 2 if (stage > 0 and b == 0) else 1
+      h = conv2d(_maybe_fq_act(x, pe_type), _maybe_fq(blk["w1"], pe_type),
+                 stride=stride)
+      h = jax.nn.relu(batch_norm(h, blk["s1"], blk["b1"]))
+      h = conv2d(_maybe_fq_act(h, pe_type), _maybe_fq(blk["w2"], pe_type))
+      h = batch_norm(h, blk["s2"], blk["b2"])
+      if "proj" in blk:
+        x = conv2d(x, _maybe_fq(blk["proj"], pe_type), stride=stride)
+      x = jax.nn.relu(x + h)
+  x = jnp.mean(x, axis=(1, 2))
+  return jnp.einsum("bc,cn->bn", x, _maybe_fq(params["head"], pe_type))
+
+
+# ---------------------------------------------------------------------------
+# loss/accuracy helpers
+# ---------------------------------------------------------------------------
+
+def xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+  logz = jax.nn.logsumexp(logits, axis=-1)
+  gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+  return jnp.mean(logz - gold)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+  return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,85 @@
+"""DNN accelerator + model co-exploration (paper Sec. 4.5, Fig. 12).
+
+Pairs randomly sampled hardware configurations with supernet-evaluated
+candidate architectures: each (HW, NN) pair gets accuracy (weight-sharing
+proxy), energy (power x latency from the PPA models) and area; pairs are
+normalized against the minimum-energy / minimum-area INT16 pair and the
+joint Pareto front is extracted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dse, ppa as ppa_lib
+from repro.core.cnn import ArchChoice
+from repro.core.dataflow import AcceleratorConfig
+from repro.core.pe import PAPER_PE_TYPES
+from repro.core.supernet import Supernet, arch_to_layers
+
+
+@dataclasses.dataclass
+class CoPoint:
+  """One (hardware, architecture) pair in the joint space."""
+  cfg: AcceleratorConfig
+  arch: ArchChoice
+  top1: float
+  latency_s: float
+  power_mw: float
+  area_mm2: float
+
+  @property
+  def energy_mj(self) -> float:
+    return self.power_mw * self.latency_s
+
+  @property
+  def top1_err(self) -> float:
+    return 1.0 - self.top1
+
+
+def co_explore(models: Dict[str, ppa_lib.PPAModels],
+               arch_accs: Sequence[Tuple[ArchChoice, float]],
+               n_hw_per_type: int = 20, seed: int = 3,
+               image_size: int = 32,
+               pe_types: Sequence[str] = PAPER_PE_TYPES) -> List[CoPoint]:
+  """Random HW samples x supernet-evaluated archs -> joint design points."""
+  points: List[CoPoint] = []
+  for ti, pe_type in enumerate(pe_types):
+    cfgs = ppa_lib.sample_configs(pe_type, n_hw_per_type,
+                                  seed=seed + 17 * ti)
+    m = models[pe_type]
+    for arch, acc in arch_accs:
+      layers = arch_to_layers(arch, image_size=image_size)
+      lat = float(np.maximum(
+          m.predict_network_latency_s(cfgs, layers), 1e-9).mean())
+      # evaluate each cfg separately for the scatter
+      lats = np.maximum(m.predict_network_latency_s(cfgs, layers), 1e-9)
+      pwrs = np.maximum(m.predict_power_mw(cfgs), 1e-3)
+      areas = np.maximum(m.predict_area_mm2(cfgs), 1e-6)
+      from repro.core import oracle
+      pwrs = pwrs + np.asarray([oracle.gbuf_power_mw(c) for c in cfgs])
+      areas = areas + np.asarray([oracle.gbuf_area_mm2(c) for c in cfgs])
+      for c, l, p, a in zip(cfgs, lats, pwrs, areas):
+        points.append(CoPoint(c, arch, acc, float(l), float(p), float(a)))
+  return points
+
+
+def normalize_and_front(points: Sequence[CoPoint]
+                        ) -> Dict[str, np.ndarray]:
+  """Fig. 12 processing: normalize energy/area to the min-energy/min-area
+  INT16 pair; Pareto front on (top1_err, energy) and (top1_err, area)."""
+  int16 = [p for p in points if p.cfg.pe_type == "INT16"]
+  if not int16:
+    raise ValueError("need INT16 pairs for normalization")
+  e_ref = min(p.energy_mj for p in int16)
+  a_ref = min(p.area_mm2 for p in int16)
+  err = np.asarray([p.top1_err for p in points])
+  energy = np.asarray([p.energy_mj for p in points]) / e_ref
+  area = np.asarray([p.area_mm2 for p in points]) / a_ref
+  types = np.asarray([p.cfg.pe_type for p in points])
+  front_e = dse.pareto_front(np.stack([err, energy], axis=1))
+  front_a = dse.pareto_front(np.stack([err, area], axis=1))
+  return {"err": err, "energy": energy, "area": area, "types": types,
+          "front_energy": front_e, "front_area": front_a}

@@ -1,0 +1,242 @@
+"""Synthesis oracle: the stand-in for Synopsys DC + VCS @ FreePDK45.
+
+The paper characterizes every design point with commercial synthesis
+(power/area/clock) plus RTL simulation (latency).  Neither tool can run in
+this environment, so this module provides an *analytical gate/SRAM-level
+model* with documented 45 nm constants (see :mod:`repro.core.pe`), plus a
+deterministic, config-hashed "layout variation" term so the downstream
+polynomial regression faces realistically noisy targets.
+
+Calibration anchors (paper, Table 3 + Figs 6/8 orderings):
+  clock:  FP32 275 MHz | INT16 285 MHz | LightPE-2 435 MHz | LightPE-1 455 MHz
+  area/power: FP32 > INT16 >> LightPE-2 > LightPE-1 per PE.
+
+Everything is per *design point* (AcceleratorConfig); latency additionally
+takes workload layers and delegates to the RS dataflow model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import pe as pe_lib
+from repro.core.dataflow import (AcceleratorConfig, ConvLayer, LayerStats,
+                                 simulate_network)
+
+# FIFO depth per the Eyeriss-style template (4 FIFOs per PE, Fig. 3).
+FIFO_DEPTH = 4
+FLOP_BIT_UM2 = 2.0          # latch-based FIFO storage cell
+NOC_GATES_PER_PE = 300      # X-bus router slice + links at 21-bit mean width
+PSUM_AMORTIZE = 3.0         # psum spad is touched once per K MACs (a local
+                            # accumulator register holds the running sum;
+                            # K=3 kernels dominate the workloads)
+ARRAY_CTRL_GATES = 12_000   # top-level controller, address generators
+
+
+def _variation(cfg: AcceleratorConfig, salt: str, pct: float) -> float:
+  """Deterministic pseudo-random multiplier in [1-pct, 1+pct]."""
+  key = f"{salt}|{cfg.pe_type}|{cfg.pe_rows}x{cfg.pe_cols}|" \
+        f"{cfg.sp_if},{cfg.sp_fw},{cfg.sp_ps}|{cfg.gbuf_kb}|{cfg.bandwidth_gbps}"
+  h = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "little")
+  u = (h / 2**64) * 2.0 - 1.0
+  return 1.0 + pct * u
+
+
+def _sram_area_um2(bits: float, words: float = 64.0) -> float:
+  """CACTI-flavoured small-SRAM area: cells + sqrt-periphery + decoder
+  steps (ceil(log2 words) levels) + fixed."""
+  if bits <= 0:
+    return 0.0
+  decoder = 6.0 * pe_lib.decoder_levels(words) * math.sqrt(max(bits, 1.0)) \
+      / 8.0
+  return bits * pe_lib.SRAM_BIT_UM2 + 3.0 * math.sqrt(bits) + decoder + 15.0
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+
+def clock_mhz(cfg: AcceleratorConfig) -> float:
+  """Post-synthesis clock estimate.
+
+  period = arithmetic critical path + control/wire term that grows with the
+  array size and scratchpad address depth.  Calibrated so the nominal
+  16x16 / (12,224,24) / 128 KiB design reproduces the paper's Table 3.
+  """
+  pe = cfg.pe
+  ctrl_ns = 0.028 * math.log2(max(cfg.n_pe, 2)) \
+      + 0.006 * math.log2(max(cfg.sp_fw + cfg.sp_if + cfg.sp_ps, 2))
+  period_ns = pe.critical_path_ns + ctrl_ns
+  period_ns *= _variation(cfg, "clk", 0.004)
+  return 1000.0 / period_ns
+
+
+# ---------------------------------------------------------------------------
+# area
+# ---------------------------------------------------------------------------
+
+def pe_area_um2(cfg: AcceleratorConfig) -> float:
+  """One PE: arithmetic + 3 scratchpads + 4 FIFOs + local control."""
+  pe = cfg.pe
+  arith = pe.arith_gates * pe_lib.GATE_AREA_UM2
+  spad = (_sram_area_um2(cfg.sp_if * pe.act_bits, cfg.sp_if)
+          + _sram_area_um2(cfg.sp_fw * pe.weight_bits, cfg.sp_fw)
+          + _sram_area_um2(cfg.sp_ps * pe.psum_bits, cfg.sp_ps))
+  fifo_bits = FIFO_DEPTH * (2 * pe.act_bits + pe.weight_bits + pe.psum_bits)
+  fifo = fifo_bits * FLOP_BIT_UM2
+  ctrl = 0.04 * (arith + spad) + 220 * pe_lib.GATE_AREA_UM2
+  return arith + spad + fifo + ctrl
+
+
+def array_area_mm2(cfg: AcceleratorConfig) -> float:
+  """PE-array subsystem (array + NoC + control, EXCLUDING global buffer).
+
+  This is the polynomial area model's target: the paper's 4-feature vector
+  (SP_if, SP_ps, SP_fw, #PE) cannot see GBS, so the global buffer is
+  composed separately as a pre-characterized SRAM macro (datasheet-style),
+  see :func:`gbuf_area_mm2`.
+  """
+  pe = cfg.pe
+  pe_area = pe_area_um2(cfg) * cfg.n_pe
+  word = (pe.act_bits + pe.weight_bits + pe.psum_bits) / 3.0
+  noc = NOC_GATES_PER_PE * (word / 21.0) * cfg.n_pe * pe_lib.GATE_AREA_UM2
+  top = ARRAY_CTRL_GATES * pe_lib.GATE_AREA_UM2
+  # routing congestion: utilization degrades as the array grows, the placer
+  # needs slack area ~ 1/(1 - congestion) — a rational factor polynomials
+  # only approximate gradually (this is what pushes the CV-optimal degree up)
+  congestion = 0.30 * (cfg.n_pe / 1024.0) ** 0.7
+  route = 1.0 / (1.0 - min(congestion, 0.45))
+  um2 = (pe_area + noc + top) * route * _variation(cfg, "area", 0.005)
+  return um2 * 1e-6
+
+
+def gbuf_area_mm2(cfg: AcceleratorConfig) -> float:
+  """Global-buffer SRAM macro area (closed form, banking overhead incl.)."""
+  return _sram_area_um2(cfg.gbuf_kb * 1024 * 8, cfg.gbuf_kb * 512) \
+      * 1.15 * 1e-6
+
+
+def area_mm2(cfg: AcceleratorConfig) -> float:
+  """Full accelerator: PE array subsystem + global buffer macro."""
+  return array_area_mm2(cfg) + gbuf_area_mm2(cfg)
+
+
+# ---------------------------------------------------------------------------
+# power
+# ---------------------------------------------------------------------------
+
+def leakage_mw(cfg: AcceleratorConfig) -> float:
+  """Array static power ~ gate-area equivalent (gbuf leakage lives in
+  :func:`gbuf_power_mw`)."""
+  pe = cfg.pe
+  word = (pe.act_bits + pe.weight_bits + pe.psum_bits) / 3.0
+  logic_um2 = (pe.arith_gates + NOC_GATES_PER_PE * word / 21.0) \
+      * pe_lib.GATE_AREA_UM2 * cfg.n_pe \
+      + ARRAY_CTRL_GATES * pe_lib.GATE_AREA_UM2
+  sram_bits = cfg.n_pe * (cfg.sp_if * pe.act_bits + cfg.sp_fw * pe.weight_bits
+                          + cfg.sp_ps * pe.psum_bits)
+  leak = (logic_um2 / pe_lib.GATE_AREA_UM2) * pe_lib.GATE_LEAKAGE_UW \
+      + sram_bits * 0.00035
+  return leak * 1e-3  # uW -> mW
+
+
+def array_power_mw(cfg: AcceleratorConfig) -> float:
+  """PE-array characterization power (DC default activity), EXCL. gbuf.
+
+  Activity model: every cycle each PE performs one MAC, reads act+weight
+  from its scratchpads and read-modify-writes one psum.  Per-bit scratchpad
+  access energy grows with scratchpad depth (bitline capacitance ~ sqrt of
+  cell count) — genuinely nonlinear in the DSE axes.
+  """
+  pe = cfg.pe
+  f_hz = clock_mhz(cfg) * 1e6
+  e = pe_lib.ENERGY_PJ
+  spad_pj = e["spad_access_per_bit"] * (
+      pe.act_bits * pe_lib.sram_access_scale(cfg.sp_if)
+      + pe.weight_bits * pe_lib.sram_access_scale(cfg.sp_fw)
+      + (2.0 / PSUM_AMORTIZE) * pe.psum_bits
+      * pe_lib.sram_access_scale(cfg.sp_ps))
+  per_pe_pj = (pe.mac_energy_pj + spad_pj
+               + FIFO_DEPTH * 0.25 * e["fifo_access_per_bit"])
+  activity = 0.62  # DC default toggling assumption
+  dyn_pe_mw = cfg.n_pe * per_pe_pj * activity * f_hz * 1e-9
+  gbuf_word_bits = (pe.act_bits + pe.weight_bits + pe.psum_bits) / 3.0
+  noc_mw = cfg.n_pe * 0.004 * (f_hz * 1e-9) * gbuf_word_bits
+  dyn = dyn_pe_mw + noc_mw
+  # self-heating feedback: leakage rises with power density (saturating
+  # rational in the features -> hard for low-degree polynomials)
+  density = dyn / max(array_area_mm2(cfg), 1e-6)  # mW / mm^2
+  leak = leakage_mw(cfg) * (1.0 + 0.9 * density / (density + 40.0))
+  return dyn * _variation(cfg, "pwr", 0.005) + leak
+
+
+def gbuf_power_mw(cfg: AcceleratorConfig) -> float:
+  """Global-buffer macro power: ports scale with the array edge
+  (~sqrt(#PE)); per-bit energy scales with capacity; plus SRAM leakage."""
+  pe = cfg.pe
+  f_hz = clock_mhz(cfg) * 1e6
+  e = pe_lib.ENERGY_PJ
+  gbuf_word_bits = (pe.act_bits + pe.weight_bits + pe.psum_bits) / 3.0
+  gbuf_pj_bit = e["gbuf_access_per_bit"] * pe_lib.sram_access_scale(
+      cfg.gbuf_kb * 16.0)
+  dyn = math.sqrt(cfg.n_pe) * gbuf_word_bits * gbuf_pj_bit * 0.62 \
+      * f_hz * 1e-9
+  leak = cfg.gbuf_kb * 8192 * 0.00035 * 1e-3
+  return dyn + leak
+
+
+def power_mw(cfg: AcceleratorConfig) -> float:
+  """Full accelerator characterization power."""
+  return array_power_mw(cfg) + gbuf_power_mw(cfg)
+
+
+# ---------------------------------------------------------------------------
+# full characterization (the expensive call QUIDAM's models replace)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Characterization:
+  """Everything the paper extracts from DC + VCS for one design point."""
+  clock_mhz: float
+  area_mm2: float
+  power_mw: float
+  latency_s: float
+  energy_mj: float
+  per_layer_cycles: List[float]
+  per_layer_energy_mj: List[float]
+  utilization: float
+
+
+def characterize(cfg: AcceleratorConfig,
+                 layers: Sequence[ConvLayer]) -> Characterization:
+  """Synthesize + simulate one (hardware, network) pair.
+
+  This is the slow path (a Python-level per-layer dataflow walk standing in
+  for hours of synthesis + RTL simulation); QUIDAM's polynomial models are
+  trained on its outputs and replace it during DSE.
+  """
+  clk = clock_mhz(cfg)
+  leak = leakage_mw(cfg)
+  latency_s, energy_mj, stats = simulate_network(cfg, layers, clk, leak)
+  per_cyc = [s.cycles for s in stats]
+  from repro.core.dataflow import layer_energy_pj  # local to avoid cycle
+  per_e = [layer_energy_pj(cfg, l, s, clk, leak) * 1e-9
+           for l, s in zip(layers, stats)]
+  util = (sum(s.utilization * s.cycles for s in stats)
+          / max(sum(per_cyc), 1e-12))
+  return Characterization(
+      clock_mhz=clk, area_mm2=area_mm2(cfg), power_mw=power_mw(cfg),
+      latency_s=latency_s, energy_mj=energy_mj,
+      per_layer_cycles=per_cyc, per_layer_energy_mj=per_e,
+      utilization=util)
+
+
+def characterize_layer_latency(cfg: AcceleratorConfig, layer: ConvLayer
+                               ) -> float:
+  """Ground-truth single-layer latency in seconds (latency-model target)."""
+  from repro.core.dataflow import simulate_layer
+  clk = clock_mhz(cfg)
+  st = simulate_layer(cfg, layer, clk)
+  return st.cycles / (clk * 1e6)

@@ -1,0 +1,270 @@
+"""Quantization schemes used by QUIDAM processing elements.
+
+Implements the paper's Eq. (1) family: LightNN-style *sum of powers of two*
+weight quantization (Ding et al., GLSVLSI'17 / TRETS'18), plus conventional
+symmetric integer quantization (INT4/8/16) and FP32 passthrough.
+
+All quantizers share the same contract:
+
+    q = quantize(w)          # codes (+ scale), pytree of arrays
+    w_hat = dequantize(q)    # exact float reconstruction of the code
+    w_fake = fake_quant(w)   # dequantize(quantize(w)) with a straight-
+                             # through estimator, for QAT
+
+Power-of-two codes
+------------------
+LightPE-1 stores ``w = s * (+/- 2^-m)``, m in [0, 7]  -> 4-bit code
+  (1 sign bit + 3 exponent bits), plus a per-channel fp scale ``s``.
+LightPE-2 stores ``w = s * (+/- (2^-m1 + 2^-m2))``    -> 7-bit code in 8 bits
+  (1 sign + 3 + 3), m1 <= m2.
+
+Because 2^-m and 2^-m1 + 2^-m2 are exactly representable in bf16/fp32, the
+TPU-side "shift-add" is realized by decoding codes to exact floats and using
+the MXU; no precision is lost relative to an ASIC shifter implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Exponent range of the paper: m in {0, 1, ..., 7}.
+POW2_M_MAX = 7
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _channel_absmax(w: jax.Array, axis: Optional[int]) -> jax.Array:
+  """Per-channel (or per-tensor when axis is None) absmax scale, >= tiny."""
+  if axis is None:
+    s = jnp.max(jnp.abs(w))
+  else:
+    red = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    s = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+  return jnp.maximum(s, jnp.finfo(jnp.float32).tiny)
+
+
+def _ste(real: jax.Array, quant: jax.Array) -> jax.Array:
+  """Straight-through estimator: forward=quant, backward=identity."""
+  return real + jax.lax.stop_gradient(quant - real)
+
+
+# ---------------------------------------------------------------------------
+# sum-of-powers-of-two (LightPE) codes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Pow2Quantized:
+  """Packed power-of-two code.
+
+  codes: uint8 array, same shape as w.
+    k=1: bit3 = sign, bits2..0 = m           (valid range 0..15)
+    k=2: bit6 = sign, bits5..3 = m1, 2..0 = m2 (m1 <= m2)
+  scale: broadcastable float32 scale (per channel or scalar).
+  k: number of power-of-two terms (1 or 2).
+  """
+  codes: jax.Array
+  scale: jax.Array
+  k: int
+
+  def tree_flatten(self):
+    return (self.codes, self.scale), self.k
+
+  @classmethod
+  def tree_unflatten(cls, k, leaves):
+    return cls(leaves[0], leaves[1], k)
+
+
+jax.tree_util.register_pytree_node(
+    Pow2Quantized, Pow2Quantized.tree_flatten, Pow2Quantized.tree_unflatten)
+
+
+def pow2_codebook(k: int) -> jnp.ndarray:
+  """All positive codebook values for k terms, and their (m1, m2) codes.
+
+  k=1: 8 values 2^-m.  k=2: 36 values 2^-m1 + 2^-m2 with m1 <= m2 (duplicate
+  exponents encode single powers exactly: 2^-(m+1) + 2^-(m+1) == 2^-m).
+  Returns (values[f32], code_low_bits[uint8]) sorted by value.
+  """
+  import numpy as _np
+  if k == 1:
+    ms = _np.arange(POW2_M_MAX + 1)
+    return (jnp.asarray(2.0 ** (-ms), jnp.float32),
+            jnp.asarray(ms, jnp.uint8))
+  m1, m2 = _np.meshgrid(_np.arange(POW2_M_MAX + 1),
+                        _np.arange(POW2_M_MAX + 1), indexing="ij")
+  keep = (m1 <= m2).reshape(-1)
+  m1 = m1.reshape(-1)[keep]
+  m2 = m2.reshape(-1)[keep]
+  vals = 2.0 ** (-m1.astype(_np.float64)) + 2.0 ** (-m2.astype(_np.float64))
+  return (jnp.asarray(vals, jnp.float32),
+          jnp.asarray(m1 * 8 + m2, jnp.uint8))
+
+
+def pow2_quantize(w: jax.Array, k: int = 1, channel_axis: Optional[int] = 0,
+                  scale: Optional[jax.Array] = None) -> Pow2Quantized:
+  """Quantize weights to s * (+/- sum_{i<k} 2^-m_i), exact codebook argmin."""
+  assert k in (1, 2), "paper defines LightPE-1 (k=1) and LightPE-2 (k=2)"
+  w = w.astype(jnp.float32)
+  if scale is None:
+    scale = _channel_absmax(w, channel_axis)
+  a = w / scale
+  sign_neg = a < 0
+  mag = jnp.abs(a)
+  vals, low_codes = pow2_codebook(k)
+  # argmin over the (8 or 36)-entry codebook, vectorized on a trailing axis.
+  err = jnp.abs(mag[..., None] - vals)
+  best = jnp.argmin(err, axis=-1)
+  low = low_codes[best]
+  sign_bit = 8 if k == 1 else 64
+  codes = (jnp.where(sign_neg, sign_bit, 0) + low).astype(jnp.uint8)
+  return Pow2Quantized(codes, scale, k)
+
+
+def pow2_decode_codes(codes: jax.Array, k: int) -> jax.Array:
+  """Decode uint8 codes to exact float32 in [-2, 2] (pre-scale values)."""
+  c = codes.astype(jnp.int32)
+  if k == 1:
+    sign = jnp.where((c & 8) != 0, -1.0, 1.0)
+    m = (c & 7).astype(jnp.float32)
+    return sign * 2.0 ** (-m)
+  sign = jnp.where((c & 64) != 0, -1.0, 1.0)
+  m1 = ((c >> 3) & 7).astype(jnp.float32)
+  m2 = (c & 7).astype(jnp.float32)
+  return sign * (2.0 ** (-m1) + 2.0 ** (-m2))
+
+
+def pow2_dequantize(q: Pow2Quantized) -> jax.Array:
+  return pow2_decode_codes(q.codes, q.k) * q.scale
+
+
+def pow2_fake_quant(w: jax.Array, k: int = 1,
+                    channel_axis: Optional[int] = 0) -> jax.Array:
+  """QAT forward: dequant(quant(w)) with straight-through gradients."""
+  q = pow2_quantize(jax.lax.stop_gradient(w), k=k, channel_axis=channel_axis)
+  return _ste(w, pow2_dequantize(q).astype(w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# symmetric integer codes (INT4 / INT8 / INT16)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IntQuantized:
+  codes: jax.Array      # int8 or int16 (int4 stored unpacked in int8)
+  scale: jax.Array      # float32, broadcastable
+  bits: int
+
+  def tree_flatten(self):
+    return (self.codes, self.scale), self.bits
+
+  @classmethod
+  def tree_unflatten(cls, bits, leaves):
+    return cls(leaves[0], leaves[1], bits)
+
+
+jax.tree_util.register_pytree_node(
+    IntQuantized, IntQuantized.tree_flatten, IntQuantized.tree_unflatten)
+
+
+def int_quantize(w: jax.Array, bits: int = 8,
+                 channel_axis: Optional[int] = 0,
+                 scale: Optional[jax.Array] = None) -> IntQuantized:
+  assert bits in (4, 8, 16)
+  w = w.astype(jnp.float32)
+  qmax = 2 ** (bits - 1) - 1
+  if scale is None:
+    scale = _channel_absmax(w, channel_axis) / qmax
+  codes = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+  dtype = jnp.int8 if bits <= 8 else jnp.int16
+  return IntQuantized(codes.astype(dtype), scale, bits)
+
+
+def int_dequantize(q: IntQuantized) -> jax.Array:
+  return q.codes.astype(jnp.float32) * q.scale
+
+
+def int_fake_quant(w: jax.Array, bits: int = 8,
+                   channel_axis: Optional[int] = 0) -> jax.Array:
+  q = int_quantize(jax.lax.stop_gradient(w), bits=bits,
+                   channel_axis=channel_axis)
+  return _ste(w, int_dequantize(q).astype(w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# activation quantization (8-bit for LightPEs per the paper)
+# ---------------------------------------------------------------------------
+
+def act_fake_quant(x: jax.Array, bits: int = 8) -> jax.Array:
+  """Dynamic per-tensor symmetric activation fake-quant (QAT)."""
+  qmax = 2 ** (bits - 1) - 1
+  s = jnp.maximum(jnp.max(jnp.abs(jax.lax.stop_gradient(x))),
+                  jnp.finfo(jnp.float32).tiny) / qmax
+  q = jnp.clip(jnp.round(x / s), -qmax - 1, qmax) * s
+  return _ste(x, q.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# packing (storage formats; kernels consume these)
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+  """Pack pairs of 4-bit codes (uint8 each, <16) along the last axis."""
+  assert codes.shape[-1] % 2 == 0
+  lo = codes[..., 0::2].astype(jnp.uint8)
+  hi = codes[..., 1::2].astype(jnp.uint8)
+  return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+  lo = packed & 0xF
+  hi = (packed >> 4) & 0xF
+  return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                              packed.shape[-1] * 2)
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+  """Pack int4 values (int8 in [-8, 7]) into uint8 pairs."""
+  u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+  return pack_nibbles(u)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+  u = unpack_nibbles(packed).astype(jnp.int32)
+  return jnp.where(u >= 8, u - 16, u).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# unified dispatch keyed by PE type name (see core.pe)
+# ---------------------------------------------------------------------------
+
+def fake_quant_for_pe(w: jax.Array, pe_type: str,
+                      channel_axis: Optional[int] = 0) -> jax.Array:
+  """Weight fake-quant matching a QUIDAM PE type's numerics."""
+  if pe_type == "FP32":
+    return w
+  if pe_type == "INT16":
+    return int_fake_quant(w, 16, channel_axis)
+  if pe_type == "INT8":
+    return int_fake_quant(w, 8, channel_axis)
+  if pe_type == "INT4":
+    return int_fake_quant(w, 4, channel_axis)
+  if pe_type == "LightPE-1":
+    return pow2_fake_quant(w, 1, channel_axis)
+  if pe_type == "LightPE-2":
+    return pow2_fake_quant(w, 2, channel_axis)
+  raise ValueError(f"unknown PE type {pe_type!r}")
+
+
+def act_fake_quant_for_pe(x: jax.Array, pe_type: str) -> jax.Array:
+  """Activation fake-quant matching a PE type (paper: 8b acts on LightPEs)."""
+  if pe_type == "FP32":
+    return x
+  if pe_type == "INT16":
+    return act_fake_quant(x, 16)
+  return act_fake_quant(x, 8)

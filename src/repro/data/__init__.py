@@ -1,0 +1,4 @@
+"""Data substrate: deterministic synthetic token + image pipelines."""
+from repro.data.synthetic import (CifarLike, CifarLikeConfig, DataCursor,
+                                  MarkovTokenStream, TokenStreamConfig,
+                                  token_batches)

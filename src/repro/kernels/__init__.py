@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for QUIDAM's quantization-aware compute paths.
+
+Each kernel lives in its own subpackage with:
+  kernel.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jitted public wrapper (padding, packing, dispatch)
+  ref.py     pure-jnp oracle used by the interpret-mode test sweeps
+"""

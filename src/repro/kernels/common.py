@@ -1,0 +1,38 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True`` against pure-jnp oracles
+(``ref.py`` next to each kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# MXU-aligned default tile sizes (multiples of 128 on the matmul dims).
+BM, BN, BK = 128, 128, 128
+
+
+@functools.cache
+def default_interpret() -> bool:
+  """Interpret Pallas kernels unless running on a real TPU."""
+  return jax.default_backend() != "tpu"
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int,
+           value: float = 0.0) -> Tuple[jax.Array, int]:
+  """Pad `axis` up to a multiple; returns (padded, original_size)."""
+  size = x.shape[axis]
+  target = -(-size // multiple) * multiple
+  if target == size:
+    return x, size
+  pads = [(0, 0)] * x.ndim
+  pads[axis] = (0, target - size)
+  return jnp.pad(x, pads, constant_values=value), size
+
+
+def cdiv(a: int, b: int) -> int:
+  return -(-a // b)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: causal / sliding-window flash attention (prefill).
+
+Online-softmax attention tiled (BQ x BK) with running (m, l, acc) in VMEM
+scratch; the kv-block axis is the minor (sequential) grid dim.  Blocks
+fully outside the causal / sliding-window band are skipped with pl.when
+(no MXU work), so causal attention does ~half the FLOPs and SWA touches
+only the diagonal band — the same schedule the pure-JAX training path
+uses, here as the TPU compute kernel for serving prefill.
+
+Layout: q/k/v (BH, S, D) with GQA pre-expanded by ops.py; grid
+(BH, S/BQ, S/BK).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k_steps: int, bq: int, bk: int, sm_scale: float,
+                  causal: bool, window: int, seq_len: int):
+  qi = pl.program_id(1)
+  ki = pl.program_id(2)
+
+  @pl.when(ki == 0)
+  def _init():
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+  # band check: is any (q, k) pair in this block pair live?
+  q_lo = qi * bq
+  k_lo = ki * bk
+  live = True
+  if causal:
+    live = jnp.asarray(k_lo <= q_lo + bq - 1)
+  if window:
+    live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+
+  @pl.when(live)
+  def _attend():
+    q = q_ref[0].astype(jnp.float32) * sm_scale      # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+    qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < seq_len
+    if causal:
+      mask = jnp.logical_and(mask, qpos >= kpos)
+    if window:
+      mask = jnp.logical_and(mask, kpos > qpos - window)
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+    p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+  @pl.when(ki == n_k_steps - 1)
+  def _finalize():
+    o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           sm_scale: float, causal: bool = True,
+                           window: int = 0, seq_len: int = None,
+                           interpret: bool = True,
+                           bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK) -> jax.Array:
+  """q/k/v (BH, S, D), S % bq == S % bk == 0 -> (BH, S, D) f32."""
+  bh, s, d = q.shape
+  assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+  if seq_len is None:
+    seq_len = s
+  kern = functools.partial(
+      _flash_kernel, n_k_steps=s // bk, bq=bq, bk=bk, sm_scale=sm_scale,
+      causal=causal, window=window, seq_len=seq_len)
+  return pl.pallas_call(
+      kern,
+      grid=(bh, s // bq, s // bk),
+      in_specs=[
+          pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+          pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+          pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+      ],
+      out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+      out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+      scratch_shapes=[
+          pltpu.VMEM((bq, 1), jnp.float32),
+          pltpu.VMEM((bq, 1), jnp.float32),
+          pltpu.VMEM((bq, d), jnp.float32),
+      ],
+      interpret=interpret,
+  )(q, k, v)

@@ -1,0 +1,64 @@
+"""Jitted public wrapper for the prefill flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import (DEFAULT_BK, DEFAULT_BQ,
+                                                  flash_attention_pallas)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret",
+                                    "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    interpret: Optional[bool] = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK) -> jax.Array:
+  """GQA attention (B, S, H, D) x (B, S, Hkv, D) -> (B, S, H, D) f32."""
+  if interpret is None:
+    interpret = common.default_interpret()
+  b, s, h, d = q.shape
+  hkv = k.shape[2]
+  g = h // hkv
+  if g > 1:
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+  sm_scale = 1.0 / (d ** 0.5)
+
+  def flat(x):  # (B, S, H, D) -> (B*H, S, D)
+    return jnp.moveaxis(x, 2, 1).reshape(b * h, s, d)
+
+  qf, kf, vf = flat(q), flat(k), flat(v)
+  blk = min(bq, bk)
+  qf, s0 = common.pad_to(qf, 1, blk)
+  kf, _ = common.pad_to(kf, 1, blk)
+  vf, _ = common.pad_to(vf, 1, blk)
+  bq2 = min(bq, qf.shape[1])
+  bk2 = min(bk, kf.shape[1])
+  out = flash_attention_pallas(qf, kf, vf, sm_scale, causal=causal,
+                               window=window, seq_len=s0,
+                               interpret=interpret, bq=bq2, bk=bk2)
+  out = out[:, :s0].reshape(b, h, s0, d)
+  return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention_reference(q, k, v, causal=True, window=0):
+  b, s, h, d = q.shape
+  hkv = k.shape[2]
+  g = h // hkv
+  if g > 1:
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+
+  def flat(x):
+    return jnp.moveaxis(x, 2, 1).reshape(b * h, s, d)
+
+  out = flash_attention_ref(flat(q), flat(k), flat(v), 1.0 / (d ** 0.5),
+                            causal=causal, window=window)
+  return jnp.moveaxis(out.reshape(b, h, s, d), 1, 2)

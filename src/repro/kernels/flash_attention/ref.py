@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the prefill flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        sm_scale: float, causal: bool = True,
+                        window: int = 0,
+                        seq_len: int = None) -> jax.Array:
+  """q/k/v (BH, S, D) -> (BH, S, D); dense masked softmax attention."""
+  bh, s, d = q.shape
+  if seq_len is None:
+    seq_len = s
+  scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32)) * sm_scale
+  qpos = jnp.arange(s)[:, None]
+  kpos = jnp.arange(s)[None, :]
+  mask = kpos < seq_len
+  if causal:
+    mask = mask & (qpos >= kpos)
+  if window:
+    mask = mask & (kpos > qpos - window)
+  scores = jnp.where(mask[None], scores, -1e30)
+  p = jax.nn.softmax(scores, axis=-1)
+  return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: W8A8 int8 matmul with int32 accumulation.
+
+QUIDAM's INT8/INT16 PE types map to TPU as quantized GEMMs: int8 weights
+AND int8 activations in HBM/VMEM, int32 accumulation (the MXU supports
+int8 x int8 -> int32 natively), dequantized in the epilogue with
+per-row activation scales x per-column weight scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import BK, BM, BN
+
+
+def _int8_matmul_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
+                        n_k_steps: int):
+  """Grid (M/BM, N/BN, K/BK); int32 accumulator scratch in VMEM."""
+  kstep = pl.program_id(2)
+
+  @pl.when(kstep == 0)
+  def _init():
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+  acc_ref[...] += jax.lax.dot_general(
+      x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+      preferred_element_type=jnp.int32)
+
+  @pl.when(kstep == n_k_steps - 1)
+  def _finalize():
+    xs = xs_ref[...].astype(jnp.float32)   # (bm, 1) per-row act scale
+    ws = ws_ref[...].astype(jnp.float32)   # (1, bn) per-col weight scale
+    o_ref[...] = acc_ref[...].astype(jnp.float32) * xs * ws
+
+
+def int8_matmul_pallas(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                       w_scale: jax.Array, interpret: bool = True,
+                       bm: int = BM, bn: int = BN, bk: int = BK) -> jax.Array:
+  """int8 (M,K) @ int8 (K,N) -> f32 (M,N), scales applied in the epilogue."""
+  m, kdim = x.shape
+  _, n = w.shape
+  assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+  n_k_steps = kdim // bk
+  kern = functools.partial(_int8_matmul_kernel, n_k_steps=n_k_steps)
+  from jax.experimental.pallas import tpu as pltpu
+  return pl.pallas_call(
+      kern,
+      grid=(m // bm, n // bn, n_k_steps),
+      in_specs=[
+          pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+          pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+          pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+          pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+      ],
+      out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+      out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+      scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+      interpret=interpret,
+  )(x, w, x_scale.reshape(-1, 1), w_scale.reshape(1, -1))

@@ -1,0 +1,77 @@
+"""Jitted public wrapper for the W8A8 int8 matmul kernel."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import common
+from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Weights:
+  codes: jax.Array   # int8 (K, N)
+  scale: jax.Array   # f32 (N,) per output channel
+  k: int
+  n: int
+
+  def tree_flatten(self):
+    return (self.codes, self.scale), (self.k, self.n)
+
+  @classmethod
+  def tree_unflatten(cls, aux, leaves):
+    return cls(leaves[0], leaves[1], *aux)
+
+  @property
+  def hbm_bytes(self) -> int:
+    return self.codes.size + 4 * self.scale.size
+
+
+jax.tree_util.register_pytree_node(
+    Int8Weights, Int8Weights.tree_flatten, Int8Weights.tree_unflatten)
+
+
+def quantize_weights(w: jax.Array) -> Int8Weights:
+  q = quant.int_quantize(w, bits=8, channel_axis=1)
+  return Int8Weights(q.codes, q.scale.reshape(-1), w.shape[0], w.shape[1])
+
+
+def quantize_activations(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+  """Dynamic per-row symmetric int8 activation quantization."""
+  absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+  scale = absmax / 127.0
+  codes = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+  return codes, scale.reshape(*x.shape[:-1])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul(x: jax.Array, weights: Int8Weights,
+                interpret: Optional[bool] = None) -> jax.Array:
+  """(..., K) f32/bf16 @ int8 (K, N): dynamic act quant + Pallas kernel."""
+  if interpret is None:
+    interpret = common.default_interpret()
+  lead = x.shape[:-1]
+  x2 = x.reshape(-1, x.shape[-1])
+  xq, xs = quantize_activations(x2)
+  xq, m0 = common.pad_to(xq, 0, common.BM)
+  xq, _ = common.pad_to(xq, 1, common.BK)
+  xs, _ = common.pad_to(xs.reshape(-1), 0, common.BM)
+  wq, _ = common.pad_to(weights.codes, 0, common.BK)
+  wq, _ = common.pad_to(wq, 1, common.BN)
+  ws, _ = common.pad_to(weights.scale, 0, common.BN)
+  out = int8_matmul_pallas(xq, wq, xs, ws, interpret=interpret)
+  return out[:m0, :weights.n].reshape(*lead, weights.n)
+
+
+def int8_matmul_reference(x: jax.Array, weights: Int8Weights) -> jax.Array:
+  lead = x.shape[:-1]
+  x2 = x.reshape(-1, x.shape[-1])
+  xq, xs = quantize_activations(x2)
+  out = int8_matmul_ref(xq, weights.codes, xs.reshape(-1), weights.scale)
+  return out.reshape(*lead, weights.n)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the W8A8 int8 matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array, x_scale: jax.Array,
+                    w_scale: jax.Array) -> jax.Array:
+  acc = jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+  return acc.astype(jnp.float32) * x_scale.reshape(-1, 1) \
+      * w_scale.reshape(1, -1)

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: matmul against sum-of-powers-of-two (LightPE) weights.
+
+The paper's LightPE replaces the ASIC multiplier with shifters (Eq. 1).  On
+TPU there is no per-lane shifter array — the MXU systolic array is the
+compute unit — so the TPU-native adaptation keeps the *storage* win and
+feeds the MXU:
+
+  HBM:   packed exponent codes  (4 bit/weight for k=1, 8 bit for k=2)
+         + one fp32 scale per output channel
+  VMEM:  decode codes -> EXACT bf16/f32 values (+/- 2^-m [+ 2^-m'])
+  MXU:   jnp.dot(x_tile, decoded_tile)
+
+The matmul is tiled (BM, BK) x (BK, BN) with accumulation over the K grid
+axis; weight bytes moved from HBM drop 4-8x vs bf16, which is the roofline
+lever for the memory-bound decode shapes (see EXPERIMENTS.md §Perf).
+
+Code formats (repro.core.quant):
+  k=1: uint8 nibble pairs, little-nibble-first, value bits [s m m m]
+  k=2: uint8, value bits [. s m1 m1 m1 m2 m2 m2]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import BK, BM, BN
+
+
+def _decode_lp1_nibbles(packed: jax.Array) -> jax.Array:
+  """(bk, bn//2) uint8 -> (bk, bn) f32 of +/- 2^-m (exact)."""
+  lo = (packed & 0xF).astype(jnp.int32)
+  hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+  both = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+  sign = jnp.where((both & 8) != 0, -1.0, 1.0)
+  m = (both & 7).astype(jnp.float32)
+  return sign * jnp.exp2(-m)
+
+
+def _decode_lp2_bytes(codes: jax.Array) -> jax.Array:
+  """(bk, bn) uint8 -> (bk, bn) f32 of +/- (2^-m1 + 2^-m2) (exact)."""
+  c = codes.astype(jnp.int32)
+  sign = jnp.where((c & 64) != 0, -1.0, 1.0)
+  m1 = ((c >> 3) & 7).astype(jnp.float32)
+  m2 = (c & 7).astype(jnp.float32)
+  return sign * (jnp.exp2(-m1) + jnp.exp2(-m2))
+
+
+def _pow2_matmul_kernel(x_ref, w_ref, scale_ref, o_ref, *, k_terms: int,
+                        n_k_steps: int):
+  """Grid (M/BM, N/BN, K/BK); accumulates over the K axis in f32."""
+  kstep = pl.program_id(2)
+
+  @pl.when(kstep == 0)
+  def _init():
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+  x = x_ref[...].astype(jnp.float32)
+  if k_terms == 1:
+    w = _decode_lp1_nibbles(w_ref[...])
+  else:
+    w = _decode_lp2_bytes(w_ref[...])
+  acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+  o_ref[...] += acc
+
+  @pl.when(kstep == n_k_steps - 1)
+  def _finalize():
+    o_ref[...] *= scale_ref[...].astype(jnp.float32)
+
+
+def pow2_matmul_pallas(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                       k_terms: int, interpret: bool = True,
+                       bm: int = BM, bn: int = BN, bk: int = BK) -> jax.Array:
+  """x (M, K) @ decode(codes) (K, N) * scale (N,) -> (M, N) float32.
+
+  codes: uint8, (K, N//2) for k_terms=1 (packed nibbles), (K, N) for k=2.
+  Shapes must be pre-padded to tile multiples (ops.py handles padding).
+  """
+  m, kdim = x.shape
+  n = scale.shape[0]
+  assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim)
+  n_k_steps = kdim // bk
+  code_cols = bn // 2 if k_terms == 1 else bn
+
+  kern = functools.partial(_pow2_matmul_kernel, k_terms=k_terms,
+                           n_k_steps=n_k_steps)
+  return pl.pallas_call(
+      kern,
+      grid=(m // bm, n // bn, n_k_steps),
+      in_specs=[
+          pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+          pl.BlockSpec((bk, code_cols), lambda i, j, k: (k, j)),
+          pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+      ],
+      out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+      out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+      interpret=interpret,
+  )(x, codes, scale.reshape(1, -1))

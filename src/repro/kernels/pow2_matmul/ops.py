@@ -1,0 +1,83 @@
+"""Jitted public wrapper for the pow2 (LightPE) matmul kernel.
+
+Handles quantization-to-codes, padding to MXU tiles, kernel dispatch, and
+unpadding.  ``quantize_weights`` is the offline packing step (what a
+checkpoint-conversion tool runs); ``pow2_matmul`` is the serving-time op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import common
+from repro.kernels.pow2_matmul.kernel import pow2_matmul_pallas
+from repro.kernels.pow2_matmul.ref import pow2_matmul_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Pow2Weights:
+  """Packed LightPE weights: HBM-resident codes + per-channel scales."""
+  codes: jax.Array   # uint8 (K, N//2) for k=1, (K, N) for k=2
+  scale: jax.Array   # f32 (N,)
+  k_terms: int
+  k: int
+  n: int
+
+  def tree_flatten(self):
+    return (self.codes, self.scale), (self.k_terms, self.k, self.n)
+
+  @classmethod
+  def tree_unflatten(cls, aux, leaves):
+    return cls(leaves[0], leaves[1], *aux)
+
+  @property
+  def hbm_bytes(self) -> int:
+    return self.codes.size + 4 * self.scale.size
+
+
+jax.tree_util.register_pytree_node(
+    Pow2Weights, Pow2Weights.tree_flatten, Pow2Weights.tree_unflatten)
+
+
+def quantize_weights(w: jax.Array, k_terms: int = 1) -> Pow2Weights:
+  """Quantize a dense (K, N) weight matrix to packed LightPE codes."""
+  kdim, n = w.shape
+  q = quant.pow2_quantize(w, k=k_terms, channel_axis=1)  # per-output-channel
+  codes = q.codes
+  if k_terms == 1:
+    assert n % 2 == 0, "LightPE-1 packing needs even N"
+    codes = quant.pack_nibbles(codes)
+  return Pow2Weights(codes=codes, scale=q.scale.reshape(-1),
+                     k_terms=k_terms, k=kdim, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pow2_matmul(x: jax.Array, weights: Pow2Weights,
+                interpret: Optional[bool] = None) -> jax.Array:
+  """(..., K) @ LightPE(K, N) -> (..., N) float32 via the Pallas kernel."""
+  if interpret is None:
+    interpret = common.default_interpret()
+  lead = x.shape[:-1]
+  x2 = x.reshape(-1, x.shape[-1])
+  x2, m0 = common.pad_to(x2, 0, common.BM)
+  x2, k0 = common.pad_to(x2, 1, common.BK)
+  codes, _ = common.pad_to(weights.codes, 0, common.BK)
+  pack = 2 if weights.k_terms == 1 else 1
+  codes, _ = common.pad_to(codes, 1, common.BN // pack)
+  scale, _ = common.pad_to(weights.scale, 0, common.BN)
+  out = pow2_matmul_pallas(x2, codes, scale, weights.k_terms,
+                           interpret=interpret)
+  return out[:m0, :weights.n].reshape(*lead, weights.n)
+
+
+def pow2_matmul_reference(x: jax.Array, weights: Pow2Weights) -> jax.Array:
+  """Oracle path (unpadded, pure jnp)."""
+  lead = x.shape[:-1]
+  out = pow2_matmul_ref(x.reshape(-1, x.shape[-1]), weights.codes,
+                        weights.scale, weights.k_terms)
+  return out.reshape(*lead, weights.n)

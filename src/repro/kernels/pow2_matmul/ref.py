@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the pow2 (LightPE) matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import pow2_decode_codes, unpack_nibbles
+
+
+def decode_weights(codes: jax.Array, scale: jax.Array,
+                   k_terms: int) -> jax.Array:
+  """codes (packed for k=1) + per-output-channel scale -> f32 (K, N)."""
+  if k_terms == 1:
+    codes = unpack_nibbles(codes)
+  vals = pow2_decode_codes(codes, k_terms)
+  return vals * scale.reshape(1, -1)
+
+
+def pow2_matmul_ref(x: jax.Array, codes: jax.Array, scale: jax.Array,
+                    k_terms: int) -> jax.Array:
+  w = decode_weights(codes, scale, k_terms)
+  return jnp.dot(x.astype(jnp.float32), w)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: single-token decode attention over an int8 KV cache.
+
+Decode attention is memory-bound: every step streams the whole KV cache
+from HBM.  QUIDAM's precision axis applied here = store K/V as int8 codes
+with one f32 scale per (position, kv-head); the kernel dequantizes tiles in
+VMEM and runs an online-softmax flash-decoding pass over sequence blocks.
+
+Layout (per kv-head group, GQA):
+  q        (G, D)        f32/bf16 — the G = H / H_kv query heads of a group
+  k_codes  (S, D) int8 + k_scale (S,)
+  v_codes  (S, D) int8 + v_scale (S,)
+  out      (G, D) f32
+
+Grid: (B * H_kv, S / BS) — the sequence axis is the minor (sequential) grid
+dim; running max / denominator / accumulator live in VMEM scratch and are
+finalized on the last block.  `length` masks positions >= the real cache
+fill (padded shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 256  # sequence block
+
+
+def _decode_attn_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *,
+                        n_s_steps: int, bs: int, sm_scale: float):
+  sstep = pl.program_id(1)
+
+  @pl.when(sstep == 0)
+  def _init():
+    m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+  q = q_ref[0].astype(jnp.float32)                        # (G, D)
+  k = kc_ref[0].astype(jnp.float32) * ks_ref[0]           # (BS, D)
+  v = vc_ref[0].astype(jnp.float32) * vs_ref[0]           # (BS, D)
+
+  s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale  # (G,BS)
+  # mask beyond the true cache length
+  pos = sstep * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+  s = jnp.where(pos < len_ref[0], s, -jnp.inf)
+
+  m_prev = m_ref[...]                                      # (G, 1)
+  m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+  # all-masked blocks keep m = -inf; guard the exp against NaN
+  m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+  p = jnp.exp(s - m_safe)
+  p = jnp.where(jnp.isfinite(s), p, 0.0)
+  alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+  l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+  acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+      p, v, preferred_element_type=jnp.float32)
+  m_ref[...] = m_new
+
+  @pl.when(sstep == n_s_steps - 1)
+  def _finalize():
+    o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def quant_decode_attn_pallas(q: jax.Array, k_codes: jax.Array,
+                             k_scale: jax.Array, v_codes: jax.Array,
+                             v_scale: jax.Array, length: jax.Array,
+                             sm_scale: float, interpret: bool = True,
+                             bs: int = DEFAULT_BS) -> jax.Array:
+  """q (BH, G, D) x int8 KV (BH, S, D) + scales (BH, S) -> (BH, G, D).
+
+  BH = batch * kv_heads (one grid row per kv-head group); S % bs == 0.
+  length: int32 (BH,) true fill of each cache row.
+  """
+  bh, g, d = q.shape
+  s_len = k_codes.shape[1]
+  assert s_len % bs == 0, (s_len, bs)
+  n_s_steps = s_len // bs
+  kern = functools.partial(_decode_attn_kernel, n_s_steps=n_s_steps, bs=bs,
+                           sm_scale=sm_scale)
+  return pl.pallas_call(
+      kern,
+      grid=(bh, n_s_steps),
+      in_specs=[
+          pl.BlockSpec((1,), lambda i, s: (i,)),
+          pl.BlockSpec((1, g, d), lambda i, s: (i, 0, 0)),
+          pl.BlockSpec((1, bs, d), lambda i, s: (i, s, 0)),
+          pl.BlockSpec((1, bs, 1), lambda i, s: (i, s, 0)),
+          pl.BlockSpec((1, bs, d), lambda i, s: (i, s, 0)),
+          pl.BlockSpec((1, bs, 1), lambda i, s: (i, s, 0)),
+      ],
+      out_specs=pl.BlockSpec((1, g, d), lambda i, s: (i, 0, 0)),
+      out_shape=jax.ShapeDtypeStruct((bh, g, d), jnp.float32),
+      scratch_shapes=[
+          pltpu.VMEM((g, 1), jnp.float32),
+          pltpu.VMEM((g, 1), jnp.float32),
+          pltpu.VMEM((g, d), jnp.float32),
+      ],
+      interpret=interpret,
+  )(length, q, k_codes, k_scale[..., None], v_codes, v_scale[..., None])

@@ -1,0 +1,79 @@
+"""Jitted public wrapper for quantized-KV decode attention.
+
+Accepts GQA-shaped decode inputs (B, H, D) + an int8 cache
+(B, H_kv, S, D) with per-(position, head) scales, handles padding of the
+sequence axis to the kernel block and head grouping.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.quant_decode_attn.kernel import (DEFAULT_BS,
+                                                    quant_decode_attn_pallas)
+from repro.kernels.quant_decode_attn.ref import quant_decode_attn_ref
+
+
+def quantize_kv(k: jax.Array, v: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+  """(B, Hkv, S, D) f32 -> int8 codes + per-(b, h, s) scales."""
+  def q(x):
+    absmax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12)  # (B,Hkv,S)
+    scale = absmax / 127.0
+    codes = jnp.clip(jnp.round(x / scale[..., None]), -128, 127)
+    return codes.astype(jnp.int8), scale
+  kc, ks = q(k)
+  vc, vs = q(v)
+  return kc, ks, vc, vs
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bs"))
+def quant_decode_attn(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                      v_codes: jax.Array, v_scale: jax.Array,
+                      length: jax.Array, interpret: Optional[bool] = None,
+                      bs: int = DEFAULT_BS) -> jax.Array:
+  """q (B, H, D) x int8 cache (B, Hkv, S, D) -> (B, H, D) f32.
+
+  length: (B,) int32 current fill per sequence.
+  """
+  if interpret is None:
+    interpret = common.default_interpret()
+  b, h, d = q.shape
+  _, hkv, s, _ = k_codes.shape
+  assert h % hkv == 0
+  g = h // hkv
+  sm_scale = 1.0 / (d ** 0.5)
+
+  qg = q.reshape(b * hkv, g, d)
+  kc = k_codes.reshape(b * hkv, s, d)
+  vc = v_codes.reshape(b * hkv, s, d)
+  ks = k_scale.reshape(b * hkv, s)
+  vs = v_scale.reshape(b * hkv, s)
+  lens = jnp.repeat(length.astype(jnp.int32), hkv)
+
+  kc, s0 = common.pad_to(kc, 1, bs)
+  vc, _ = common.pad_to(vc, 1, bs)
+  ks, _ = common.pad_to(ks, 1, bs)
+  vs, _ = common.pad_to(vs, 1, bs)
+  out = quant_decode_attn_pallas(qg, kc, ks, vc, vs, lens, sm_scale,
+                                 interpret=interpret, bs=bs)
+  return out.reshape(b, h, d)
+
+
+def quant_decode_attn_reference(q: jax.Array, k_codes: jax.Array,
+                                k_scale: jax.Array, v_codes: jax.Array,
+                                v_scale: jax.Array,
+                                length: jax.Array) -> jax.Array:
+  b, h, d = q.shape
+  _, hkv, s, _ = k_codes.shape
+  g = h // hkv
+  out = quant_decode_attn_ref(
+      q.reshape(b * hkv, g, d), k_codes.reshape(b * hkv, s, d),
+      k_scale.reshape(b * hkv, s), v_codes.reshape(b * hkv, s, d),
+      v_scale.reshape(b * hkv, s), jnp.repeat(length.astype(jnp.int32), hkv),
+      1.0 / (d ** 0.5))
+  return out.reshape(b, h, d)

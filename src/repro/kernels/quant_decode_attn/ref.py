@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the quantized-KV decode attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_decode_attn_ref(q: jax.Array, k_codes: jax.Array,
+                          k_scale: jax.Array, v_codes: jax.Array,
+                          v_scale: jax.Array, length: jax.Array,
+                          sm_scale: float) -> jax.Array:
+  """q (BH, G, D), int8 KV (BH, S, D), scales (BH, S), length (BH,)."""
+  k = k_codes.astype(jnp.float32) * k_scale[..., None]
+  v = v_codes.astype(jnp.float32) * v_scale[..., None]
+  s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32), k) * sm_scale
+  pos = jnp.arange(k.shape[1])[None, None, :]
+  s = jnp.where(pos < length[:, None, None], s, -jnp.inf)
+  p = jax.nn.softmax(s, axis=-1)
+  return jnp.einsum("bgs,bsd->bgd", p, v)

@@ -1,0 +1,63 @@
+"""Jitted public wrapper for the chunked WKV6 kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.rwkv6_scan.kernel import DEFAULT_CHUNK, wkv6_pallas
+from repro.kernels.rwkv6_scan.ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "chunk"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: Optional[jax.Array] = None,
+         interpret: Optional[bool] = None,
+         chunk: int = DEFAULT_CHUNK) -> Tuple[jax.Array, jax.Array]:
+  """WKV6 over (B, H, T, D) inputs; u (H, D); returns (out, final state).
+
+  Pads T to the chunk size with identity tokens (w=1, k=v=0) which leave the
+  state untouched.
+  """
+  if interpret is None:
+    interpret = common.default_interpret()
+  b, h, t, d = r.shape
+  if s0 is None:
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+  def flat(x):
+    return x.reshape(b * h, t, d)
+
+  rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(w)
+  pad = (-t) % chunk
+  if pad:
+    zeros = jnp.zeros((b * h, pad, d), rf.dtype)
+    rf = jnp.concatenate([rf, zeros], axis=1)
+    kf = jnp.concatenate([kf, zeros], axis=1)
+    vf = jnp.concatenate([vf, zeros], axis=1)
+    wf = jnp.concatenate([wf, jnp.ones((b * h, pad, d), wf.dtype)], axis=1)
+  uf = jnp.broadcast_to(u[None, :, :], (b, h, d)).reshape(b * h, d)
+  o, s_final = wkv6_pallas(rf, kf, vf, wf, uf,
+                           s0.reshape(b * h, d, d),
+                           interpret=interpret, chunk=chunk)
+  return (o[:, :t, :].reshape(b, h, t, d),
+          s_final.reshape(b, h, d, d))
+
+
+def wkv6_reference(r, k, v, w, u, s0=None):
+  b, h, t, d = r.shape
+  if s0 is None:
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+  return wkv6_ref(r, k, v, w, u, s0)
+
+
+def wkv6_decode_step(rt, kt, vt, wt, u, state):
+  """Single-token decode update (B, H, D) x state (B, H, D, D)."""
+  at = kt[..., :, None] * vt[..., None, :]
+  s_plus = state + u[None, :, :, None] * at
+  ot = jnp.einsum("bhd,bhde->bhe", rt, s_plus)
+  state = wt[..., :, None] * state + at
+  return ot, state

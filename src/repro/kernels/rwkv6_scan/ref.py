@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the WKV6 recurrence (RWKV-6 "Finch").
+
+Per head (state S in R^{D x D}, D = head dim; r, k, v, w per token):
+
+    o_t = r_t @ (S_{t-1} + diag(u * k_t ... ) ...)    concretely:
+    a_t = k_t^T v_t                      (outer product, D x D)
+    o_t = r_t @ (S_{t-1} + diag(u) a_t)
+    S_t = diag(w_t) S_{t-1} + a_t
+
+with data-dependent per-channel decay w_t in (0, 1) and a learned per-head
+"bonus" u for the current token.  This sequential scan is the correctness
+oracle; the Pallas kernel computes the chunked matmul form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, s0: jax.Array) -> tuple[jax.Array, jax.Array]:
+  """r/k/v/w: (B, H, T, D); u: (H, D); s0: (B, H, D, D) initial state.
+
+  Returns (out (B, H, T, D), final state (B, H, D, D)).
+  State convention: S[d_k, d_v]; o_t = sum_dk r[dk] * S_plus[dk, dv].
+  """
+  b, h, t, d = r.shape
+
+  def step(S, inp):
+    rt, kt, vt, wt = inp                      # (B, H, D) each
+    at = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+    s_plus = S + u[None, :, :, None] * at
+    ot = jnp.einsum("bhd,bhde->bhe", rt, s_plus)
+    S = wt[..., :, None] * S + at
+    return S, ot
+
+  xs = (jnp.moveaxis(r, 2, 0), jnp.moveaxis(k, 2, 0),
+        jnp.moveaxis(v, 2, 0), jnp.moveaxis(w, 2, 0))
+  s_final, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+  return jnp.moveaxis(outs, 0, 2), s_final

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer state /
+     decode caches / inputs (NO device allocation),
+  3. jit-lowers the step (train_step for train shapes, prefill for
+     prefill shapes, decode_step for decode shapes) with full in/out
+     shardings and compiles it,
+  4. records memory_analysis / cost_analysis / the collective-op
+     inventory parsed from the optimized HLO into a JSON record that
+     EXPERIMENTS.md §Dry-run and the roofline analysis read.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system, not in the driver.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config, input_specs, shape_supported
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.parallel import sharding as sh
+from repro.quant.policy import QuantPolicy
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+  """Inventory of collective ops in the optimized HLO.
+
+  Uses the `op_name` metadata to attribute each collective to its loop
+  nesting depth (".../while/body/..." markers): depth-0 collectives run
+  once per step, depth-1 run once per scanned layer (or loss chunk), etc.
+  The roofline analysis scales depth>=1 bytes by the scan trip counts
+  (recorded here from XLA's known_trip_count annotations).
+  """
+  coll_re = re.compile(
+      r"= (\(?[\w\[\],{}0-9 ]+?\)?) "
+      r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+      r"(-start|-done)?\(")
+  shape_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+  name_re = re.compile(r'op_name="([^"]+)"')
+  trip_re = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+  inventory: Dict[str, Dict[str, float]] = {}
+  by_depth: Dict[str, Dict[str, float]] = {}
+  trip_counts = [int(m) for m in trip_re.findall(hlo_text)]
+  for line in hlo_text.splitlines():
+    cm = coll_re.search(line)
+    if not cm:
+      continue
+    if cm.group(3) == "-done":
+      continue  # count start/done pairs once
+    kind = cm.group(2)
+    nbytes = 0
+    for dtype, dims in shape_re.findall(cm.group(1)):
+      n = 1
+      for d in dims.split(","):
+        if d:
+          n *= int(d)
+      nbytes += n * _DTYPE_BYTES.get(dtype, 4)
+    nm = name_re.search(line)
+    depth = nm.group(1).count("/while/") if nm else 0
+    slot = inventory.setdefault(kind, {"count": 0, "bytes": 0.0})
+    slot["count"] += 1
+    slot["bytes"] += nbytes
+    d_slot = by_depth.setdefault(str(depth), {})
+    k_slot = d_slot.setdefault(kind, {"count": 0, "bytes": 0.0})
+    k_slot["count"] += 1
+    k_slot["bytes"] += nbytes
+  return {"static": inventory, "by_loop_depth": by_depth,
+          "known_trip_counts": sorted(set(trip_counts))}
+
+
+def _struct_tree(tree):
+  return jax.tree_util.tree_map(
+      lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def dryrun_cell(arch: str, shape: str, multi_pod: bool,
+                quant_opt: Optional[bool] = None,
+                kv_quant: Optional[str] = None,
+                profile: str = "2d",
+                param_dtype: str = "float32",
+                microbatches: int = 1,
+                collect_hlo: bool = True) -> Dict[str, Any]:
+  """Lower + compile one cell; returns the JSON-able record."""
+  import dataclasses
+  sh.set_profile(profile)
+  t_start = time.time()
+  cfg = get_config(arch)
+  if kv_quant:
+    cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+  spec = SHAPES[shape]
+  skip = shape_supported(cfg, shape)
+  record: Dict[str, Any] = {
+      "arch": arch, "shape": shape,
+      "mesh": "2x16x16" if multi_pod else "16x16",
+      "mode": spec.mode,
+      "params_total": cfg.param_count(),
+      "params_active": cfg.param_count(active_only=True),
+      "quant_opt": bool(quant_opt), "kv_quant": cfg.kv_quant,
+      "profile": profile, "param_dtype": param_dtype,
+  }
+  if skip:
+    record.update(status="skipped", reason=skip)
+    return record
+
+  mesh = make_production_mesh(multi_pod=multi_pod)
+  model = build_model(cfg)
+  specs = input_specs(cfg, shape)
+  key = jax.random.PRNGKey(0)
+
+  # default: int8 optimizer state for the >100B archs (it is the difference
+  # between fitting 16 GB/chip and not; see EXPERIMENTS.md)
+  if quant_opt is None:
+    quant_opt = cfg.param_count() > 50e9
+
+  try:
+    with sh.MeshContext(mesh):
+      if spec.mode == "train":
+        tcfg = ts_lib.TrainConfig(
+            optimizer=opt_lib.AdamWConfig(quantize_state=quant_opt),
+            param_dtype=param_dtype, microbatches=microbatches)
+        state_shapes = jax.eval_shape(
+            functools.partial(ts_lib.make_train_state, model, tcfg), key)
+        state_specs = sh.train_state_specs(state_shapes, mesh, quant_opt)
+        batch_specs = {k: sh.batch_spec(mesh, len(v.shape))
+                       for k, v in specs.items()}
+        fn = functools.partial(ts_lib.train_step, model, tcfg)
+        jitted = jax.jit(fn, in_shardings=(
+            sh.to_shardings(state_specs, mesh),
+            sh.to_shardings(batch_specs, mesh)), donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, specs)
+      elif spec.mode == "prefill":
+        params_shapes = jax.eval_shape(model.init, key)
+        pspecs = sh.param_specs(params_shapes, mesh)
+        batch_specs = {k: sh.batch_spec(mesh, len(v.shape))
+                       for k, v in specs.items()}
+        fn = lambda p, b: model.prefill(p, b, spec.seq_len)  # noqa: E731
+        jitted = jax.jit(fn, in_shardings=(
+            sh.to_shardings(pspecs, mesh),
+            sh.to_shardings(batch_specs, mesh)))
+        lowered = jitted.lower(params_shapes, specs)
+      else:  # decode
+        params_shapes = jax.eval_shape(model.init, key)
+        pspecs = sh.param_specs(params_shapes, mesh)
+        b = spec.global_batch
+        cache_shapes = jax.eval_shape(
+            functools.partial(model.init_cache, b, spec.seq_len))
+        cspecs = sh.cache_specs(cache_shapes, mesh, b)
+        tok_spec = sh.batch_spec(mesh, 1) if b > 1 else \
+            jax.sharding.PartitionSpec(None)
+        extra = {}
+        if cfg.family == "encdec":
+          # decode against encoder K/V already in the cache
+          pass
+        jitted = jax.jit(model.decode_step, in_shardings=(
+            sh.to_shardings(pspecs, mesh),
+            jax.sharding.NamedSharding(mesh, tok_spec),
+            sh.to_shardings(cspecs, mesh)), donate_argnums=(2,))
+        lowered = jitted.lower(params_shapes, specs["tokens"], cache_shapes)
+
+      t_lower = time.time()
+      compiled = lowered.compile()
+      t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    record.update(
+        status="ok",
+        lower_s=round(t_lower - t_start, 1),
+        compile_s=round(t_compile - t_lower, 1),
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        cost={k: v for k, v in (cost or {}).items()
+              if "flops" in k or "bytes accessed" in k.lower()
+              or k in ("transcendentals",)},
+    )
+    if collect_hlo:
+      txt = compiled.as_text()
+      record["collectives"] = parse_collectives(txt)
+      record["hlo_bytes"] = len(txt)
+  except Exception as e:  # noqa: BLE001
+    record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                  traceback=traceback.format_exc()[-4000:])
+  return record
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None)
+  ap.add_argument("--shape", default=None)
+  ap.add_argument("--mesh", choices=["pod1", "pod2", "both"],
+                  default="pod1")
+  ap.add_argument("--all", action="store_true")
+  ap.add_argument("--out", default="results/dryrun")
+  ap.add_argument("--kv-quant", default=None)
+  ap.add_argument("--profile", default="2d", choices=["2d", "fsdp"])
+  ap.add_argument("--param-dtype", default="float32",
+                  choices=["float32", "bfloat16"])
+  ap.add_argument("--microbatches", type=int, default=1)
+  ap.add_argument("--quant-opt", default=None,
+                  choices=[None, "true", "false"])
+  args = ap.parse_args()
+
+  archs = ALL_ARCHS if args.all or not args.arch else [args.arch]
+  shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+  meshes = {"pod1": [False], "pod2": [True],
+            "both": [False, True]}[args.mesh]
+  quant_opt = None if args.quant_opt is None else args.quant_opt == "true"
+
+  os.makedirs(args.out, exist_ok=True)
+  for arch in archs:
+    for shape in shapes:
+      for mp in meshes:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        if args.kv_quant:
+          tag += f"__kv{args.kv_quant}"
+        if args.profile != "2d":
+          tag += f"__{args.profile}"
+        if args.param_dtype != "float32":
+          tag += "__pbf16"
+        if args.microbatches > 1:
+          tag += f"__mb{args.microbatches}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+          print(f"[skip cached] {tag}")
+          continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        rec = dryrun_cell(arch, shape, mp, quant_opt=quant_opt,
+                          kv_quant=args.kv_quant, profile=args.profile,
+                          param_dtype=args.param_dtype,
+                          microbatches=args.microbatches)
+        with open(path, "w") as f:
+          json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = rec.get("reason") or rec.get("error") or \
+            f"compile {rec.get('compile_s')}s flops/dev " \
+            f"{rec.get('cost', {}).get('flops')}"
+        print(f"[{status}] {tag}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+  main()

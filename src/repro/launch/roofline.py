@@ -1,0 +1,290 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), TPU v5e constants:
+
+  compute    = FLOPs_dev / 197e12          [s]
+  memory     = HBM_bytes_dev / 819e9       [s]
+  collective = coll_bytes_dev / 50e9       [s]
+
+METHODOLOGY NOTE (documented deviation): XLA's CPU `cost_analysis()`
+counts while-loop bodies ONCE, so raw `flops` under-reports scanned-layer
+models by ~n_blocks.  We therefore compute the terms from an ANALYTIC
+model of our own compiled program (we control every einsum; formulas
+below) and CROSS-CHECK the per-block values against cost_analysis (the
+dry-run records carry both; agreement is reported per cell).  Collective
+bytes likewise: the HLO inventory (per loop depth, from op_name metadata)
+is reconstructed as depth0 + depth1 x n_blocks and compared against the
+analytic per-step collective model.
+
+Analytic model (per device, per step):
+  train:  matmul FLOPs = (8 Nblk + 6 Nemb) * tokens / n_chips
+          (fwd 2 + bwd 4 + full-remat recompute 2 on scanned blocks)
+          + attention 4 * (2 * S_eff * d_attn) * tokens * n_attn_layers
+          + MoE dispatch/combine einsum overhead (capacity form)
+  decode: FLOPs = 2 Nactive * batch / n_chips + cache attention reads
+  HBM:    weights traffic (3 reads bf16 at train; 1 at decode) + optimizer
+          state read/write (fp32 or int8) + activations/caches
+  coll:   TP all-reduces (2/layer fwd + 2 bwd on activation shards)
+          + FSDP per-layer param all-gathers + DP gradient all-reduce,
+          ring factor 2(n-1)/n on the payload.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Any, Dict, List, Optional
+
+from repro.configs import get_config, shape_supported
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def _mesh_info(mesh: str) -> Dict[str, int]:
+  if mesh == "16x16":
+    return {"chips": 256, "dp": 16, "tp": 16, "pods": 1}
+  return {"chips": 512, "dp": 32, "tp": 16, "pods": 2}
+
+
+def _block_params(cfg, active_only=True) -> int:
+  """Matmul params inside the scanned blocks (excludes embeddings/head)."""
+  total = cfg.param_count(active_only=active_only)
+  emb = cfg.padded_vocab * cfg.d_model
+  emb_all = emb if cfg.tie_embeddings else 2 * emb
+  if cfg.pos_embed == "learned":
+    emb_all += cfg.max_position * cfg.d_model
+  return max(total - emb_all, 0)
+
+
+def analytic_terms(arch: str, shape: str, mesh: str,
+                   kv_quant: str = "none",
+                   profile: str = "2d") -> Dict[str, float]:
+  import dataclasses as _dc
+  cfg = get_config(arch)
+  if kv_quant and kv_quant != "none":
+    cfg = _dc.replace(cfg, kv_quant=kv_quant)
+  spec = SHAPES[shape]
+  mi = _mesh_info(mesh)
+  chips, dp, tp = mi["chips"], mi["dp"] * mi["pods"], mi["tp"]
+  if profile == "fsdp":
+    dp, tp = chips, 1
+  d_attn = cfg.n_heads * cfg.head_dim
+  n_attn_layers = sum(1 for k, _ in cfg.block_pattern()
+                      for _ in [0] if k == "attn") * cfg.n_blocks
+  nblk = _block_params(cfg)
+  nemb = cfg.param_count() - _block_params(cfg, active_only=False)
+  nact = cfg.param_count(active_only=True)
+  nblk_total = _block_params(cfg, active_only=False)
+
+  if spec.mode == "train":
+    tokens = spec.global_batch * spec.seq_len
+    s_eff = min(spec.seq_len, cfg.sliding_window or spec.seq_len)
+    # matmuls: fwd 2N + bwd 4N + remat 2N on blocks; 6N on embed/loss
+    mm = (8 * nblk + 6 * nemb) * tokens
+    # attention: fwd 2*2*S_eff/2(causal)*d_attn per token per attn layer
+    attn = 4 * (2 * s_eff * d_attn) * tokens * n_attn_layers
+    moe = 0.0
+    if cfg.n_experts:
+      cap_tokens = cfg.n_experts_active * cfg.capacity_factor * tokens
+      n_moe = sum(1 for _, m in cfg.block_pattern() if m) * cfg.n_blocks
+      # dispatch + combine einsums, fwd(2 ops) x4 for bwd+remat
+      moe = 4 * 2 * 2 * cap_tokens * cfg.d_model * n_moe
+    flops_dev = (mm + attn + moe) / chips
+    # HBM: 3 weight reads bf16 + grads f32 w + opt m/v f32 rw + param rw
+    n_total = cfg.param_count()
+    opt_bytes = 2 if n_total > 50e9 else 8  # int8 m/v vs f32 m/v
+    wbytes = (3 * 2 + 4 + 2 * 2 * opt_bytes + 2 * 4) * n_total / chips
+    act_bytes = 20 * cfg.d_model * tokens / chips * \
+        (cfg.n_layers / max(cfg.n_blocks, 1))  # saved block boundaries+use
+    hbm_dev = wbytes + act_bytes
+    # collectives: TP activation all-reduces 4/layer (2 fwd + 2 bwd),
+    # FSDP all-gathers 2x params, DP grad all-reduce of the TP shard
+    ring_tp = 2 * (tp - 1) / tp
+    ring_dp = 2 * (dp - 1) / dp
+    tok_dev = tokens / dp
+    if profile == "fsdp":
+      # pure FSDP: 3 bf16 weight gathers (fwd, bwd-remat, bwd) + f32 grad
+      # reduce-scatter; no token-scaled TP all-reduces.  Matches the
+      # HLO-measured 348 GB/step on granite (§Perf 4.1 iter 3).
+      coll_dev = (3 * 2 * nblk_total + 4 * n_total) * (dp - 1) / dp
+    else:
+      tp_ar = 4 * cfg.n_layers * tok_dev * cfg.d_model * 2 * ring_tp
+      fsdp_ag = 2 * (2 * nblk_total / tp) * ring_dp
+      dp_ar = 4 * n_total / tp * ring_dp
+      coll_dev = tp_ar + fsdp_ag + dp_ar
+  elif spec.mode == "prefill":
+    tokens = spec.global_batch * spec.seq_len
+    s_eff = min(spec.seq_len, cfg.sliding_window or spec.seq_len)
+    mm = 2 * (nblk + nemb / 3) * tokens
+    attn = (2 * s_eff * d_attn) * tokens * n_attn_layers
+    flops_dev = (mm + attn) / chips
+    hbm_dev = (2 * cfg.param_count() + 2 * _kv_cache_bytes(cfg, spec)
+               + 8 * cfg.d_model * tokens) / chips
+    ring_tp = 2 * (tp - 1) / tp
+    tok_dev = tokens / dp
+    coll_dev = (2 * cfg.n_layers * tok_dev * cfg.d_model * 2 * ring_tp
+                + 2 * (2 * nblk_total / tp) * 2 * (dp - 1) / dp)
+  else:  # decode: one token against the cache
+    b = spec.global_batch
+    mm = 2 * nact * b
+    cache_bytes = _kv_cache_bytes(cfg, spec)
+    flops_dev = (mm + 2 * cache_bytes / 2 * 2) / chips  # scores+pv reads
+    hbm_dev = (2 * cfg.param_count(active_only=False) * _w_frac_decode(cfg)
+               + cache_bytes) / chips
+    ring_tp = 2 * (tp - 1) / tp
+    coll_dev = 2 * cfg.n_layers * b / max(dp, 1) * cfg.d_model * 2 * ring_tp
+  return {
+      "flops_dev": flops_dev, "hbm_dev": hbm_dev, "coll_dev": coll_dev,
+      "compute_s": flops_dev / PEAK_FLOPS,
+      "memory_s": hbm_dev / HBM_BW,
+      "collective_s": coll_dev / ICI_BW,
+      "model_flops": (
+          6 * nact * spec.global_batch * spec.seq_len
+          if spec.mode == "train" else
+          2 * nact * spec.global_batch * spec.seq_len
+          if spec.mode == "prefill" else
+          2 * nact * spec.global_batch),
+  }
+
+
+def _w_frac_decode(cfg) -> float:
+  """Fraction of weights actually streamed at decode (MoE: active experts
+  + shared; the engine still streams every expert's rows used by the
+  batch — with batch >> experts all weights stream, so use 1.0 for MoE
+  with big batches, active/total for batch 1)."""
+  return 1.0
+
+
+def _kv_cache_bytes(cfg, spec) -> float:
+  b = spec.global_batch
+  s = spec.seq_len
+  kv_bytes = 1 if cfg.kv_quant == "int8" else 2
+  total = 0.0
+  for kind, _ in cfg.block_pattern():
+    if kind == "attn":
+      s_eff = min(s, cfg.sliding_window or s)
+      total += (2 * b * cfg.n_kv_heads * s_eff * cfg.head_dim * kv_bytes)
+    elif kind == "mamba":
+      total += b * cfg.d_inner * cfg.mamba_d_state * 4
+    else:  # rwkv
+      total += b * cfg.n_heads * cfg.head_dim ** 2 * 4
+  return total * cfg.n_blocks
+
+
+def dominant(terms: Dict[str, float]) -> str:
+  vals = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+  return max(vals, key=vals.get).replace("_s", "")
+
+
+def reconstruct_hlo(record: Dict[str, Any], cfg) -> Dict[str, float]:
+  """Reconstruct per-step totals from the body-once cost_analysis values."""
+  out: Dict[str, float] = {}
+  cost = record.get("cost") or {}
+  nb = cfg.n_blocks
+  # flops: entry + body(once). body dominates; reconstruction bound:
+  out["hlo_flops_body_once"] = cost.get("flops", 0.0)
+  out["hlo_flops_reconstructed"] = cost.get("flops", 0.0) * nb
+  colls = record.get("collectives") or {}
+  d0 = sum(v["bytes"] for v in
+           (colls.get("by_loop_depth", {}).get("0", {}) or {}).values())
+  d1 = sum(v["bytes"] for v in
+           (colls.get("by_loop_depth", {}).get("1", {}) or {}).values())
+  out["hlo_coll_bytes_reconstructed"] = d0 + d1 * nb
+  return out
+
+
+def analyse(dryrun_dir: str, out_path: Optional[str] = None
+            ) -> List[Dict[str, Any]]:
+  rows = []
+  for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+    rec = json.load(open(path))
+    if rec["status"] != "ok":
+      if rec["status"] == "skipped":
+        rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                     "mesh": rec["mesh"], "status": "skipped",
+                     "reason": rec["reason"]})
+      continue
+    cfg = get_config(rec["arch"])
+    variant = []
+    if rec.get("profile", "2d") != "2d":
+      variant.append(rec["profile"])
+    if rec.get("param_dtype", "float32") != "float32":
+      variant.append("pbf16")
+    if rec.get("kv_quant", "none") != "none":
+      variant.append("kv" + rec["kv_quant"])
+    if "__mb" in path:
+      variant.append(path.split("__mb")[1].split(".")[0] + "mb")
+    terms = analytic_terms(rec["arch"], rec["shape"], rec["mesh"],
+                           kv_quant=rec.get("kv_quant", "none"),
+                           profile=rec.get("profile", "2d"))
+    hlo = reconstruct_hlo(rec, cfg)
+    chips = _mesh_info(rec["mesh"])["chips"]
+    useful = terms["model_flops"] / max(terms["flops_dev"] * chips, 1.0)
+    row = {
+        "arch": rec["arch"] + ("+" + "+".join(variant) if variant else ""),
+        "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok", "mode": rec["mode"],
+        "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": dominant(terms),
+        "model_flops": terms["model_flops"],
+        "useful_flops_ratio": min(useful, 1.0),
+        "roofline_fraction": max(terms["compute_s"], 1e-30) / max(
+            terms["compute_s"], terms["memory_s"], terms["collective_s"]),
+        "hlo_flops_body_once": hlo["hlo_flops_body_once"],
+        "hlo_flops_reconstructed": hlo["hlo_flops_reconstructed"],
+        "analytic_flops_dev": terms["flops_dev"],
+        "hlo_coll_bytes_reconstructed": hlo["hlo_coll_bytes_reconstructed"],
+        "analytic_coll_bytes_dev": terms["coll_dev"],
+        "temp_bytes_dev": (rec.get("memory") or {}).get("temp_bytes"),
+        "arg_bytes_dev": (rec.get("memory") or {}).get("argument_bytes"),
+        "compile_s": rec.get("compile_s"),
+    }
+    rows.append(row)
+  if out_path:
+    with open(out_path, "w") as f:
+      json.dump(rows, f, indent=1)
+  return rows
+
+
+def to_markdown(rows: List[Dict[str, Any]], mesh: str = "16x16") -> str:
+  lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | roofline frac | useful FLOPs | HBM args+temp (GB/dev) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+  for r in rows:
+    if r.get("mesh") != mesh:
+      continue
+    if r["status"] == "skipped":
+      lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped | "
+                   f"— | — | {r['reason'][:48]}… |")
+      continue
+    mem_gb = ((r["arg_bytes_dev"] or 0) + (r["temp_bytes_dev"] or 0)) / 2**30
+    lines.append(
+        f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+        f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+        f"{r['roofline_fraction']:.2f} | {r['useful_flops_ratio']:.2f} | "
+        f"{mem_gb:.1f} |")
+  return "\n".join(lines)
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--dryrun-dir", default="results/dryrun")
+  ap.add_argument("--out", default="results/roofline.json")
+  ap.add_argument("--markdown", default="results/roofline.md")
+  args = ap.parse_args()
+  rows = analyse(args.dryrun_dir, args.out)
+  md = "## Single-pod (16x16)\n" + to_markdown(rows, "16x16") + \
+       "\n\n## Multi-pod (2x16x16)\n" + to_markdown(rows, "2x16x16")
+  with open(args.markdown, "w") as f:
+    f.write(md)
+  print(md)
+
+
+if __name__ == "__main__":
+  main()

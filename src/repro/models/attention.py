@@ -1,0 +1,172 @@
+"""Attention: GQA with chunked (flash-style) pure-JAX training path and a
+cache-based decode path (optionally int8-quantized KV, matching the
+quant_decode_attn Pallas kernel's math).
+
+The training/prefill path never materializes the (S, S) score matrix: an
+outer scan over query chunks and an inner scan over key chunks carries
+online-softmax statistics; a `lax.cond` skips fully-masked key chunks, so
+causal attention does ~half the work and sliding-window attention only
+touches the window diagonal band.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, m, l, acc, mask):
+  """One (q_chunk x k_chunk) online-softmax update.
+
+  q: (B, H, Cq, D); k/v: (B, H, Ck, D); m/l: (B, H, Cq, 1);
+  acc: (B, H, Cq, D); mask: (Cq, Ck) bool (True = attend) or None.
+  """
+  s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                 preferred_element_type=jnp.float32)
+  if mask is not None:
+    s = jnp.where(mask[None, None], s, NEG_INF)
+  m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+  p = jnp.exp(s - m_new)
+  alpha = jnp.exp(m - m_new)
+  l = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+  acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd",
+                                 p.astype(v.dtype), v,
+                                 preferred_element_type=jnp.float32)
+  return m_new, l, acc
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    chunk_q: int = 512, chunk_k: int = 512,
+                    sm_scale: Optional[float] = None) -> jax.Array:
+  """q (B, Sq, H, D); k/v (B, Sk, Hkv, D) -> (B, Sq, H, D).
+
+  GQA: H % Hkv == 0, kv heads repeated. Sliding window (Mistral-style):
+  token i attends to [i - window + 1, i].
+  """
+  b, sq, h, d = q.shape
+  _, sk, hkv, _ = k.shape
+  assert h % hkv == 0
+  if sm_scale is None:
+    sm_scale = 1.0 / (d ** 0.5)
+  g = h // hkv
+  if g > 1:
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+
+  # pad sequences to chunk multiples
+  cq = min(chunk_q, sq)
+  ck = min(chunk_k, sk)
+  pad_q = (-sq) % cq
+  pad_k = (-sk) % ck
+  qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+  kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+  vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+  nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+
+  # (B, H, nq, Cq, D) etc.
+  qb = jnp.moveaxis(qp.reshape(b, nq, cq, h, d), 3, 1) * sm_scale
+  kb = jnp.moveaxis(kp.reshape(b, nk, ck, h, d), 3, 1)
+  vb = jnp.moveaxis(vp.reshape(b, nk, ck, h, d), 3, 1)
+
+  q_pos = jnp.arange(nq * cq).reshape(nq, cq)
+  k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+
+  def process_q_chunk(qi, q_chunk):
+    # q_chunk: (B, H, Cq, D)
+    m0 = jnp.full((b, h, cq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, cq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, cq, d), jnp.float32)
+
+    # checkpoint the block update: without this, the scan VJP saves the
+    # (B, H, Cq, Ck) probability tensors of EVERY (q, k) block pair for the
+    # backward pass — the dominant term of the dry-run's temp_bytes
+    # (see EXPERIMENTS.md §Perf, jamba train_4k iteration 1)
+    @jax.checkpoint
+    def kv_step(carry, inp):
+      m, l, acc = carry
+      ki, k_chunk, v_chunk = inp
+      qpos = q_pos[qi]                       # (Cq,)
+      kpos = k_pos[ki]                       # (Ck,)
+      mask = jnp.ones((cq, ck), bool)
+      if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+      if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+      mask &= (kpos < sk)[None, :]           # padding
+      mask &= (qpos < sq)[:, None]
+
+      def do(_):
+        return _attend_block(q_chunk, k_chunk, v_chunk, m, l, acc, mask)
+
+      def skip(_):
+        return m, l, acc
+
+      any_live = jnp.any(mask)
+      m2, l2, a2 = jax.lax.cond(any_live, do, skip, None)
+      return (m2, l2, a2), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        kv_step, (m0, l0, a0),
+        (jnp.arange(nk), jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0)))
+    return acc / jnp.maximum(l, 1e-30)
+
+  # keep the batch dim sharded in the stacked map operand (the chunk-index
+  # dim must stay replicated or SPMD re-gathers per iteration)
+  q_stacked = constrain(jnp.moveaxis(qb, 2, 0), None, "dp", None, None, None)
+  outs = jax.lax.map(lambda args: process_q_chunk(*args),
+                     (jnp.arange(nq), q_stacked))
+  # outs: (nq, B, H, Cq, D) -> (B, Sq, H, D)
+  out = jnp.moveaxis(outs, 0, 2).reshape(b, h, nq * cq, d)
+  out = jnp.moveaxis(out, 1, 2)[:, :sq]
+  return out.astype(q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    chunk_q: int = 512, chunk_k: int = 512) -> jax.Array:
+  return flash_attention(q, k, v, causal=False, window=0,
+                         chunk_q=chunk_q, chunk_k=chunk_k)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     ring: bool = False) -> jax.Array:
+  """Single-token attention over a cache.
+
+  q: (B, H, D); caches: (B, Hkv, S, D) (int8 codes when scales given,
+  with per-(B, Hkv, S) scales — the quant_decode_attn kernel's layout).
+  length: (B,) int32 tokens written so far. ring=True means the cache is a
+  sliding-window ring buffer (all slots valid once length >= S).
+  """
+  b, h, d = q.shape
+  _, hkv, s, _ = k_cache.shape
+  g = h // hkv
+  k = k_cache
+  v = v_cache
+  if k_scale is not None:
+    k = k.astype(jnp.float32) * k_scale[..., None]
+    v = v.astype(jnp.float32) * v_scale[..., None]
+  qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+  scores = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+  scores *= 1.0 / (d ** 0.5)
+  pos = jnp.arange(s)[None, None, None, :]
+  if ring:
+    valid = pos < jnp.minimum(length, s)[:, None, None, None]
+  else:
+    valid = pos < length[:, None, None, None]
+  scores = jnp.where(valid, scores, NEG_INF)
+  p = jax.nn.softmax(scores, axis=-1)
+  out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+  return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,108 @@
+"""Shared model components: norms, positions, initializers, projections."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def model_dtype(cfg: ModelConfig):
+  return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# initializers (params always stored fp32; cast at use)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: float = 1.0) -> jax.Array:
+  std = scale / math.sqrt(d_in)
+  return jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+
+
+def embed_init(key, vocab: int, d: int) -> jax.Array:
+  return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def make_norm_params(cfg: ModelConfig, d: Optional[int] = None):
+  d = d or cfg.d_model
+  if cfg.norm == "rmsnorm":
+    return {"scale": jnp.ones((d,), jnp.float32)}
+  if cfg.norm == "layernorm":
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+  if cfg.norm == "layernorm_np":  # olmo: non-parametric LN
+    return {}
+  raise ValueError(cfg.norm)
+
+
+def apply_norm(params, x: jax.Array, cfg: ModelConfig,
+               eps: float = 1e-5) -> jax.Array:
+  xf = x.astype(jnp.float32)
+  if cfg.norm == "rmsnorm":
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+  else:
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+      y = y * params["scale"] + params["bias"]
+  return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jax.Array, scale: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+  """RMSNorm over the head dim (qwen3 qk-norm; rwkv wkv-out norm)."""
+  xf = x.astype(jnp.float32)
+  var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+  return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+  """x: (..., S, H, D) or (..., H, D) with matching positions (..., S)/(...)."""
+  d = x.shape[-1]
+  half = d // 2
+  freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+  ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+  cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+  sin = jnp.sin(ang)[..., None, :]
+  x1, x2 = x[..., :half], x[..., half:]
+  out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+  return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+  pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+  div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                * (-math.log(10000.0) / d))
+  pe = jnp.zeros((n, d), jnp.float32)
+  pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+  pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+  return pe
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def mlp_act(x: jax.Array, variant: str) -> jax.Array:
+  if variant == "gelu":
+    return jax.nn.gelu(x)
+  if variant == "relu2":
+    r = jax.nn.relu(x)
+    return r * r
+  if variant == "swiglu":  # applied to the gate half only; see ffn.py
+    return jax.nn.silu(x)
+  raise ValueError(variant)

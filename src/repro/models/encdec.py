@@ -1,0 +1,210 @@
+"""Encoder-decoder transformer (Whisper backbone).
+
+The conv audio frontend is a STUB per the assignment: inputs are
+precomputed frame embeddings (B, T_frames, d) from ``input_specs``.
+Encoder = bidirectional attention blocks; decoder = causal self-attn +
+cross-attn + MLP blocks, both scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (cross_attention, decode_attention,
+                                    flash_attention)
+from repro.models.common import (apply_norm, dense_init, embed_init,
+                                 make_norm_params, model_dtype,
+                                 sinusoidal_positions)
+from repro.models.ffn import apply_mlp, init_mlp
+from repro.models.transformer import (_cache_write_token, _project_qkv,
+                                      chunked_xent, init_attn,
+                                      init_attn_cache, lm_head_weight,
+                                      prefill_attn_cache)
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+  ks = jax.random.split(key, 6)
+
+  def enc_block(bkey):
+    k1, k2 = jax.random.split(bkey)
+    return {"attn_norm": make_norm_params(cfg), "attn": init_attn(k1, cfg),
+            "ffn_norm": make_norm_params(cfg),
+            "ffn": init_mlp(k2, cfg, cfg.d_ff)}
+
+  def dec_block(bkey):
+    k1, k2, k3 = jax.random.split(bkey, 3)
+    return {"self_norm": make_norm_params(cfg), "self": init_attn(k1, cfg),
+            "cross_norm": make_norm_params(cfg), "cross": init_attn(k2, cfg),
+            "ffn_norm": make_norm_params(cfg),
+            "ffn": init_mlp(k3, cfg, cfg.d_ff)}
+
+  return {
+      "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+      "pos_embed": embed_init(ks[1], cfg.max_position, cfg.d_model),
+      "enc_blocks": jax.vmap(enc_block)(
+          jax.random.split(ks[2], cfg.n_encoder_layers)),
+      "enc_norm": make_norm_params(cfg),
+      "dec_blocks": jax.vmap(dec_block)(
+          jax.random.split(ks[3], cfg.n_layers)),
+      "final_norm": make_norm_params(cfg),
+      "lm_head": dense_init(ks[4], cfg.d_model, cfg.padded_vocab),
+  }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+  """frames (B, T, d) -> encoder states (B, T, d)."""
+  x = frames.astype(model_dtype(cfg))
+  pe = sinusoidal_positions(x.shape[1], cfg.d_model)
+  x = x + pe.astype(x.dtype)
+  x = constrain(x, "dp", None, None)
+
+  def body(x, p):
+    h = apply_norm(p["attn_norm"], x, cfg)
+    q, k, v = _project_qkv(p["attn"], h, cfg)
+    out = flash_attention(q, k, v, causal=False,
+                          chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+    out = out.reshape(*h.shape[:-1], -1)
+    x = x + jnp.einsum("...e,ed->...d", out, p["attn"]["wo"].astype(x.dtype))
+    h = apply_norm(p["ffn_norm"], x, cfg)
+    x = x + apply_mlp(p["ffn"], h, cfg)
+    return x, None
+
+  x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_blocks"])
+  return apply_norm(params["enc_norm"], x, cfg)
+
+
+def _decoder(params: Params, tokens: jax.Array, enc: jax.Array,
+             cfg: ModelConfig) -> jax.Array:
+  b, s = tokens.shape
+  x = jnp.take(params["embed"], tokens, axis=0).astype(model_dtype(cfg))
+  x = x + jnp.take(params["pos_embed"], jnp.arange(s), axis=0
+                   ).astype(x.dtype)
+  x = constrain(x, "dp", None, None)
+
+  def body(x, p):
+    h = apply_norm(p["self_norm"], x, cfg)
+    q, k, v = _project_qkv(p["self"], h, cfg)
+    out = flash_attention(q, k, v, causal=True,
+                          chunk_q=cfg.attn_chunk, chunk_k=cfg.attn_chunk)
+    out = out.reshape(*h.shape[:-1], -1)
+    x = x + jnp.einsum("...e,ed->...d", out, p["self"]["wo"].astype(x.dtype))
+    h = apply_norm(p["cross_norm"], x, cfg)
+    q, _, _ = _project_qkv(p["cross"], h, cfg)
+    _, ek, ev = _project_qkv(p["cross"], enc, cfg)
+    out = cross_attention(q, ek, ev, chunk_q=cfg.attn_chunk,
+                          chunk_k=cfg.attn_chunk)
+    out = out.reshape(*h.shape[:-1], -1)
+    x = x + jnp.einsum("...e,ed->...d", out,
+                       p["cross"]["wo"].astype(x.dtype))
+    h = apply_norm(p["ffn_norm"], x, cfg)
+    x = x + apply_mlp(p["ffn"], h, cfg)
+    return x, None
+
+  x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_blocks"])
+  return apply_norm(params["final_norm"], x, cfg)
+
+
+def train_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, remat: bool = True):
+  enc = encode(params, batch["enc_frames"], cfg)
+  x = _decoder(params, batch["tokens"], enc, cfg)
+  mask = jnp.ones_like(batch["labels"], jnp.float32)
+  loss, denom = chunked_xent(params, x, batch["labels"], mask, cfg)
+  return loss, {"xent": loss, "aux": jnp.zeros(()), "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+  def one(_):
+    return {
+        "self": init_attn_cache(cfg, batch, max_len),
+        # cross K/V computed at prefill; stored dense (encoder length)
+        "cross_k": jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq,
+                              cfg.head_dim), model_dtype(cfg)),
+        "cross_v": jnp.zeros((batch, cfg.n_kv_heads, cfg.encoder_seq,
+                              cfg.head_dim), model_dtype(cfg)),
+    }
+  layers = jax.vmap(one)(jnp.arange(cfg.n_layers))
+  return {"layers": layers, "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: int):
+  """Encode audio + consume the prompt tokens; build decoder caches."""
+  enc = encode(params, batch["enc_frames"], cfg)
+  tokens = batch["tokens"]
+  b, s = tokens.shape
+  x = jnp.take(params["embed"], tokens, axis=0).astype(model_dtype(cfg))
+  x = x + jnp.take(params["pos_embed"], jnp.arange(s), axis=0
+                   ).astype(x.dtype)
+
+  def body(x, p):
+    cache = {}
+    h = apply_norm(p["self_norm"], x, cfg)
+    q, k, v = _project_qkv(p["self"], h, cfg)
+    out = flash_attention(q, k, v, causal=True, chunk_q=cfg.attn_chunk,
+                          chunk_k=cfg.attn_chunk).reshape(b, s, -1)
+    x = x + jnp.einsum("...e,ed->...d", out, p["self"]["wo"].astype(x.dtype))
+    cache["self"] = prefill_attn_cache(cfg, k, v, max_len)
+    h = apply_norm(p["cross_norm"], x, cfg)
+    q, _, _ = _project_qkv(p["cross"], h, cfg)
+    _, ek, ev = _project_qkv(p["cross"], enc, cfg)
+    out = cross_attention(q, ek, ev, chunk_q=cfg.attn_chunk,
+                          chunk_k=cfg.attn_chunk).reshape(b, s, -1)
+    x = x + jnp.einsum("...e,ed->...d", out,
+                       p["cross"]["wo"].astype(x.dtype))
+    cache["cross_k"] = jnp.moveaxis(ek, 2, 1).astype(model_dtype(cfg))
+    cache["cross_v"] = jnp.moveaxis(ev, 2, 1).astype(model_dtype(cfg))
+    h = apply_norm(p["ffn_norm"], x, cfg)
+    x = x + apply_mlp(p["ffn"], h, cfg)
+    return x, cache
+
+  x, layer_caches = jax.lax.scan(body, x, params["dec_blocks"])
+  x = apply_norm(params["final_norm"], x, cfg)
+  logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                      lm_head_weight(params, cfg).astype(x.dtype))
+  return logits[:, :cfg.vocab_size], {"layers": layer_caches,
+                                      "length": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Params,
+                cfg: ModelConfig):
+  """tokens (B,) against a self-attn cache + fixed cross K/V."""
+  from repro.models.transformer import apply_attn_decode
+  length = cache["length"]
+  b = tokens.shape[0]
+  x = jnp.take(params["embed"], tokens, axis=0).astype(model_dtype(cfg))
+  x = x + params["pos_embed"][length].astype(x.dtype)[None]
+  enc_len = jnp.full((b,), cfg.encoder_seq, jnp.int32)
+
+  def body(x, inp):
+    p, c = inp
+    h = apply_norm(p["self_norm"], x, cfg)
+    out, self_c = apply_attn_decode(p["self"], h, c["self"], length, cfg)
+    x = x + out
+    h = apply_norm(p["cross_norm"], x, cfg)
+    q, _, _ = _project_qkv(p["cross"], h, cfg)
+    out = decode_attention(q, c["cross_k"], c["cross_v"], enc_len)
+    out = out.reshape(b, -1)
+    x = x + jnp.einsum("be,ed->bd", out, p["cross"]["wo"].astype(x.dtype))
+    h = apply_norm(p["ffn_norm"], x, cfg)
+    x = x + apply_mlp(p["ffn"], h, cfg)
+    return x, {"self": self_c, "cross_k": c["cross_k"],
+               "cross_v": c["cross_v"]}
+
+  x, new_layers = jax.lax.scan(body, x, (params["dec_blocks"],
+                                         cache["layers"]))
+  x = apply_norm(params["final_norm"], x, cfg)
+  logits = jnp.einsum("bd,dv->bv", x,
+                      lm_head_weight(params, cfg).astype(x.dtype))
+  return logits[:, :cfg.vocab_size], {"layers": new_layers,
+                                      "length": length + 1}

@@ -1,0 +1,180 @@
+"""Feed-forward blocks: dense MLP variants and capacity-based MoE.
+
+MoE uses the GShard/Switch capacity dispatch: tokens are grouped, each
+group routes top-k with a capacity factor, and dispatch/combine are
+one-hot einsums — fully differentiable, SPMD-friendly (dispatch happens
+within each data shard; expert weights are TP-sharded on d_ff).  The
+dispatch-einsum overhead is visible in the roofline's useful-flops ratio
+and is a documented hillclimb axis (scatter-based dispatch, see
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, mlp_act
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int) -> Dict:
+  d = cfg.d_model
+  ks = jax.random.split(key, 3)
+  if cfg.mlp_variant == "swiglu":
+    return {"wi": dense_init(ks[0], d, d_ff),
+            "wg": dense_init(ks[1], d, d_ff),
+            "wo": dense_init(ks[2], d_ff, d, scale=0.5)}
+  return {"wi": dense_init(ks[0], d, d_ff),
+          "wo": dense_init(ks[2], d_ff, d, scale=0.5)}
+
+
+def apply_mlp(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+  dt = x.dtype
+  h = jnp.einsum("...d,df->...f", x, params["wi"].astype(dt))
+  if cfg.mlp_variant == "swiglu":
+    g = jnp.einsum("...d,df->...f", x, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+  else:
+    h = mlp_act(h, cfg.mlp_variant)
+  return jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+  d, e, ff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+  ks = jax.random.split(key, 5)
+  gated = cfg.mlp_variant == "swiglu"
+  p = {
+      "router": dense_init(ks[0], d, e, scale=0.1),
+      "wi": jax.vmap(lambda k: dense_init(k, d, ff))(
+          jax.random.split(ks[1], e)),
+      "wo": jax.vmap(lambda k: dense_init(k, ff, d, scale=0.5))(
+          jax.random.split(ks[2], e)),
+  }
+  if gated:
+    p["wg"] = jax.vmap(lambda k: dense_init(k, d, ff))(
+        jax.random.split(ks[3], e))
+  if cfg.n_shared_experts:
+    p["shared"] = init_mlp(ks[4], cfg, cfg.d_ff_shared)
+  return p
+
+
+def _capacity(group: int, k: int, e: int, factor: float) -> int:
+  return max(int(group * k * factor / e), 1)
+
+
+def route_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+  """(g, E) router logits -> (gates (g, E) with only top-k nonzero,
+  topk idx (g, k)).  Gates renormalized over the selected experts."""
+  probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+  top_vals, top_idx = jax.lax.top_k(probs, k)
+  top_vals = top_vals / jnp.maximum(
+      jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9)
+  gates = jnp.zeros_like(probs)
+  gates = jax.vmap(lambda g, i, v: g.at[i].set(v))(gates, top_idx, top_vals)
+  return gates, top_idx
+
+
+def _dispatch_combine(gates: jax.Array, top_idx: jax.Array, e: int,
+                      cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+  """GShard position assignment within one group.
+
+  gates: (g, E); top_idx: (g, k). Returns (dispatch (g, E, cap) bool-ish,
+  combine (g, E, cap) f32, load (E,) fraction routed per expert).
+  """
+  g, _ = gates.shape
+  k = top_idx.shape[1]
+  dispatch = jnp.zeros((g, e, cap), jnp.float32)
+  combine = jnp.zeros((g, e, cap), jnp.float32)
+  counts = jnp.zeros((e,), jnp.int32)
+  for rank in range(k):
+    idx = top_idx[:, rank]                       # (g,)
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)          # (g, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]    # (g, E)
+    counts = counts + jnp.sum(onehot, axis=0)
+    my_pos = jnp.sum(pos * onehot, axis=1)                    # (g,)
+    keep = my_pos < cap
+    dis = (jax.nn.one_hot(idx, e, dtype=jnp.float32)
+           * keep[:, None])[..., None] \
+        * jax.nn.one_hot(my_pos, cap, dtype=jnp.float32)[:, None, :]
+    dispatch = dispatch + dis
+    gate_r = jnp.take_along_axis(gates, idx[:, None], axis=1)[:, 0]
+    combine = combine + dis * gate_r[:, None, None]
+  load = jnp.mean(jnp.sum(dispatch, axis=(0, 2)) / max(g, 1))
+  return dispatch, combine, load
+
+
+def apply_moe_dense(params: Dict, x: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+  """Exact (capacity-free) MoE for single-token decode: compute every
+  expert, combine with renormalized top-k gates.  Decode is weight-
+  streaming-bound, so the extra FLOPs are roofline-negligible while the
+  result matches the router exactly."""
+  b, d = x.shape[0], x.shape[-1]
+  dt = x.dtype
+  flat = x.reshape(-1, d)
+  logits = jnp.einsum("td,de->te", flat, params["router"].astype(dt))
+  gates, _ = route_topk(logits, cfg.n_experts_active)      # (t, E)
+  h = jnp.einsum("td,edf->tef", flat, params["wi"].astype(dt))
+  if cfg.mlp_variant == "swiglu":
+    g = jnp.einsum("td,edf->tef", flat, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+  else:
+    h = mlp_act(h, cfg.mlp_variant)
+  eo = jnp.einsum("tef,efd->ted", h, params["wo"].astype(dt))
+  out = jnp.einsum("te,ted->td", gates.astype(dt), eo).reshape(x.shape)
+  if cfg.n_shared_experts:
+    out = out + apply_mlp(params["shared"], x, cfg)
+  return out, jnp.zeros((), jnp.float32)
+
+
+def apply_moe(params: Dict, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+  """x: (B, S, d) -> (out, aux_loss). Capacity-grouped top-k MoE."""
+  if x.ndim == 3 and x.shape[1] == 1:
+    return apply_moe_dense(params, x, cfg)
+  b, s, d = x.shape
+  dt = x.dtype
+  tokens = x.reshape(b * s, d)
+  gsz = min(cfg.moe_group_size, b * s)
+  n_groups = (b * s) // gsz
+  assert n_groups * gsz == b * s, (b, s, gsz)
+  xg = tokens.reshape(n_groups, gsz, d)
+
+  logits = jnp.einsum("gtd,de->gte", xg, params["router"].astype(dt))
+  gates, top_idx = jax.vmap(lambda lg: route_topk(lg, cfg.n_experts_active)
+                            )(logits)
+  cap = _capacity(gsz, cfg.n_experts_active, cfg.n_experts,
+                  cfg.capacity_factor)
+  dispatch, combine, _ = jax.vmap(
+      lambda gt, ti: _dispatch_combine(gt, ti, cfg.n_experts, cap)
+  )(gates, top_idx)
+
+  # aux load-balancing loss (Switch): E * sum_e f_e * p_e
+  me = jnp.mean(gates, axis=(0, 1))                       # (E,)
+  ce = jnp.mean(jnp.sum(dispatch, axis=-1), axis=(0, 1))  # (E,)
+  aux = cfg.n_experts * jnp.sum(me * ce)
+
+  expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xg)
+  h = jnp.einsum("gecd,edf->gecf", expert_in, params["wi"].astype(dt))
+  if cfg.mlp_variant == "swiglu":
+    gate = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(dt))
+    h = jax.nn.silu(gate) * h
+  else:
+    h = mlp_act(h, cfg.mlp_variant)
+  expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+  out = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), expert_out)
+  out = out.reshape(b, s, d)
+
+  if cfg.n_shared_experts:
+    out = out + apply_mlp(params["shared"], x, cfg)
+  return out, aux

@@ -1,0 +1,60 @@
+"""Unified model facade: build_model(cfg) -> Model with a stable API.
+
+  init(key)                      -> params
+  train_loss(params, batch)      -> (loss, metrics)
+  init_cache(batch, max_len)     -> decode cache
+  prefill(params, batch, max_len)-> (last logits, cache)
+  decode_step(params, tok, cache)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+  cfg: ModelConfig
+  init: Callable
+  train_loss: Callable
+  init_cache: Callable
+  prefill: Callable
+  decode_step: Callable
+
+
+def build_model(cfg: ModelConfig) -> Model:
+  if cfg.family == "encdec":
+    return Model(
+        cfg=cfg,
+        init=lambda key: encdec.init_params(cfg, key),
+        train_loss=lambda params, batch, remat=True: encdec.train_loss(
+            params, batch, cfg, remat=remat),
+        init_cache=lambda batch, max_len: encdec.init_cache(
+            cfg, batch, max_len),
+        prefill=lambda params, batch, max_len: encdec.prefill(
+            params, batch, cfg, max_len),
+        decode_step=lambda params, tok, cache: encdec.decode_step(
+            params, tok, cache, cfg),
+    )
+
+  def _prefill(params, batch, max_len):
+    tokens = batch["tokens"] if isinstance(batch, dict) else batch
+    return transformer.prefill(params, tokens, cfg, max_len)
+
+  return Model(
+      cfg=cfg,
+      init=lambda key: transformer.init_params(cfg, key),
+      train_loss=lambda params, batch, remat=True: transformer.train_loss(
+          params, batch, cfg, remat=remat),
+      init_cache=lambda batch, max_len: transformer.init_cache(
+          cfg, batch, max_len),
+      prefill=_prefill,
+      decode_step=lambda params, tok, cache: transformer.decode_step(
+          params, tok, cache, cfg),
+  )

@@ -1,0 +1,380 @@
+"""State-space blocks: Mamba (Jamba's selective SSM) and RWKV-6.
+
+Both use chunked formulations so the sequence dimension is processed in
+MXU-friendly blocks with a small carried state — the TPU-native adaptation
+of the CUDA selective-scan kernels (see DESIGN.md):
+
+  Mamba: outer lax.scan over chunks; within a chunk an associative scan
+  solves the diagonal linear recurrence (log-depth, bounded memory).
+  RWKV6: the same stable log-decay chunk math as kernels/rwkv6_scan (the
+  Pallas kernel is the TPU compute path; this pure-jnp version is the
+  SPMD-partitionable model path and doubles as its oracle).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Jamba flavour)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+  d, di, ds = cfg.d_model, cfg.d_inner, cfg.mamba_d_state
+  dt_rank = max(d // 16, 1)
+  ks = jax.random.split(key, 8)
+  return {
+      "in_proj": dense_init(ks[0], d, 2 * di),
+      "conv_w": jax.random.normal(ks[1], (cfg.mamba_d_conv, di),
+                                  jnp.float32) * 0.2,
+      "conv_b": jnp.zeros((di,), jnp.float32),
+      "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds),
+      "dt_proj": dense_init(ks[3], dt_rank, di),
+      "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+          jax.random.uniform(ks[4], (di,), jnp.float32, 1e-3, 1e-1))),
+      "a_log": jnp.log(jnp.broadcast_to(
+          jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, ds)) + 0.0),
+      "d_skip": jnp.ones((di,), jnp.float32),
+      "out_proj": dense_init(ks[5], di, d, scale=0.5),
+      "norm": jnp.ones((di,), jnp.float32),  # jamba: RMSNorm before out_proj
+  }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           b: jax.Array) -> jax.Array:
+  """x (B, L, C), w (K, C): causal depthwise conv along L."""
+  k = w.shape[0]
+  xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+  out = jnp.zeros_like(x)
+  for i in range(k):
+    out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+  return out + b[None, None, :]
+
+
+def _ssm_chunk_scan(u, dt, bmat, cmat, a, chunk: int):
+  """Diagonal selective-SSM over (B, L, di) with state (B, di, N).
+
+  Outer scan over L/chunk chunks carrying h; within a chunk an associative
+  scan solves h_t = dA_t * h_{t-1} + dBu_t (elementwise in (di, N)).
+  Returns y (B, L, di).
+  """
+  b, l, di = u.shape
+  n = bmat.shape[-1]
+  nchunks = l // chunk
+  uc = u.reshape(b, nchunks, chunk, di)
+  dtc = dt.reshape(b, nchunks, chunk, di)
+  bc = bmat.reshape(b, nchunks, chunk, n)
+  cc = cmat.reshape(b, nchunks, chunk, n)
+
+  # checkpoint: the per-chunk (B, C, di, N) discretization tensors would
+  # otherwise be saved for backward for EVERY chunk of EVERY layer in a
+  # rematted block (§Perf jamba iteration 3: ~400 GB of temp); with the
+  # checkpoint only the (B, di, N) chunk carries survive.
+  @jax.checkpoint
+  def per_chunk(h, inp):
+    u_, dt_, b_, c_ = inp                     # (B, C, di) / (B, C, N)
+    da = jnp.exp(dt_[..., None] * a[None, None])          # (B, C, di, N)
+    dbu = (dt_ * u_)[..., None] * b_[:, :, None, :]       # (B, C, di, N)
+    # prepend the carried state as a virtual step: h_0 = 1 * h + 0
+    da_full = jnp.concatenate(
+        [jnp.ones((b, 1, di, n), da.dtype), da], axis=1)
+    dbu_full = jnp.concatenate([h[:, None], dbu], axis=1)
+
+    def combine(x, y):
+      a1, b1 = x
+      a2, b2 = y
+      return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (da_full, dbu_full), axis=1)
+    hs = hs[:, 1:]                                        # (B, C, di, N)
+    y = jnp.einsum("bcdn,bcn->bcd", hs, c_)
+    return hs[:, -1], y
+
+  xs = (jnp.moveaxis(uc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+  h0 = jnp.zeros((b, di, n), jnp.float32)
+  _, ys = jax.lax.scan(per_chunk, h0, xs)
+  return jnp.moveaxis(ys, 0, 1).reshape(b, l, di)
+
+
+def apply_mamba(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+  """x (B, L, d) -> (B, L, d). Training/prefill path."""
+  b, l, d = x.shape
+  dt_rank = max(d // 16, 1)
+  di, ds = cfg.d_inner, cfg.mamba_d_state
+  dtt = x.dtype
+  xz = jnp.einsum("bld,de->ble", x, params["in_proj"].astype(dtt))
+  xs, z = jnp.split(xz, 2, axis=-1)
+  xs = _causal_depthwise_conv(xs, params["conv_w"].astype(dtt),
+                              params["conv_b"].astype(dtt))
+  xs = jax.nn.silu(xs)
+  proj = jnp.einsum("bld,de->ble", xs, params["x_proj"].astype(dtt))
+  dt_in, bmat, cmat = jnp.split(
+      proj, [dt_rank, dt_rank + ds], axis=-1)
+  dt = jax.nn.softplus(
+      jnp.einsum("blr,rd->bld", dt_in, params["dt_proj"].astype(dtt))
+      .astype(jnp.float32) + params["dt_bias"][None, None])
+  a = -jnp.exp(params["a_log"])
+  pad = (-l) % cfg.ssm_chunk
+  if pad:
+    xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+    dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+    c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+  else:
+    xs_p, dt_p, b_p, c_p = xs, dt, bmat, cmat
+  y = _ssm_chunk_scan(xs_p.astype(jnp.float32), dt_p,
+                      b_p.astype(jnp.float32), c_p.astype(jnp.float32),
+                      a, cfg.ssm_chunk)[:, :l]
+  y = y + xs.astype(jnp.float32) * params["d_skip"][None, None]
+  # jamba: RMSNorm on the ssm output before gating/out projection
+  var = jnp.mean(y * y, axis=-1, keepdims=True)
+  y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"][None, None]
+  y = y.astype(dtt) * jax.nn.silu(z)
+  return jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(dtt))
+
+
+def mamba_decode_step(params: Dict, x: jax.Array, cache: Dict,
+                      cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+  """x (B, d) single token; cache: {"h": (B, di, N), "conv": (B, K-1, di)}."""
+  b, d = x.shape
+  dt_rank = max(d // 16, 1)
+  ds = cfg.mamba_d_state
+  dtt = x.dtype
+  xz = jnp.einsum("bd,de->be", x, params["in_proj"].astype(dtt))
+  xs, z = jnp.split(xz, 2, axis=-1)
+  # conv over the cached window
+  conv_in = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)
+  w = params["conv_w"].astype(dtt)
+  xs = jnp.sum(conv_in * w[None], axis=1) + params["conv_b"].astype(dtt)
+  xs = jax.nn.silu(xs)
+  proj = jnp.einsum("be,ef->bf", xs, params["x_proj"].astype(dtt))
+  dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+  dt = jax.nn.softplus(
+      jnp.einsum("br,rd->bd", dt_in, params["dt_proj"].astype(dtt))
+      .astype(jnp.float32) + params["dt_bias"][None])
+  a = -jnp.exp(params["a_log"])
+  da = jnp.exp(dt[..., None] * a[None])                  # (B, di, N)
+  dbu = (dt * xs.astype(jnp.float32))[..., None] * \
+      bmat.astype(jnp.float32)[:, None, :]
+  h = da * cache["h"] + dbu
+  y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32))
+  y = y + xs.astype(jnp.float32) * params["d_skip"][None]
+  var = jnp.mean(y * y, axis=-1, keepdims=True)
+  y = y * jax.lax.rsqrt(var + 1e-6) * params["norm"][None]
+  y = y.astype(dtt) * jax.nn.silu(z)
+  out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(dtt))
+  new_cache = {"h": h, "conv": conv_in[:, 1:, :]}
+  return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> Dict:
+  return {
+      "h": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+      "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner),
+                        jnp.bfloat16 if cfg.dtype == "bfloat16"
+                        else jnp.float32),
+  }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg: ModelConfig) -> Dict:
+  d, dff = cfg.d_model, cfg.d_ff
+  h, hd = cfg.n_heads, cfg.head_dim
+  dt_rank = max(d // 16, 1)
+  ks = jax.random.split(key, 12)
+  return {
+      # time mix
+      "mix": 0.5 * jnp.ones((5, d), jnp.float32),   # r, k, v, g, w lerps
+      "wr": dense_init(ks[0], d, h * hd),
+      "wk": dense_init(ks[1], d, h * hd),
+      "wv": dense_init(ks[2], d, h * hd),
+      "wg": dense_init(ks[3], d, h * hd),
+      "wo": dense_init(ks[4], h * hd, d, scale=0.5),
+      "w0": -6.0 + jax.random.normal(ks[5], (h * hd,), jnp.float32) * 0.3,
+      "w_lora_a": dense_init(ks[6], d, dt_rank),
+      "w_lora_b": dense_init(ks[7], dt_rank, h * hd, scale=0.1),
+      "u": jax.random.normal(ks[8], (h, hd), jnp.float32) * 0.3,
+      "ln_x": jnp.ones((h, hd), jnp.float32),       # per-head group norm
+      # channel mix
+      "cmix": 0.5 * jnp.ones((2, d), jnp.float32),  # r, k lerps
+      "cm_wr": dense_init(ks[9], d, d),
+      "cm_wk": dense_init(ks[10], d, dff),
+      "cm_wv": dense_init(ks[11], dff, d, scale=0.5),
+  }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array = None) -> jax.Array:
+  """x (B, L, d) -> previous token per position (zeros / `prev` at t=0)."""
+  shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+  if prev is not None:
+    shifted = shifted.at[:, 0].set(prev)
+  return shifted
+
+
+def wkv6_chunked(r, k, v, w, u, s0, chunk: int):
+  """Stable chunked WKV6 (same math as kernels/rwkv6_scan, pure jnp).
+
+  r/k/v/w: (B, H, T, D); u: (H, D); s0: (B, H, D, D).
+  Returns (out (B, H, T, D) f32, s_final).
+  """
+  b, h, t, dd = r.shape
+  pad = (-t) % chunk
+  if pad:
+    z = jnp.zeros((b, h, pad, dd), r.dtype)
+    r = jnp.concatenate([r, z], axis=2)
+    k = jnp.concatenate([k, z], axis=2)
+    v = jnp.concatenate([v, z], axis=2)
+    w = jnp.concatenate([w, jnp.ones((b, h, pad, dd), w.dtype)], axis=2)
+  tt = t + pad
+  nc = tt // chunk
+  mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+  def to_chunks(x):  # (B, H, T, D) -> (nc, B, H, C, D) for scan
+    return jnp.moveaxis(x.reshape(b, h, nc, chunk, dd).astype(jnp.float32),
+                        2, 0)
+
+  def chunk_step(s, inp):
+    rc, kc, vc, wc = inp                                  # (B, H, C, D)
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    la = jnp.cumsum(logw, axis=2)                         # inclusive
+    la_prev = la - logw
+    la_last = la[:, :, -1:, :]
+    # carried-state term
+    rq = rc * jnp.exp(la_prev)
+    o = jnp.einsum("bhtd,bhde->bhte", rq, s)
+    # intra-chunk pairwise term (exponents are <= 0: stable)
+    decay = jnp.exp(la_prev[:, :, :, None, :] - la[:, :, None, :, :])
+    scores = jnp.einsum("bhtd,bhjd,bhtjd->bhtj", rc, kc, decay)
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    o = o + jnp.einsum("bhtj,bhjd->bhtd", scores, vc)
+    rd = jnp.sum(rc * u[None, :, None, :] * kc, axis=-1, keepdims=True)
+    o = o + rd * vc
+    # state update
+    kd = kc * jnp.exp(la_last - la)
+    s = jnp.exp(la_last[:, :, 0, :])[..., None] * s + \
+        jnp.einsum("bhtd,bhte->bhde", kd, vc)
+    return s, o
+
+  s_final, outs = jax.lax.scan(
+      chunk_step, s0.astype(jnp.float32),
+      (to_chunks(r), to_chunks(k), to_chunks(v), to_chunks(w)))
+  out = jnp.moveaxis(outs, 0, 2).reshape(b, h, tt, dd)[:, :, :t]
+  return out, s_final
+
+
+def _rwkv_wkv_inputs(params, x, x_prev, cfg: ModelConfig):
+  """Shared mixing/projection for train + decode paths."""
+  dtt = x.dtype
+  mix = params["mix"].astype(dtt)
+  xr = x + (x_prev - x) * mix[0]
+  xk = x + (x_prev - x) * mix[1]
+  xv = x + (x_prev - x) * mix[2]
+  xg = x + (x_prev - x) * mix[3]
+  xw = x + (x_prev - x) * mix[4]
+  r = jnp.einsum("...d,de->...e", xr, params["wr"].astype(dtt))
+  k = jnp.einsum("...d,de->...e", xk, params["wk"].astype(dtt))
+  v = jnp.einsum("...d,de->...e", xv, params["wv"].astype(dtt))
+  g = jax.nn.silu(jnp.einsum("...d,de->...e", xg, params["wg"].astype(dtt)))
+  # data-dependent decay (the v6 "Finch" feature)
+  lora = jnp.einsum("...r,re->...e",
+                    jnp.tanh(jnp.einsum("...d,dr->...r", xw,
+                                        params["w_lora_a"].astype(dtt))),
+                    params["w_lora_b"].astype(dtt))
+  w = jnp.exp(-jnp.exp(params["w0"].astype(jnp.float32)
+                       + lora.astype(jnp.float32)))
+  return r, k, v, g, w
+
+
+def apply_rwkv_time_mix(params: Dict, x: jax.Array, cfg: ModelConfig,
+                        state: Dict = None) -> jax.Array:
+  """x (B, L, d) -> (B, L, d)."""
+  b, l, d = x.shape
+  h, hd = cfg.n_heads, cfg.head_dim
+  dtt = x.dtype
+  x_prev = _token_shift(x)
+  r, k, v, g, w = _rwkv_wkv_inputs(params, x, x_prev, cfg)
+
+  def heads(t):  # (B, L, h*hd) -> (B, H, L, hd)
+    return jnp.moveaxis(t.reshape(b, l, h, hd), 2, 1)
+
+  s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+  out, _ = wkv6_chunked(heads(r), heads(k), heads(v), heads(w),
+                        params["u"], s0, cfg.ssm_chunk)
+  # per-head group norm, then gate + out proj
+  var = jnp.mean(out * out, axis=-1, keepdims=True)
+  out = out * jax.lax.rsqrt(var + 1e-6) * \
+      params["ln_x"][None, :, None, :]
+  out = jnp.moveaxis(out, 1, 2).reshape(b, l, h * hd).astype(dtt) * g
+  return jnp.einsum("ble,ed->bld", out, params["wo"].astype(dtt))
+
+
+def apply_rwkv_channel_mix(params: Dict, x: jax.Array,
+                           cfg: ModelConfig) -> jax.Array:
+  dtt = x.dtype
+  x_prev = _token_shift(x)
+  cmix = params["cmix"].astype(dtt)
+  xr = x + (x_prev - x) * cmix[0]
+  xk = x + (x_prev - x) * cmix[1]
+  r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr,
+                                params["cm_wr"].astype(dtt)))
+  k = jnp.einsum("...d,df->...f", xk, params["cm_wk"].astype(dtt))
+  k = jnp.square(jax.nn.relu(k))
+  return r * jnp.einsum("...f,fd->...d", k, params["cm_wv"].astype(dtt))
+
+
+def rwkv_decode_step(params: Dict, x: jax.Array, cache: Dict,
+                     cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+  """Single token x (B, d); cache {"s": (B,H,D,D), "tm_prev": (B, d),
+  "cm_prev": (B, d)} per layer. Applies time mix ONLY (channel mix handled
+  by the caller with cm_prev)."""
+  b, d = x.shape
+  h, hd = cfg.n_heads, cfg.head_dim
+  from repro.kernels.rwkv6_scan.ops import wkv6_decode_step
+  r, k, v, g, w = _rwkv_wkv_inputs(params, x, cache["tm_prev"], cfg)
+
+  def heads(t):
+    return t.reshape(b, h, hd)
+
+  o, s_new = wkv6_decode_step(heads(r).astype(jnp.float32),
+                              heads(k).astype(jnp.float32),
+                              heads(v).astype(jnp.float32),
+                              heads(w).astype(jnp.float32),
+                              params["u"], cache["s"])
+  var = jnp.mean(o * o, axis=-1, keepdims=True)
+  o = o * jax.lax.rsqrt(var + 1e-6) * params["ln_x"][None]
+  o = o.reshape(b, h * hd).astype(x.dtype) * g
+  out = jnp.einsum("be,ed->bd", o, params["wo"].astype(x.dtype))
+  return out, {**cache, "s": s_new, "tm_prev": x}
+
+
+def rwkv_channel_decode(params: Dict, x: jax.Array, prev: jax.Array,
+                        cfg: ModelConfig) -> jax.Array:
+  dtt = x.dtype
+  cmix = params["cmix"].astype(dtt)
+  xr = x + (prev - x) * cmix[0]
+  xk = x + (prev - x) * cmix[1]
+  r = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, params["cm_wr"].astype(dtt)))
+  k = jnp.square(jax.nn.relu(
+      jnp.einsum("bd,df->bf", xk, params["cm_wk"].astype(dtt))))
+  return r * jnp.einsum("bf,fd->bd", k, params["cm_wv"].astype(dtt))
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> Dict:
+  dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+  return {
+      "s": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                     jnp.float32),
+      "tm_prev": jnp.zeros((batch, cfg.d_model), dt),
+      "cm_prev": jnp.zeros((batch, cfg.d_model), dt),
+  }

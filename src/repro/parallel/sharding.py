@@ -1,0 +1,340 @@
+"""Sharding rules: params + activations over the (pod, data, model) mesh.
+
+Strategy (MaxText-style 2-D sharding):
+  * batch dims            -> ("pod", "data") combined ("dp" axes)
+  * attention heads / d_ff / experts' ff / vocab -> "model" (TP)
+  * optimizer state       -> additionally sharded over "data" when the
+    param's TP-complement dim divides (ZeRO-1); see train/optimizer.py
+  * adaptive divisibility: a dim shards on an axis only when divisible —
+    otherwise it falls through to replication (e.g. MQA's kv_heads=1,
+    whisper's 8 heads on a 16-way model axis).
+
+`constrain` is the activation-annotation hook models call; it is a no-op
+unless a mesh context is installed (launchers install one), so models and
+tests run unmodified on a single device.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# sharding profile: "2d" = FSDP("data") x TP("model") [default];
+# "fsdp" = pure FSDP over every mesh axis (no tensor parallelism; the
+# "model" axis becomes extra data/param parallelism).  The §Perf hillclimb
+# for collective-bound training cells switches profiles.
+_PROFILE = "2d"
+
+
+def set_profile(profile: str) -> None:
+  global _PROFILE
+  assert profile in ("2d", "fsdp"), profile
+  _PROFILE = profile
+
+
+def get_profile() -> str:
+  return _PROFILE
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+  """The data-parallel axes present in the mesh ('pod' extends DP)."""
+  if _PROFILE == "fsdp":
+    return tuple(a for a in ("pod", "data", "model")
+                 if a in mesh.axis_names)
+  return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+class MeshContext:
+  """Installs a mesh so `constrain` becomes active inside jit traces."""
+
+  def __init__(self, mesh: Optional[Mesh]):
+    self.mesh = mesh
+
+  def __enter__(self):
+    _STATE.mesh = self.mesh
+    if self.mesh is not None:
+      self._mgr = self.mesh
+      self._mgr.__enter__()
+    return self
+
+  def __exit__(self, *exc):
+    if self.mesh is not None:
+      self._mgr.__exit__(*exc)
+    _STATE.mesh = None
+    return False
+
+
+def active_mesh() -> Optional[Mesh]:
+  return getattr(_STATE, "mesh", None)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+  """with_sharding_constraint if a mesh is active, identity otherwise.
+
+  spec entries: None, an axis name, a tuple of axis names, or the sentinel
+  "dp" which expands to the mesh's data-parallel axes.
+  """
+  mesh = active_mesh()
+  if mesh is None:
+    return x
+  resolved = []
+  for s in spec:
+    if s == "dp":
+      axes = dp_axes(mesh)
+      resolved.append(axes if len(axes) > 1 else
+                      (axes[0] if axes else None))
+    elif _PROFILE == "fsdp" and s == "model":
+      resolved.append(None)  # no TP under the pure-FSDP profile
+    else:
+      resolved.append(s)
+  # drop axes that would not divide
+  fixed = []
+  for dim, s in zip(x.shape, resolved):
+    size = _axes_size(mesh, s)
+    fixed.append(s if size and dim % size == 0 else None)
+  return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def _axes_size(mesh: Mesh, s) -> int:
+  if s is None:
+    return 1
+  if isinstance(s, str):
+    return mesh.shape[s]
+  size = 1
+  for a in s:
+    size *= mesh.shape[a]
+  return size
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+# rule table: (path regex, spec builder taking ndim) — first match wins.
+# Paths look like "blocks/sub0/mix/wq", "embed", "blocks/sub1/ffn/wi", ...
+# Stacked block params have a leading layer axis -> spec gets None prepended.
+
+def _spec_for(path: str, shape: Tuple[int, ...],
+              stacked: bool) -> Tuple[Optional[Any], ...]:
+  """2-D (FSDP x TP) rules; the leading stacked-layer axis never shards.
+
+  Matmul weights shard the TP-natural dim on "model" and the other dim on
+  "data" (ZeRO-3 / FSDP: XLA all-gathers the "data" shard per layer inside
+  the scan).  Without this, jamba-1.5-large's 398B params (797 GB bf16)
+  cannot fit 16 GB/chip at TP=16; 2-D sharding gives 3.1 GB/chip.
+  """
+  body_shape = shape[1:] if stacked else shape
+
+  def out(*tail):
+    tail = list(tail) + [None] * (len(body_shape) - len(tail))
+    return (None, *tail) if stacked else tuple(tail)
+
+  name = path.split("/")[-1]
+  if path in ("embed", "lm_head_t"):
+    return out("model", "data")              # (V, d)
+  if name == "lm_head":
+    return out("data", "model")              # (d, V)
+  if name == "pos_embed":
+    return out(None, "data")
+  # attention projections
+  if name in ("wq", "wkv"):                  # (d, H*hd) / (d, 2*Hkv*hd)
+    return out("data", "model")
+  if name == "wo" and "mix" in path:         # (H*hd, d)
+    return out("model", "data")
+  # mlp
+  if name in ("wi", "wg"):                   # (d, ff) or (E, d, ff)
+    if len(body_shape) == 3:
+      return out(None, "data", "model")
+    return out("data", "model")
+  if name == "wo" and len(body_shape) == 3:  # experts (E, ff, d)
+    return out(None, "model", "data")
+  if name == "wo":                           # (ff, d)
+    return out("model", "data")
+  # mamba
+  if name == "in_proj":                      # (d, 2*di)
+    return out("data", "model")
+  if name == "out_proj":                     # (di, d)
+    return out("model", "data")
+  if name in ("conv_w",):                    # (K, di)
+    return out(None, "model")
+  if name in ("conv_b", "dt_bias", "d_skip", "norm") and "mix" in path:
+    return out("model")
+  if name == "x_proj":                       # (di, dt_rank + 2N)
+    return out("model", "data")
+  if name == "dt_proj":                      # (dt_rank, di)
+    return out("data", "model")
+  if name == "a_log":                        # (di, N)
+    return out("model", None)
+  # rwkv
+  if name in ("wr", "wk", "wv", "wg") and "mix" in path:
+    return out("data", "model")
+  if name == "w_lora_a":
+    return out("data", None)
+  if name == "w_lora_b":
+    return out(None, "model")
+  if name in ("w0",):
+    return out("model")
+  if name in ("u", "ln_x"):                  # (H, hd)
+    return out("model", None)
+  if name == "cm_wr":
+    return out("data", "model")
+  if name == "cm_wk":
+    return out("data", "model")
+  if name == "cm_wv":
+    return out("model", "data")
+  if name == "router":
+    return out("data", None)
+  return out()
+
+
+def _check_divisibility(spec, shape, mesh: Mesh):
+  fixed = []
+  for dim, s in zip(shape, spec):
+    if s is None:
+      fixed.append(None)
+      continue
+    size = _axes_size(mesh, s)
+    fixed.append(s if dim % size == 0 else None)
+  return tuple(fixed)
+
+
+def param_specs(params, mesh: Mesh, stacked_prefixes=("blocks",)
+                ) -> Any:
+  """PartitionSpec tree matching a params pytree (adaptive divisibility)."""
+  def spec_one(path_parts, leaf):
+    path = "/".join(str(p) for p in path_parts)
+    stacked = any(path.startswith(pref) for pref in stacked_prefixes)
+    raw = _spec_for(path, leaf.shape, stacked)
+    raw = raw[: len(leaf.shape)]
+    return P(*_check_divisibility(raw, leaf.shape, mesh))
+
+  def walk(node, path):
+    if isinstance(node, dict):
+      return {k: walk(v, path + (k,)) for k, v in node.items()}
+    return spec_one(path, node)
+
+  return walk(params, ())
+
+
+def shardings_for(params, mesh: Mesh):
+  specs = param_specs(params, mesh)
+  return jax.tree_util.tree_map(
+      lambda s: NamedSharding(mesh, s), specs,
+      is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+  axes = dp_axes(mesh)
+  lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+  return P(lead, *([None] * (ndim - 1)))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+  return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state and decode-cache specs
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(params, mesh: Mesh, quantized: bool):
+  """Specs for AdamW state. Non-quantized m/v mirror the param specs;
+  int8 state is blocked along the LAST axis (shape-preserving), so codes
+  reuse the param's spec verbatim and scales reuse it minus the last dim
+  — the optimizer update stays collective-free (see optimizer._q8)."""
+  pspecs = param_specs(params, mesh)
+  if not quantized:
+    return {"step": P(), "m": pspecs, "v": pspecs}
+
+  flat_p, tdef = jax.tree_util.tree_flatten(params)
+  flat_s = tdef.flatten_up_to(pspecs)
+
+  def q_spec(p, spec):
+    parts = tuple(spec)
+    parts = parts + (None,) * (len(p.shape) - len(parts))
+    code_spec = _check_divisibility(parts, p.shape, mesh)
+    scale_spec = code_spec[:-1] + (None,) if code_spec else ()
+    return {"codes": P(*code_spec), "scale": P(*scale_spec)}
+
+  qtree = tdef.unflatten([q_spec(p, s) for p, s in zip(flat_p, flat_s)])
+  return {"step": P(), "m": qtree, "v": qtree}
+
+
+def train_state_specs(state_shapes, mesh: Mesh, quantized_opt: bool = False):
+  """Spec tree for {"params", "opt"} train state."""
+  return {
+      "params": param_specs(state_shapes["params"], mesh),
+      "opt": opt_state_specs(state_shapes["params"], mesh, quantized_opt),
+  }
+
+
+def cache_specs(cache_shapes, mesh: Mesh, batch: int):
+  """Spec tree for a decode cache pytree (stacked leading layer axis).
+
+  Batch shards on the dp axes when divisible; for batch=1 (long-context
+  decode) attention caches shard their SEQUENCE dim on "data" instead
+  (sequence-parallel cache).  Heads shard on "model" when divisible, else
+  head_dim (the contraction all-reduces over "model").
+  """
+  dp = dp_axes(mesh)
+  dp_size = 1
+  for a in dp:
+    dp_size *= mesh.shape[a]
+  dp_lead = dp if len(dp) > 1 else (dp[0] if dp else None)
+  batch_ok = batch % dp_size == 0
+  mdl = mesh.shape.get("model", 1)
+  data = mesh.shape.get("data", 1)
+
+  def spec_one(path_parts, leaf):
+    name = str(path_parts[-1])
+    shape = leaf.shape
+    if len(shape) == 0:
+      return P()
+    sp = [None] * len(shape)
+    # layout: (L, B, ...) for stacked layer caches
+    bdim = 1 if str(path_parts[0]) == "layers" else 0
+    if len(shape) > bdim and batch_ok and shape[bdim] == batch:
+      sp[bdim] = dp_lead
+    if name in ("k", "v", "k_codes", "v_codes", "cross_k", "cross_v"):
+      hdim, sdim, ddim = bdim + 1, bdim + 2, bdim + 3
+      if shape[hdim] % mdl == 0:
+        sp[hdim] = "model"
+      elif shape[ddim] % mdl == 0:
+        sp[ddim] = "model"
+      if not batch_ok and shape[sdim] % data == 0:
+        sp[sdim] = "data"
+    elif name in ("k_scale", "v_scale"):
+      hdim, sdim = bdim + 1, bdim + 2
+      if shape[hdim] % mdl == 0:
+        sp[hdim] = "model"
+      if not batch_ok and shape[sdim] % data == 0:
+        sp[sdim] = "data"
+    elif name == "h":                     # mamba (L, B, di, N)
+      if shape[bdim + 1] % mdl == 0:
+        sp[bdim + 1] = "model"
+    elif name == "conv":                  # (L, B, K-1, di)
+      if shape[bdim + 2] % mdl == 0:
+        sp[bdim + 2] = "model"
+    elif name == "s":                     # rwkv (L, B, H, D, D)
+      if shape[bdim + 1] % mdl == 0:
+        sp[bdim + 1] = "model"
+    return P(*sp)
+
+  def walk(node, path):
+    if isinstance(node, dict):
+      return {k: walk(v, path + (k,)) for k, v in node.items()}
+    return spec_one(path, node)
+
+  return walk(cache_shapes, ())
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+  return jax.tree_util.tree_map(
+      lambda s: NamedSharding(mesh, s), spec_tree,
+      is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+"""Framework-level quantization policies (QAT + deploy codecs)."""
+from repro.quant.policy import QuantPolicy, fake_quant_params, pack_params

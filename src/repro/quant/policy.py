@@ -1,0 +1,105 @@
+"""Framework-level quantization policy: QUIDAM's PE-type axis applied to
+any model in the zoo.
+
+QAT path: `fake_quant_params` rewrites weight leaves with straight-through
+fake quantization matching a PE type (FP32 / INT16 / INT8 / INT4 /
+LightPE-1 / LightPE-2) — model code is untouched; the policy operates on
+the parameter pytree by path pattern.
+
+Deploy path: `pack_params` converts matmul weights to the packed HBM
+codecs consumed by kernels/pow2_matmul and kernels/int8_matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Params = Any
+
+# Param-path patterns considered "matmul weights" (quantizable). Norms,
+# biases, embeddings-by-default, scalars stay full precision.
+_DEFAULT_PATTERNS = (
+    r".*/(wq|wkv|wo|wi|wg|wr|wk|wv|cm_wk|cm_wv|cm_wr|in_proj|out_proj|"
+    r"x_proj|dt_proj)$",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+  pe_type: str = "FP32"            # no-op default
+  quantize_embeddings: bool = False
+  act_quant: bool = False          # 8/16-bit activation fake-quant
+  patterns: Tuple[str, ...] = _DEFAULT_PATTERNS
+
+  @property
+  def enabled(self) -> bool:
+    return self.pe_type != "FP32"
+
+
+def _matches(path: str, policy: QuantPolicy) -> bool:
+  for pat in policy.patterns:
+    if re.match(pat, path):
+      return True
+  if policy.quantize_embeddings and path.endswith("embed"):
+    return True
+  return False
+
+
+def _walk(params, fn, path=()):
+  if isinstance(params, dict):
+    return {k: _walk(v, fn, path + (str(k),)) for k, v in params.items()}
+  return fn("/".join(path), params)
+
+
+def fake_quant_params(params: Params, policy: QuantPolicy) -> Params:
+  """QAT: replace weight leaves with fake-quantized versions (STE grads)."""
+  if not policy.enabled:
+    return params
+
+  def maybe_q(path, leaf):
+    if leaf.ndim < 2 or not _matches(path, policy):
+      return leaf
+    # stacked block leaves: (layers, ..., d_in, d_out) -> channel axis -1
+    return quant.fake_quant_for_pe(leaf, policy.pe_type, channel_axis=-1)
+
+  return _walk(params, maybe_q)
+
+
+def deploy_bytes_per_param(pe_type: str) -> float:
+  """HBM bytes per weight under each deploy codec."""
+  return {"FP32": 4.0, "INT16": 2.0, "INT8": 1.0, "INT4": 0.5,
+          "LightPE-1": 0.5, "LightPE-2": 1.0}[pe_type]
+
+
+def pack_params(params: Params, policy: QuantPolicy) -> Params:
+  """Deploy: convert matmul weights to packed codecs (serving path).
+
+  LightPE-1/INT4 -> packed nibbles; LightPE-2/INT8 -> uint8/int8 codes.
+  Returns a tree where quantized leaves become {"codes", "scale", "fmt"}.
+  """
+  if not policy.enabled:
+    return params
+
+  def pack(path, leaf):
+    if leaf.ndim < 2 or not _matches(path, policy):
+      return leaf
+    w2 = leaf.reshape(-1, leaf.shape[-1]) if leaf.ndim > 2 else leaf
+    if policy.pe_type in ("LightPE-1", "LightPE-2"):
+      k = 1 if policy.pe_type == "LightPE-1" else 2
+      q = quant.pow2_quantize(w2, k=k, channel_axis=1)
+      codes = quant.pack_nibbles(q.codes) if k == 1 else q.codes
+      return {"codes": codes, "scale": q.scale, "fmt": f"pow2_{k}",
+              "shape": leaf.shape}
+    bits = {"INT16": 16, "INT8": 8, "INT4": 4}[policy.pe_type]
+    q = quant.int_quantize(w2, bits=bits, channel_axis=1)
+    codes = quant.pack_int4(q.codes) if bits == 4 else q.codes
+    return {"codes": codes, "scale": q.scale, "fmt": f"int{bits}",
+            "shape": leaf.shape}
+
+  return _walk(params, pack)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, train step, checkpointing, fault
+tolerance, trainer loop."""

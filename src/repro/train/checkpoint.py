@@ -1,0 +1,115 @@
+"""Checkpointing: atomic, resumable, keep-last-k, async-capable.
+
+Format: one .npz per checkpoint holding every leaf (flattened paths) +
+a JSON manifest (step, rng, data cursor, tree structure). Writes go to a
+temp file + os.replace for atomicity (a crash mid-write never corrupts
+the latest checkpoint — the fault-tolerance contract).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree, path=()):
+  if isinstance(tree, dict):
+    out = {}
+    for k, v in tree.items():
+      out.update(_flatten(v, path + (str(k),)))
+    return out
+  return {"/".join(path): tree}
+
+
+def _unflatten(flat: Dict[str, Any]):
+  root: Dict[str, Any] = {}
+  for path, leaf in flat.items():
+    parts = path.split("/")
+    node = root
+    for p in parts[:-1]:
+      node = node.setdefault(p, {})
+    node[parts[-1]] = leaf
+  return root
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Params,
+                    extra: Optional[Dict] = None, keep: int = 3,
+                    background: bool = False) -> str:
+  """Atomically write checkpoint `step`; prune to the newest `keep`."""
+  os.makedirs(ckpt_dir, exist_ok=True)
+  flat = _flatten(state)
+  host = {k: np.asarray(v) for k, v in flat.items()}
+
+  def write():
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+      np.savez(f, **host)
+    os.replace(tmp, path)
+    manifest = {"step": step, "extra": extra or {},
+                "leaves": sorted(host.keys())}
+    mpath = os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
+    with open(mpath + ".tmp", "w") as f:
+      json.dump(manifest, f)
+    os.replace(mpath + ".tmp", mpath)
+    _prune(ckpt_dir, keep)
+
+  if background:
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+  write()
+  return os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+
+
+def _prune(ckpt_dir: str, keep: int):
+  steps = list_checkpoints(ckpt_dir)
+  for s in steps[:-keep] if keep else []:
+    for ext in (".npz", ".json"):
+      p = os.path.join(ckpt_dir, f"ckpt_{s:08d}{ext}")
+      if os.path.exists(p):
+        os.remove(p)
+
+
+def list_checkpoints(ckpt_dir: str) -> List[int]:
+  if not os.path.isdir(ckpt_dir):
+    return []
+  out = []
+  for name in os.listdir(ckpt_dir):
+    m = re.match(r"ckpt_(\d+)\.npz$", name)
+    if m:
+      # only count checkpoints whose manifest exists (fully committed)
+      if os.path.exists(os.path.join(ckpt_dir,
+                                     f"ckpt_{int(m.group(1)):08d}.json")):
+        out.append(int(m.group(1)))
+  return sorted(out)
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       shardings: Optional[Params] = None
+                       ) -> Tuple[int, Params, Dict]:
+  """Restore the latest (or given) checkpoint; optionally device_put with
+  the provided sharding tree (elastic restarts reshard here)."""
+  steps = list_checkpoints(ckpt_dir)
+  if not steps:
+    raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+  step = step if step is not None else steps[-1]
+  with np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")) as data:
+    flat = {k: data[k] for k in data.files}
+  with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
+    manifest = json.load(f)
+  state = _unflatten(flat)
+  if shardings is not None:
+    flat_sh = _flatten(shardings)
+    state = _unflatten({
+        k: jax.device_put(v, flat_sh[k]) if k in flat_sh else jnp.asarray(v)
+        for k, v in flat.items()})
+  return step, state, manifest.get("extra", {})

@@ -1,0 +1,151 @@
+"""Fault tolerance for 1000+ node runs.
+
+Three mechanisms:
+
+1. `StragglerMonitor` — per-host step-time telemetry with EWMA + robust
+   z-score detection; the policy hook decides (log / exclude-host /
+   checkpoint-and-rescale).  At pod scale this feeds the cluster manager;
+   here it is driven by the trainer loop and fully unit-tested.
+
+2. `ElasticMeshPlanner` — given a degraded healthy-device count, picks the
+   best (data, model) re-factorization (keeps TP degree if possible,
+   shrinks DP; global batch held by raising grad-accumulation), producing
+   a plan the launcher uses to re-mesh and reshard from the latest
+   checkpoint (restore_checkpoint already reshards to arbitrary meshes).
+
+3. `retrying` — wraps the jitted step so transient device errors trigger
+   bounded retries, then a checkpoint-restore escalation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HostStats:
+  ewma: float = 0.0
+  var: float = 0.0
+  count: int = 0
+
+
+class StragglerMonitor:
+  """EWMA-based straggler detection over per-host step durations."""
+
+  def __init__(self, alpha: float = 0.2, z_threshold: float = 3.0,
+               min_samples: int = 5):
+    self.alpha = alpha
+    self.z = z_threshold
+    self.min_samples = min_samples
+    self.hosts: Dict[str, HostStats] = {}
+
+  def record(self, host: str, step_seconds: float) -> None:
+    st = self.hosts.setdefault(host, HostStats())
+    if st.count == 0:
+      st.ewma = step_seconds
+    delta = step_seconds - st.ewma
+    st.ewma += self.alpha * delta
+    st.var = (1 - self.alpha) * (st.var + self.alpha * delta * delta)
+    st.count += 1
+
+  def fleet_median(self) -> float:
+    vals = sorted(s.ewma for s in self.hosts.values() if s.count)
+    return vals[len(vals) // 2] if vals else 0.0
+
+  def stragglers(self) -> List[str]:
+    """Hosts whose EWMA step time exceeds fleet median by z * fleet std."""
+    med = self.fleet_median()
+    if med <= 0:
+      return []
+    devs = [abs(s.ewma - med) for s in self.hosts.values()
+            if s.count >= self.min_samples]
+    if not devs:
+      return []
+    mad = sorted(devs)[len(devs) // 2] or 1e-9
+    out = []
+    for h, s in self.hosts.items():
+      if s.count >= self.min_samples and (s.ewma - med) / (1.4826 * mad) \
+          > self.z:
+        out.append(h)
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-meshing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+  data: int
+  model: int
+  pods: int
+  microbatch_scale: int   # grad-accum multiplier to keep the global batch
+
+  @property
+  def devices(self) -> int:
+    return self.pods * self.data * self.model
+
+
+class ElasticMeshPlanner:
+  """Re-factorize the mesh after failures.
+
+  Policy: keep the TP ("model") degree — param shardings stay valid and
+  TP degree is capacity-critical — shrink DP to the largest size that fits
+  the healthy-device count, and scale gradient accumulation so the global
+  batch is unchanged.
+  """
+
+  def __init__(self, model_parallel: int, global_batch: int,
+               batch_per_dp: int):
+    self.model_parallel = model_parallel
+    self.global_batch = global_batch
+    self.batch_per_dp = batch_per_dp
+
+  def plan(self, healthy_devices: int,
+           pods: int = 1) -> Optional[MeshPlan]:
+    per_pod = healthy_devices // pods
+    dp = per_pod // self.model_parallel
+    if dp < 1:
+      return None
+    # DP must divide the per-step batch; shrink to a divisor
+    while dp > 1 and (self.global_batch % (dp * pods)) != 0:
+      dp -= 1
+    orig_dp = self.global_batch // self.batch_per_dp
+    scale = max(1, int(math.ceil(orig_dp / (dp * pods))))
+    return MeshPlan(data=dp, model=self.model_parallel, pods=pods,
+                    microbatch_scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# retry wrapper
+# ---------------------------------------------------------------------------
+
+class StepFailure(RuntimeError):
+  pass
+
+
+def retrying(step_fn: Callable, max_retries: int = 2,
+             on_failure: Optional[Callable[[int, Exception], None]] = None,
+             retry_exceptions: Tuple = (RuntimeError,)) -> Callable:
+  """Wrap a step function with bounded retries on transient errors."""
+
+  def wrapped(*args, **kwargs):
+    last: Optional[Exception] = None
+    for attempt in range(max_retries + 1):
+      try:
+        return step_fn(*args, **kwargs)
+      except retry_exceptions as e:  # pragma: no cover - exercised in tests
+        last = e
+        if on_failure:
+          on_failure(attempt, e)
+        time.sleep(0.01 * (2 ** attempt))
+    raise StepFailure(
+        f"step failed after {max_retries + 1} attempts") from last
+
+  return wrapped

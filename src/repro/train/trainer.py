@@ -1,0 +1,92 @@
+"""Trainer loop: data pipeline + jitted step + checkpointing + telemetry.
+
+Wires the fault-tolerance substrate together: every step is timed into the
+StragglerMonitor, checkpoints are atomic + pruned, the data cursor is
+checkpointed so restarts are exactly resumable, and a retry wrapper guards
+against transient step failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import DataCursor
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import train_step as ts_lib
+from repro.train.fault_tolerance import StragglerMonitor, retrying
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+  total_steps: int = 100
+  log_every: int = 10
+  ckpt_every: int = 50
+  ckpt_dir: str = "/tmp/repro_ckpt"
+  keep_ckpts: int = 3
+  host_name: str = "host0"
+  max_step_retries: int = 1
+
+
+class Trainer:
+  def __init__(self, model: Model, tcfg: ts_lib.TrainConfig,
+               trainer_cfg: TrainerConfig,
+               batches: Iterator[Dict[str, np.ndarray]],
+               cursor: Optional[DataCursor] = None,
+               key: Optional[jax.Array] = None):
+    self.model = model
+    self.tcfg = tcfg
+    self.cfg = trainer_cfg
+    self.batches = batches
+    self.cursor = cursor or DataCursor()
+    self.monitor = StragglerMonitor()
+    self.history: List[Dict[str, float]] = []
+    key = key if key is not None else jax.random.PRNGKey(0)
+    self.state = ts_lib.make_train_state(model, tcfg, key)
+    self._step_fn = retrying(ts_lib.jit_train_step(model, tcfg),
+                             max_retries=trainer_cfg.max_step_retries)
+    self.step = 0
+
+  # -- checkpoint integration --------------------------------------------
+  def maybe_restore(self) -> bool:
+    steps = ckpt_lib.list_checkpoints(self.cfg.ckpt_dir)
+    if not steps:
+      return False
+    step, state, extra = ckpt_lib.restore_checkpoint(self.cfg.ckpt_dir)
+    self.state = jax.tree_util.tree_map(jnp.asarray, state)
+    self.step = step
+    self.cursor.step = extra.get("data_step", step)
+    return True
+
+  def save(self):
+    ckpt_lib.save_checkpoint(
+        self.cfg.ckpt_dir, self.step, self.state,
+        extra={"data_step": self.cursor.step}, keep=self.cfg.keep_ckpts)
+
+  # -- the loop ------------------------------------------------------------
+  def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+    steps = steps if steps is not None else self.cfg.total_steps
+    for _ in range(steps):
+      batch = next(self.batches)
+      batch = {k: jnp.asarray(v) for k, v in batch.items()}
+      t0 = time.perf_counter()
+      self.state, metrics = self._step_fn(self.state, batch)
+      loss = float(metrics["loss"])
+      dt = time.perf_counter() - t0
+      self.monitor.record(self.cfg.host_name, dt)
+      self.step += 1
+      rec = {"step": self.step, "loss": loss, "sec": dt,
+             "lr": float(metrics.get("lr", 0.0))}
+      self.history.append(rec)
+      if self.step % self.cfg.log_every == 0:
+        print(f"step {self.step:5d} loss {loss:.4f} "
+              f"({dt*1e3:.0f} ms)", flush=True)
+      if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
+        self.save()
+    return self.history

@@ -1,0 +1,207 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.int8_matmul import ops as i8_ops
+from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.pow2_matmul import ops as pow2_ops
+from repro.kernels.quant_decode_attn import ops as attn_ops
+from repro.kernels.rwkv6_scan import ops as wkv_ops
+
+
+class TestPow2Matmul:
+  @pytest.mark.parametrize("k_terms", [1, 2])
+  @pytest.mark.parametrize("shape", [(4, 96, 130), (128, 128, 128),
+                                     (257, 300, 514), (1, 64, 64)])
+  @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+  def test_vs_oracle(self, k_terms, shape, dtype):
+    m, k, n = shape
+    key = jax.random.PRNGKey(m * n + k_terms)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), dtype)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+    pw = pow2_ops.quantize_weights(w, k_terms=k_terms)
+    got = pow2_ops.pow2_matmul(x, pw, interpret=True)
+    want = pow2_ops.pow2_matmul_reference(x, pw)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.max(jnp.abs(got - want))
+                / (jnp.max(jnp.abs(want)) + 1e-9))
+    assert err < tol, err
+
+  def test_hbm_bytes_savings(self):
+    w = jax.random.normal(jax.random.PRNGKey(0), (512, 512)) * 0.1
+    p1 = pow2_ops.quantize_weights(w, 1)
+    p2 = pow2_ops.quantize_weights(w, 2)
+    dense = 512 * 512 * 2  # bf16
+    assert p1.hbm_bytes < dense / 3.5   # ~4x (+ scales)
+    assert p2.hbm_bytes < dense / 1.9   # ~2x
+
+  def test_batched_leading_dims(self):
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 96)) * 0.1
+    pw = pow2_ops.quantize_weights(w, 1)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 64))
+    out = pow2_ops.pow2_matmul(x, pw, interpret=True)
+    assert out.shape == (2, 3, 96)
+
+
+class TestInt8Matmul:
+  @pytest.mark.parametrize("shape", [(5, 64, 70), (128, 128, 128),
+                                     (200, 384, 250)])
+  def test_kernel_exact_vs_ref_on_codes(self, shape):
+    """Kernel vs oracle on IDENTICAL quantized inputs: bit-exact."""
+    m, k, n = shape
+    key = jax.random.PRNGKey(m + n)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n)) * 0.1
+    W = i8_ops.quantize_weights(w)
+    xq, xs = i8_ops.quantize_activations(x)
+    from repro.kernels import common
+    xq_p, m0 = common.pad_to(xq, 0, common.BM)
+    xq_p, _ = common.pad_to(xq_p, 1, common.BK)
+    xs_p, _ = common.pad_to(xs.reshape(-1), 0, common.BM)
+    wq, _ = common.pad_to(W.codes, 0, common.BK)
+    wq, _ = common.pad_to(wq, 1, common.BN)
+    ws, _ = common.pad_to(W.scale, 0, common.BN)
+    got = int8_matmul_pallas(xq_p, wq, xs_p, ws, interpret=True)[:m0, :n]
+    want = int8_matmul_ref(xq, W.codes, xs.reshape(-1), W.scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+  def test_end_to_end_close_to_float(self):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (32, 256))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (256, 128)) * 0.05
+    W = i8_ops.quantize_weights(w)
+    got = i8_ops.int8_matmul(x, W, interpret=True)
+    ref = x @ w
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.02, rel
+
+
+class TestQuantDecodeAttn:
+  @pytest.mark.parametrize("dims", [(2, 8, 4, 512, 64, 500),
+                                    (1, 4, 1, 300, 128, 130),
+                                    (3, 6, 6, 1024, 64, 1024),
+                                    (2, 4, 2, 64, 64, 1)])
+  def test_vs_oracle(self, dims):
+    b, h, hkv, s, d, length = dims
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    kc, ksc, vc, vsc = attn_ops.quantize_kv(k, v)
+    lens = jnp.full((b,), length, jnp.int32)
+    got = attn_ops.quant_decode_attn(q, kc, ksc, vc, vsc, lens,
+                                     interpret=True)
+    want = attn_ops.quant_decode_attn_reference(q, kc, ksc, vc, vsc, lens)
+    err = float(jnp.max(jnp.abs(got - want))
+                / (jnp.max(jnp.abs(want)) + 1e-9))
+    assert err < 2e-5, err
+
+  def test_int8_kv_close_to_fp(self):
+    """int8 KV attention stays within ~1% of full-precision attention."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, h, s, d = 2, 4, 256, 64
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, h, s, d))
+    v = jax.random.normal(ks[2], (b, h, s, d))
+    kc, ksc, vc, vsc = attn_ops.quantize_kv(k, v)
+    lens = jnp.full((b,), s, jnp.int32)
+    got = attn_ops.quant_decode_attn_reference(q, kc, ksc, vc, vsc, lens)
+    from repro.models.attention import decode_attention
+    ref = decode_attention(q, k, v, lens)
+    rel = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.01, rel
+
+
+class TestWkv6:
+  @pytest.mark.parametrize("dims", [(2, 4, 128, 64, 64), (1, 2, 100, 32, 32),
+                                    (2, 3, 256, 64, 16)])
+  def test_vs_sequential_oracle(self, dims):
+    b, h, t, d, chunk = dims
+    ks = jax.random.split(jax.random.PRNGKey(sum(dims)), 6)
+    r = jax.random.normal(ks[0], (b, h, t, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, d))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, h, t, d))))
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    s0 = jax.random.normal(ks[5], (b, h, d, d)) * 0.1
+    go, gs = wkv_ops.wkv6(r, k, v, w, u, s0, interpret=True, chunk=chunk)
+    wo, ws = wkv_ops.wkv6_reference(r, k, v, w, u, s0)
+    assert float(jnp.max(jnp.abs(go - wo))
+                 / (jnp.max(jnp.abs(wo)) + 1e-9)) < 2e-5
+    assert float(jnp.max(jnp.abs(gs - ws))
+                 / (jnp.max(jnp.abs(ws)) + 1e-9)) < 2e-5
+
+  @given(st.integers(0, 10_000))
+  @settings(max_examples=8, deadline=None)
+  def test_property_random_decay(self, seed):
+    """Arbitrary decays in (0,1): chunked == sequential."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    b, h, t, d = 1, 2, 48, 16
+    r, k, v = (jax.random.normal(ks[i], (b, h, t, d)) for i in range(3))
+    w = jax.random.uniform(ks[3], (b, h, t, d), minval=0.05, maxval=0.999)
+    u = jax.random.normal(ks[4], (h, d)) * 0.2
+    go, gs = wkv_ops.wkv6(r, k, v, w, u, interpret=True, chunk=16)
+    wo, ws = wkv_ops.wkv6_reference(r, k, v, w, u)
+    assert float(jnp.max(jnp.abs(go - wo))) < 1e-3 * float(
+        jnp.max(jnp.abs(wo)) + 1.0)
+
+  def test_decode_step_matches_kernel(self):
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, h, t, d = 1, 2, 8, 32
+    r, k, v = (jax.random.normal(ks[i], (b, h, t, d)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, h, t, d))))
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    state = jnp.zeros((b, h, d, d))
+    outs = []
+    for i in range(t):
+      o, state = wkv_ops.wkv6_decode_step(
+          r[:, :, i], k[:, :, i], v[:, :, i], w[:, :, i], u, state)
+      outs.append(o)
+    seq_o = jnp.stack(outs, axis=2)
+    ker_o, ker_s = wkv_ops.wkv6(r, k, v, w, u, interpret=True, chunk=8)
+    np.testing.assert_allclose(np.asarray(seq_o), np.asarray(ker_o),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(ker_s),
+                               rtol=1e-4, atol=1e-4)
+
+
+class TestFlashAttentionKernel:
+  @pytest.mark.parametrize("dims", [(2, 128, 4, 4, 64, True, 0),
+                                    (1, 300, 8, 2, 64, True, 0),
+                                    (2, 256, 4, 4, 32, False, 0),
+                                    (1, 256, 4, 2, 64, True, 64)])
+  def test_vs_oracle(self, dims):
+    from repro.kernels.flash_attention import ops as fa
+    b, s, h, hkv, d, causal, window = dims
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    got = fa.flash_attention(q, k, v, causal=causal, window=window,
+                             interpret=True, bq=64, bk=64)
+    want = fa.flash_attention_reference(q, k, v, causal=causal,
+                                        window=window)
+    err = float(jnp.max(jnp.abs(got - want))
+                / (jnp.max(jnp.abs(want)) + 1e-9))
+    assert err < 2e-5, err
+
+  def test_matches_model_attention_path(self):
+    """Kernel == the pure-JAX training attention (same math, two paths)."""
+    from repro.kernels.flash_attention import ops as fa
+    from repro.models.attention import flash_attention as model_fa
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    b, s, h, d = 1, 96, 4, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    got = fa.flash_attention(q, k, v, interpret=True, bq=32, bk=32)
+    want = model_fa(q, k, v, chunk_q=32, chunk_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,179 @@
+"""Per-arch smoke tests (reduced configs) + model-component tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, reduce_for_smoke
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.model import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B=2, S=32):
+  batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+           "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+  if cfg.family == "encdec":
+    batch["enc_frames"] = jax.random.normal(KEY, (B, 16, cfg.d_model))
+    batch["tokens"] = batch["tokens"][:, :8]
+    batch["labels"] = batch["labels"][:, :8]
+  if cfg.family == "vlm":
+    batch["img_embeds"] = jax.random.normal(
+        KEY, (B, cfg.n_image_tokens, cfg.d_model))
+  return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestSmoke:
+  """One reduced-config forward/train step per assigned architecture."""
+
+  def test_train_step_shapes_and_finite(self, arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    loss, metrics = jax.jit(lambda p, b: model.train_loss(p, b))(
+        params, _batch_for(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    assert float(metrics["tokens"]) > 0
+
+  def test_gradients_finite(self, arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    g = jax.jit(jax.grad(lambda p, b: model.train_loss(p, b)[0]))(
+        params, _batch_for(cfg))
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves)
+    # at least one nonzero gradient
+    assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "granite-34b", "qwen3-0.6b",
+                                  "minitron-4b", "whisper-base",
+                                  "rwkv6-1.6b", "pixtral-12b"])
+def test_decode_matches_prefill_exact(arch):
+  """Non-MoE archs: decode continuation == full-prefill logits."""
+  cfg = reduce_for_smoke(get_config(arch))
+  model = build_model(cfg)
+  params = model.init(KEY)
+  B, S, MAX = 2, 24, 48
+  toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+  batch = {"tokens": toks}
+  if cfg.family == "encdec":
+    batch["enc_frames"] = jax.random.normal(KEY, (B, 16, cfg.d_model))
+  logits0, cache = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+      params, batch)
+  nxt = jnp.argmax(logits0, -1).astype(jnp.int32)
+  logits1, _ = jax.jit(model.decode_step)(params, nxt, cache)
+  batch2 = dict(batch)
+  batch2["tokens"] = jnp.concatenate([toks, nxt[:, None]], 1)
+  logits_ref, _ = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+      params, batch2)
+  err = float(jnp.max(jnp.abs(logits1 - logits_ref))
+              / (jnp.max(jnp.abs(logits_ref)) + 1e-9))
+  assert err < 1e-4, err
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "qwen2-moe-a2.7b",
+                                  "jamba-1.5-large"])
+def test_decode_matches_prefill_moe_no_drops(arch):
+  """MoE archs match exactly when capacity dropping is disabled."""
+  cfg = dataclasses.replace(reduce_for_smoke(get_config(arch)),
+                            capacity_factor=8.0)
+  model = build_model(cfg)
+  params = model.init(KEY)
+  B, S, MAX = 2, 24, 48
+  toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+  logits0, cache = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+      params, {"tokens": toks})
+  nxt = jnp.argmax(logits0, -1).astype(jnp.int32)
+  logits1, _ = jax.jit(model.decode_step)(params, nxt, cache)
+  logits_ref, _ = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+      params, {"tokens": jnp.concatenate([toks, nxt[:, None]], 1)})
+  err = float(jnp.max(jnp.abs(logits1 - logits_ref))
+              / (jnp.max(jnp.abs(logits_ref)) + 1e-9))
+  assert err < 1e-4, err
+
+
+def test_quantized_kv_decode_close():
+  """int8 KV cache decode stays close to the fp cache decode."""
+  cfg = reduce_for_smoke(get_config("qwen3-0.6b"))
+  cfg8 = dataclasses.replace(cfg, kv_quant="int8")
+  m0, m8 = build_model(cfg), build_model(cfg8)
+  params = m0.init(KEY)
+  toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size)
+  l0, c0 = jax.jit(lambda p, b: m0.prefill(p, b, 48))(params,
+                                                      {"tokens": toks})
+  l8, c8 = jax.jit(lambda p, b: m8.prefill(p, b, 48))(params,
+                                                      {"tokens": toks})
+  nxt = jnp.argmax(l0, -1).astype(jnp.int32)
+  d0, _ = jax.jit(m0.decode_step)(params, nxt, c0)
+  d8, _ = jax.jit(m8.decode_step)(params, nxt, c8)
+  rel = float(jnp.linalg.norm(d8 - d0) / (jnp.linalg.norm(d0) + 1e-9))
+  assert rel < 0.05, rel
+  # and the argmax token usually agrees
+  agree = float(jnp.mean((jnp.argmax(d0, -1) == jnp.argmax(d8, -1))
+                         .astype(jnp.float32)))
+  assert agree >= 0.5
+
+
+class TestFlashAttention:
+  @pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                             (True, 16)])
+  def test_vs_dense_reference(self, causal, window):
+    b, s, h, d = 2, 48, 4, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          chunk_q=16, chunk_k=16)
+    # dense reference
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (d ** 0.5)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+      mask &= jnp.tril(jnp.ones((s, s), bool))
+    if window:
+      qi = jnp.arange(s)[:, None]
+      ki = jnp.arange(s)[None, :]
+      mask &= ki > qi - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    want = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+  def test_gqa_grouping(self):
+    b, s, h, hkv, d = 1, 32, 8, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    out = flash_attention(q, k, v, chunk_q=16, chunk_k=16)
+    assert out.shape == (b, s, h, d)
+    # kv heads repeat: groups of 4 query heads see the same k/v
+    kr = jnp.repeat(k, 4, axis=2)
+    vr = jnp.repeat(v, 4, axis=2)
+    want = flash_attention(q, kr, vr, chunk_q=16, chunk_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_param_counts_match_published():
+  expected = {"olmo-1b": 1.18e9, "granite-34b": 34.4e9, "qwen3-0.6b": 0.6e9,
+              "minitron-4b": 4.19e9, "mixtral-8x22b": 140.6e9,
+              "qwen2-moe-a2.7b": 14.3e9, "jamba-1.5-large": 398e9,
+              "rwkv6-1.6b": 1.6e9, "pixtral-12b": 12.2e9}
+  for arch, n in expected.items():
+    got = get_config(arch).param_count()
+    assert abs(got - n) / n < 0.05, (arch, got, n)
+
+
+def test_active_params_moe():
+  assert abs(get_config("mixtral-8x22b").param_count(active_only=True)
+             - 39e9) / 39e9 < 0.05
+  assert abs(get_config("jamba-1.5-large").param_count(active_only=True)
+             - 94e9) / 94e9 < 0.05

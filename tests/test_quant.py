@@ -1,0 +1,99 @@
+"""Unit + property tests for the quantization core (paper Eq. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+class TestPow2:
+  @pytest.mark.parametrize("k", [1, 2])
+  def test_roundtrip_idempotent(self, k):
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 64)) * 0.1
+    q = quant.pow2_quantize(w, k=k)
+    wh = quant.pow2_dequantize(q)
+    q2 = quant.pow2_quantize(wh, k=k, scale=q.scale)
+    assert jnp.allclose(quant.pow2_dequantize(q2), wh)
+
+  @pytest.mark.parametrize("k", [1, 2])
+  def test_codebook_values_exact(self, k):
+    vals, codes = quant.pow2_codebook(k)
+    # every codebook value must be representable exactly (sum of 2^-m)
+    vals = np.asarray(vals)
+    assert vals.min() >= 2.0 ** -quant.POW2_M_MAX
+    assert vals.max() <= 2.0
+    # k=1: 8 values; k=2: 36 values (m1 <= m2)
+    assert len(vals) == (8 if k == 1 else 36)
+
+  def test_k2_better_than_k1(self):
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    e1 = jnp.mean(jnp.abs(quant.pow2_dequantize(
+        quant.pow2_quantize(w, 1)) - w))
+    e2 = jnp.mean(jnp.abs(quant.pow2_dequantize(
+        quant.pow2_quantize(w, 2)) - w))
+    assert e2 < e1
+
+  @pytest.mark.parametrize("k", [1, 2])
+  def test_quantize_is_nearest_codebook_point(self, k):
+    """Property: the chosen code minimizes |w/s - v| over the codebook."""
+    w = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    q = quant.pow2_quantize(w, k=k, channel_axis=None)
+    vals, _ = quant.pow2_codebook(k)
+    a = np.asarray(w / q.scale).reshape(-1)
+    got = np.asarray(quant.pow2_decode_codes(q.codes, k)).reshape(-1)
+    vals = np.asarray(vals)
+    best = np.array([vals[np.argmin(np.abs(np.abs(x) - vals))]
+                     * np.sign(x) for x in a])
+    np.testing.assert_allclose(got, best, rtol=0, atol=0)
+
+  def test_ste_gradient_identity(self):
+    w = jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+    g = jax.grad(lambda w: jnp.sum(quant.pow2_fake_quant(w, 1) * 2.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 2.0)
+
+
+class TestIntQuant:
+  @pytest.mark.parametrize("bits", [4, 8, 16])
+  def test_error_bound(self, bits):
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 32))
+    q = quant.int_quantize(w, bits)
+    wh = quant.int_dequantize(q)
+    # error bounded by scale/2 per element
+    bound = np.asarray(jnp.broadcast_to(q.scale / 2, w.shape))
+    assert np.all(np.abs(np.asarray(wh - w)) <= bound + 1e-7)
+
+  def test_bits_ordering(self):
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 64))
+    errs = [float(jnp.mean(jnp.abs(quant.int_dequantize(
+        quant.int_quantize(w, b)) - w))) for b in (4, 8, 16)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+class TestPacking:
+  @given(st.integers(0, 2 ** 31 - 1))
+  @settings(max_examples=20, deadline=None)
+  def test_nibble_roundtrip(self, seed):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (4, 16), 0, 16
+                               ).astype(jnp.uint8)
+    assert jnp.all(quant.unpack_nibbles(quant.pack_nibbles(codes)) == codes)
+
+  @given(st.integers(0, 2 ** 31 - 1))
+  @settings(max_examples=20, deadline=None)
+  def test_int4_roundtrip(self, seed):
+    codes = jax.random.randint(jax.random.PRNGKey(seed), (4, 16), -8, 8
+                               ).astype(jnp.int8)
+    assert jnp.all(quant.unpack_int4(quant.pack_int4(codes)) == codes)
+
+
+class TestPolicy:
+  def test_fake_quant_tree_only_matmuls(self):
+    from repro.quant.policy import QuantPolicy, fake_quant_params
+    params = {"blocks": {"sub0": {"mix": {"wq": jnp.ones((4, 4))},
+                                  "mix_norm": {"scale": jnp.ones(4)}}}}
+    out = fake_quant_params(params, QuantPolicy(pe_type="LightPE-1"))
+    # norm untouched, wq quantized to pow2 grid
+    assert jnp.all(out["blocks"]["sub0"]["mix_norm"]["scale"] == 1.0)
+    wq = out["blocks"]["sub0"]["mix"]["wq"]
+    assert jnp.allclose(wq, 1.0)  # 1.0 = 2^0 exactly representable
