@@ -17,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import cnn, dse
+from repro.core import cnn
 from repro.core.pe import PAPER_PE_TYPES
+from repro.explore import pareto_mask
 from repro.data.synthetic import CifarLike, CifarLikeConfig
 from repro.train import optimizer as opt_lib
 
@@ -72,25 +73,24 @@ def table2_accuracy() -> None:
 
 def fig10_11_pareto_fronts() -> None:
   """Figs 10-11: accuracy vs perf-per-area / energy Pareto fronts."""
-  from benchmarks.paper_figures import _explorer
+  from benchmarks.paper_figures import _session
   from repro.core.workloads import get_network
   t0 = time.perf_counter()
   accs = {t: _train_qat("resnet20", t, steps=_STEPS)
           for t in PAPER_PE_TYPES}
-  ex = _explorer()
+  sess = _session()
   layers = get_network("resnet20")
-  res = ex.explore(layers, "resnet20", n_per_type=150, measure_oracle=0)
-  ppa_n, en_n = dse.normalized_metrics(res.points)
-  types = np.asarray([p.cfg.pe_type for p in res.points])
+  frame = sess.explore(layers, "resnet20", n_per_type=150)
+  ppa_n, en_n = frame.normalize(ref="best-int16")
   pts = []
   for t in PAPER_PE_TYPES:
-    m = types == t
+    m = frame.by_type(t)
     pts.append((t, accs[t], float(ppa_n[m].max()), float(en_n[m].min())))
   err = np.asarray([1 - a for (_, a, _, _) in pts])
   inv_ppa = np.asarray([1.0 / p for (_, _, p, _) in pts])
   en = np.asarray([e for (_, _, _, e) in pts])
-  front_ppa = dse.pareto_front(np.stack([err, inv_ppa], 1))
-  front_en = dse.pareto_front(np.stack([err, en], 1))
+  front_ppa = pareto_mask(np.stack([err, inv_ppa], 1))
+  front_en = pareto_mask(np.stack([err, en], 1))
   on_front_ppa = [pts[i][0] for i in range(len(pts)) if front_ppa[i]]
   on_front_en = [pts[i][0] for i in range(len(pts)) if front_en[i]]
   us = (time.perf_counter() - t0) * 1e6
@@ -104,20 +104,19 @@ def fig10_11_pareto_fronts() -> None:
 
 def fig12_coexploration() -> None:
   """Fig 12: joint HW x NN co-exploration fronts (supernet proxy)."""
-  from benchmarks.paper_figures import _explorer
-  from repro.core.coexplore import co_explore, normalize_and_front
+  from benchmarks.paper_figures import _session
   from repro.core.supernet import Supernet, SupernetConfig
   t0 = time.perf_counter()
   sn = Supernet(SupernetConfig(steps=80, batch=32, image_size=_IMG))
   sn.train(log_every=0)
   arch_accs = sn.sample_and_evaluate(n_archs=12, n_val=256)
-  ex = _explorer()
-  points = co_explore(ex.models, arch_accs, n_hw_per_type=8)
-  res = normalize_and_front(points)
-  on_front = set(res["types"][res["front_energy"]])
+  sess = _session()
+  frame = sess.co_explore(arch_accs, n_hw_per_type=8)
+  front = frame.pareto(cols=("top1_err", "energy_mj"))
+  on_front = set(str(t) for t in frame.pe_type[front])
   us = (time.perf_counter() - t0) * 1e6
   emit("fig12_coexploration", us,
-       f"pairs={len(points)};front_energy_types={'/'.join(sorted(on_front))};"
+       f"pairs={len(frame)};front_energy_types={'/'.join(sorted(on_front))};"
        f"acc_range={min(a for _, a in arch_accs):.3f}-"
        f"{max(a for _, a in arch_accs):.3f};"
        f"paper_claim=LightPEs_on_joint_front")

@@ -82,4 +82,49 @@ def serve_engine_throughput() -> None:
        f"requests={len(out)};tokens={total_tokens};kv_quant=int8")
 
 
-ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput]
+def explore_api_perf() -> None:
+  """repro.explore hot paths: vectorized Pareto at 50k points, backend
+  save/load round trip, and columnar evaluation throughput."""
+  import os
+  import tempfile
+
+  from repro.core.workloads import get_network
+  from repro.explore import DesignSpace, PolynomialBackend, pareto_mask
+
+  # 50k-point front extraction (front-heavy worst case for the old loop)
+  rng = np.random.RandomState(0)
+  theta = rng.uniform(0.0, np.pi / 2, 2000)
+  arc = np.stack([np.cos(theta), np.sin(theta)], axis=1)
+  fill = arc[rng.randint(0, len(arc), 48_000)] + rng.uniform(
+      0.01, 1.0, size=(48_000, 2))
+  pts = np.concatenate([arc, fill])[rng.permutation(50_000)]
+  t0 = time.perf_counter()
+  mask = pareto_mask(pts)
+  pareto_us = (time.perf_counter() - t0) * 1e6
+
+  # fit-once + save/load + batched evaluation
+  layers = get_network("resnet20")[:4]
+  backend = PolynomialBackend.fit(pe_types=("INT16",), degree=3, n_train=80,
+                                  layers=layers, seed=0)
+  cfgs = DesignSpace(pe_types=("INT16",)).sample_type("INT16", 5000, seed=1)
+  with tempfile.TemporaryDirectory() as d:
+    path = os.path.join(d, "models.npz")
+    t0 = time.perf_counter()
+    backend.save(path)
+    loaded = PolynomialBackend.load(path)
+    roundtrip_us = (time.perf_counter() - t0) * 1e6
+  t0 = time.perf_counter()
+  frame = loaded.evaluate(cfgs, layers, "resnet20-head")
+  eval_us = (time.perf_counter() - t0) * 1e6
+  orig = backend.evaluate(cfgs, layers, "x")
+  exact = bool(np.array_equal(frame.latency_s, orig.latency_s)
+               and np.array_equal(frame.power_mw, orig.power_mw)
+               and np.array_equal(frame.area_mm2, orig.area_mm2))
+  emit("explore_api_perf", pareto_us,
+       f"pareto_50k_us={pareto_us:.0f};front_size={int(mask.sum())};"
+       f"save_load_us={roundtrip_us:.0f};roundtrip_bit_identical={exact};"
+       f"eval_us_per_design={eval_us / len(frame):.1f}")
+
+
+ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput,
+       explore_api_perf]

@@ -3,52 +3,66 @@
 Each function prints `name,us_per_call,derived` rows (benchmarks.common)
 where `derived` carries the quantities the paper reports, so
 EXPERIMENTS.md can cite them directly.
+
+All exploration runs through ``repro.explore``: one ExplorationSession
+over a PolynomialBackend whose fit is cached on disk (fit-once across
+benchmark runs, never refit unless the fit spec changes).
 """
 from __future__ import annotations
 
+import os
 import time
-from typing import Dict, List
+from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import emit, time_call
-from repro.core import dse, oracle, ppa
+from benchmarks.common import emit
+from repro.core import oracle, ppa
 from repro.core.dataflow import AcceleratorConfig
 from repro.core.pe import PAPER_PE_TYPES
 from repro.core.workloads import get_network
+from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                           PolynomialBackend, summary_stats)
 
-_EXPLORER_CACHE: Dict[str, dse.DesignSpaceExplorer] = {}
+_CACHE_PATH = os.environ.get(
+    "QUIDAM_PPA_CACHE", os.path.join("results", "cache", "ppa_models.npz"))
+_SESSION: Optional[ExplorationSession] = None
 
 
-def _explorer(net: str = "all") -> dse.DesignSpaceExplorer:
-  if net not in _EXPLORER_CACHE:
-    # train the latency model across families so DSE never extrapolates
+def _session() -> ExplorationSession:
+  """Shared session: degree-5 models trained across workload families so
+  DSE never extrapolates; fitted once, persisted to _CACHE_PATH."""
+  global _SESSION
+  if _SESSION is None:
     layers = get_network("resnet20") + get_network("vgg16")
     t0 = time.perf_counter()
-    _EXPLORER_CACHE[net] = dse.DesignSpaceExplorer(
-        degree=5, n_train=240, layers=layers)
-    emit(f"fit_ppa_models[{net}]", (time.perf_counter() - t0) * 1e6,
-         "degree=5;n_train=240;per_pe_type=4")
-  return _EXPLORER_CACHE[net]
+    backend = PolynomialBackend.fit_or_load(
+        _CACHE_PATH, degree=5, n_train=240, layers=layers)
+    cache = "hit" if backend.loaded_from else "miss"
+    emit("fit_ppa_models[all]", (time.perf_counter() - t0) * 1e6,
+         f"degree=5;n_train=240;per_pe_type=4;cache={cache}")
+    _SESSION = ExplorationSession(backend, DesignSpace())
+  return _SESSION
 
 
 def fig4_dse_scatter() -> None:
   """Fig 4: perf/area vs energy spread across PE types/configs."""
-  ex = _explorer()
+  sess = _session()
   layers = get_network("resnet20")
   t0 = time.perf_counter()
-  res = ex.explore(layers, "resnet20", n_per_type=250, measure_oracle=0)
+  frame = sess.explore(layers, "resnet20", n_per_type=250)
   us = (time.perf_counter() - t0) * 1e6
-  ppa_n, en_n = dse.normalized_metrics(res.points)
+  ppa_n, en_n = frame.normalize(ref="best-int16")
   emit("fig4_dse_scatter", us,
-       f"n={len(res.points)};perf_area_spread={ppa_n.max()/ppa_n.min():.1f}x;"
+       f"n={len(frame)};perf_area_spread={ppa_n.max()/ppa_n.min():.1f}x;"
        f"energy_spread={en_n.max()/en_n.min():.1f}x;"
        f"paper=5x_and_35x_plus")
 
 
 def fig5_degree_selection() -> None:
   """Fig 5: k-fold-CV MAPE/RMSPE vs polynomial degree (power+area)."""
-  cfgs = ppa.sample_configs("INT16", 400, seed=0)
+  space = DesignSpace(pe_types=("INT16",))
+  cfgs = space.sample_type("INT16", 400, seed=0)
   x, p, a = ppa.power_area_dataset(cfgs)
   t0 = time.perf_counter()
   best_p, scores_p = ppa.select_degree(x, p, degrees=range(1, 9))
@@ -64,10 +78,12 @@ def fig5_degree_selection() -> None:
 def fig6_8_ppa_accuracy() -> None:
   """Figs 6-8: model-vs-oracle accuracy per PE type (held-out configs)."""
   layers = get_network("resnet20")
+  space = DesignSpace()
   for pe_type in PAPER_PE_TYPES:
-    models = ppa.fit_ppa_models(pe_type, degree=5, n_train=240,
-                                layers=layers, seed=7)
-    test = ppa.sample_configs(pe_type, 120, seed=991)
+    backend = PolynomialBackend.fit(pe_types=(pe_type,), degree=5,
+                                    n_train=240, layers=layers, seed=7)
+    models = backend.models[pe_type]
+    test = space.sample_type(pe_type, 120, seed=991)
     xt, pt, at = ppa.power_area_dataset(test)
     t0 = time.perf_counter()
     p_hat = models.power.predict(xt)
@@ -86,19 +102,18 @@ def fig6_8_ppa_accuracy() -> None:
 
 def fig9_pe_distributions() -> None:
   """Fig 9: normalized perf/area + energy distributions per PE type."""
-  ex = _explorer()
+  sess = _session()
   nets = ("vgg16", "resnet20", "resnet56")
   rows = []
   t0 = time.perf_counter()
   for net in nets:
     layers = get_network(net)
-    res = ex.explore(layers, net, n_per_type=150, measure_oracle=0)
-    ppa_n, en_n = dse.normalized_metrics(res.points)
-    types = np.asarray([p.cfg.pe_type for p in res.points])
+    frame = sess.explore(layers, net, n_per_type=150)
+    ppa_n, en_n = frame.normalize(ref="best-int16")
     for t in PAPER_PE_TYPES:
-      m = types == t
-      s1 = dse.distribution_stats(ppa_n[m])
-      s2 = dse.distribution_stats(en_n[m])
+      m = frame.by_type(t)
+      s1 = summary_stats(ppa_n[m])
+      s2 = summary_stats(en_n[m])
       rows.append(f"{net}/{t}:ppa_med={s1['median']:.2f},max={s1['max']:.2f}"
                   f",energy_med={s2['median']:.3f},min={s2['min']:.3f}")
   us = (time.perf_counter() - t0) * 1e6
@@ -118,16 +133,15 @@ def table3_clock() -> None:
 
 def table2_pareto_hw() -> None:
   """Table 2 (hardware columns): best perf/area + energy per PE type."""
-  ex = _explorer()
+  sess = _session()
   rows = []
   t0 = time.perf_counter()
   for net in ("vgg16", "resnet20", "resnet56"):
     layers = get_network(net)
-    res = ex.explore(layers, net, n_per_type=250, measure_oracle=0)
-    ppa_n, en_n = dse.normalized_metrics(res.points)
-    types = np.asarray([p.cfg.pe_type for p in res.points])
+    frame = sess.explore(layers, net, n_per_type=250)
+    ppa_n, en_n = frame.normalize(ref="best-int16")
     for t in PAPER_PE_TYPES:
-      m = types == t
+      m = frame.by_type(t)
       rows.append(f"{net}/{t}:ppa={ppa_n[m].max():.2f}x,"
                   f"energy={en_n[m].min():.3f}x")
   us = (time.perf_counter() - t0) * 1e6
@@ -144,16 +158,16 @@ def speedup_dse() -> None:
   the model-vs-synthesis ratio under a documented 4 h/design assumption
   (conservative: DC + VCS on these designs is typically longer).
   """
-  ex = _explorer()
+  sess = _session()
   layers = get_network("resnet20")
   cfgs = []
   for i, t in enumerate(PAPER_PE_TYPES):
-    cfgs += ppa.sample_configs(t, 500, seed=31 + i)
+    cfgs += sess.space.sample_type(t, 500, seed=31 + i)
   t0 = time.perf_counter()
-  dse.evaluate_with_models(ex.models, cfgs, layers, "resnet20")
+  sess.evaluate(cfgs, layers, "resnet20")
   t_model = time.perf_counter() - t0
   t1 = time.perf_counter()
-  dse.evaluate_with_oracle(cfgs[:20], layers, "resnet20")
+  OracleBackend().evaluate(cfgs[:20], layers, "resnet20")
   t_oracle = (time.perf_counter() - t1) / 20
   synth_hours = 4.0
   vs_synth = synth_hours * 3600 / (t_model / len(cfgs))

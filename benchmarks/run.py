@@ -1,7 +1,7 @@
 """Benchmark runner: one function per paper table/figure + framework perf.
 
 Prints ``name,us_per_call,derived`` CSV rows.
-Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+Usage: PYTHONPATH=src python -m benchmarks.run [--suite name] [--only substr]
 """
 from __future__ import annotations
 
@@ -12,13 +12,22 @@ import traceback
 
 def main() -> None:
   ap = argparse.ArgumentParser()
+  ap.add_argument("--suite", default="all",
+                  choices=("paper", "accuracy", "framework", "all"),
+                  help="benchmark module to run (default: all)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   args = ap.parse_args()
 
   from benchmarks import accuracy_experiments, framework_perf, paper_figures
-  benches = (paper_figures.ALL + accuracy_experiments.ALL
-             + framework_perf.ALL)
+  suites = {
+      "paper": paper_figures.ALL,
+      "accuracy": accuracy_experiments.ALL,
+      "framework": framework_perf.ALL,
+  }
+  benches = suites.get(args.suite) or (paper_figures.ALL
+                                       + accuracy_experiments.ALL
+                                       + framework_perf.ALL)
   print("name,us_per_call,derived")
   failures = 0
   for fn in benches:

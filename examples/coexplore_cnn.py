@@ -1,7 +1,7 @@
-"""Full co-exploration demo (paper Sec. 4.5 / Fig. 12): train the
-weight-sharing VGG supernet over the Table-4 space, sample + evaluate
-candidate architectures, pair with PPA-modeled hardware, and print the
-joint Pareto front.
+"""Full co-exploration demo (paper Sec. 4.5 / Fig. 12) via repro.explore:
+train the weight-sharing VGG supernet over the Table-4 space, sample +
+evaluate candidate architectures, pair with PPA-modeled hardware through
+an ExplorationSession, and print the joint Pareto front.
 
 Run: PYTHONPATH=src python examples/coexplore_cnn.py --steps 200
 """
@@ -9,9 +9,8 @@ import argparse
 
 import numpy as np
 
-from repro.core import dse
-from repro.core.coexplore import co_explore, normalize_and_front
 from repro.core.supernet import Supernet, SupernetConfig, space_size
+from repro.explore import ExplorationSession, PolynomialBackend
 
 
 def main():
@@ -31,16 +30,15 @@ def main():
 
   from repro.core.supernet import arch_to_layers
   layers = arch_to_layers(arch_accs[0][0])
-  explorer = dse.DesignSpaceExplorer(degree=5, n_train=200, layers=layers)
-  points = co_explore(explorer.models, arch_accs,
-                      n_hw_per_type=args.hw_per_type)
-  res = normalize_and_front(points)
-  front = res["front_energy"]
-  print(f"\n{len(points)} (HW, NN) pairs; energy-front breakdown:")
+  backend = PolynomialBackend.fit(degree=5, n_train=200, layers=layers)
+  session = ExplorationSession(backend)
+  frame = session.co_explore(arch_accs, n_hw_per_type=args.hw_per_type)
+  front = frame.pareto(cols=("top1_err", "energy_mj"))
+  print(f"\n{len(frame)} (HW, NN) pairs; energy-front breakdown:")
   for t in ("FP32", "INT16", "LightPE-2", "LightPE-1"):
-    n_front = int(np.sum(front & (res["types"] == t)))
+    n_front = int(np.sum(front & frame.by_type(t)))
     print(f"  {t:12s}: {n_front} points on the joint Pareto front")
-  lights = np.isin(res["types"][front], ("LightPE-1", "LightPE-2"))
+  lights = np.isin(frame.pe_type[front], ("LightPE-1", "LightPE-2"))
   print(f"\nLightPE share of the front: {lights.mean() * 100:.0f}% "
         "(paper: LightPEs consistently on the front)")
 

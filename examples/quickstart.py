@@ -1,32 +1,35 @@
-"""QUIDAM quickstart: fit PPA models, explore the design space, print the
-paper's headline comparison (LightPE vs INT16) in under a minute.
+"""QUIDAM quickstart via the unified repro.explore API: fit PPA models
+once, explore the design space, print the paper's headline comparison
+(LightPE vs INT16) in under a minute.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import dse
 from repro.core.workloads import get_network
+from repro.explore import DesignSpace, ExplorationSession, PolynomialBackend
 
 
 def main():
   layers = get_network("resnet20")
+  space = DesignSpace()
+  print(f"design space: {space!r}")
   print("Fitting power/area/latency polynomial models (4 PE types)...")
-  explorer = dse.DesignSpaceExplorer(degree=5, n_train=200, layers=layers)
-  res = explorer.explore(layers, "resnet20", n_per_type=200)
-  ppa_n, en_n = dse.normalized_metrics(res.points)
-  types = np.asarray([p.cfg.pe_type for p in res.points])
-  print(f"\n{len(res.points)} design points (ResNet-20), normalized to the "
+  backend = PolynomialBackend.fit(degree=5, n_train=200, layers=layers)
+  session = ExplorationSession(backend, space)
+  frame = session.explore(layers, "resnet20", n_per_type=200,
+                          measure_oracle=3)
+  ppa_n, en_n = frame.normalize(ref="best-int16")
+  print(f"\n{len(frame)} design points (ResNet-20), normalized to the "
         "best INT16 configuration:")
   print(f"{'PE type':12s} {'best perf/area':>15s} {'best energy':>12s}")
   for t in ("FP32", "INT16", "LightPE-2", "LightPE-1"):
-    m = types == t
+    m = frame.by_type(t)
     print(f"{t:12s} {ppa_n[m].max():14.2f}x {en_n[m].min():11.3f}x")
-  print(f"\nmodel eval: {res.seconds_model / len(res.points) * 1e6:.0f} "
-        f"us/design vs oracle {res.seconds_oracle_per_design * 1e3:.1f} "
+  print(f"\nmodel eval: {frame.meta['eval_us_per_design']:.0f} "
+        f"us/design vs oracle "
+        f"{frame.meta['oracle_seconds_per_design'] * 1e3:.1f} "
         "ms/design (vs hours for real synthesis)")
-  best = res.points[int(np.argmax(ppa_n))]
-  print(f"best design: {best.cfg}")
+  best = frame.top_k(1, by="perf_per_area")
+  print(f"best design: {best.cfgs[0]}")
 
 
 if __name__ == "__main__":

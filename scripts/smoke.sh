@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Pre-merge smoke: tier-1 tests + the paper-figure benchmark entry points.
+#
+# Usage:
+#   scripts/smoke.sh              # full paper benchmark suite
+#   SMOKE_ONLY=fig4 scripts/smoke.sh   # restrict benchmarks by substring
+#
+# The PPA-model fit is cached under results/cache/ppa_models.npz
+# (PolynomialBackend.fit_or_load), so repeat runs never refit.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== paper benchmarks =="
+python -m benchmarks.run --suite paper ${SMOKE_ONLY:+--only "$SMOKE_ONLY"}
+
+echo "== smoke OK =="

@@ -6,10 +6,13 @@ Quantization-aware DNN accelerator + model co-exploration:
   dataflow   row-stationary spatial-array dataflow model
   oracle     synthesis stand-in (Synopsys DC + VCS @ FreePDK45)
   ppa        polynomial PPA regression models + k-fold CV degree selection
-  dse        design-space exploration, Pareto fronts, normalization
+  dse        design-space exploration (compat shim over repro.explore)
   workloads  VGG/ResNet workloads + transformer-as-workload bridge
   supernet   weight-sharing VGG supernet accuracy proxy (Table 4 space)
-  coexplore  joint HW x NN co-exploration (Fig. 12)
+  coexplore  joint HW x NN co-exploration (compat shim over repro.explore)
+
+Exploration itself lives in :mod:`repro.explore` (DesignSpace,
+Oracle/Polynomial backends, columnar ResultFrame, ExplorationSession).
 """
 from repro.core.dataflow import AcceleratorConfig, ConvLayer
 from repro.core.pe import PAPER_PE_TYPES, PE_TYPES, pe_type

@@ -1,23 +1,28 @@
-"""DNN accelerator + model co-exploration (paper Sec. 4.5, Fig. 12).
+"""HW x NN co-exploration — COMPATIBILITY SHIM over ``repro.explore``.
 
-Pairs randomly sampled hardware configurations with supernet-evaluated
-candidate architectures: each (HW, NN) pair gets accuracy (weight-sharing
-proxy), energy (power x latency from the PPA models) and area; pairs are
-normalized against the minimum-energy / minimum-area INT16 pair and the
-joint Pareto front is extracted.
+The joint exploration of paper Sec. 4.5 / Fig. 12 now runs through
+:meth:`repro.explore.ExplorationSession.co_explore`, which shares the
+evaluation backends (and their memoized global-buffer composition) with
+plain DSE.  This module keeps the old list-of-CoPoint API working; new
+code should use the session + ResultFrame directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import dse, ppa as ppa_lib
+from repro.core import ppa as ppa_lib
 from repro.core.cnn import ArchChoice
 from repro.core.dataflow import AcceleratorConfig
 from repro.core.pe import PAPER_PE_TYPES
-from repro.core.supernet import Supernet, arch_to_layers
+from repro.explore.backend import PolynomialBackend
+from repro.explore.frame import ResultFrame, pareto_mask
+from repro.explore.session import ExplorationSession
+from repro.explore.space import DesignSpace
+
+__all__ = ["CoPoint", "co_explore", "normalize_and_front"]
 
 
 @dataclasses.dataclass
@@ -39,47 +44,46 @@ class CoPoint:
     return 1.0 - self.top1
 
 
+def _to_frame(points: Sequence[CoPoint]) -> ResultFrame:
+  pts = list(points)
+  return ResultFrame(
+      latency_s=np.asarray([p.latency_s for p in pts]),
+      power_mw=np.asarray([p.power_mw for p in pts]),
+      area_mm2=np.asarray([p.area_mm2 for p in pts]),
+      pe_type=np.asarray([p.cfg.pe_type for p in pts]),
+      cfgs=tuple(p.cfg for p in pts), network="coexplore",
+      extra={"top1": np.asarray([p.top1 for p in pts], np.float64),
+             "arch": np.asarray([p.arch for p in pts], dtype=object)})
+
+
 def co_explore(models: Dict[str, ppa_lib.PPAModels],
                arch_accs: Sequence[Tuple[ArchChoice, float]],
                n_hw_per_type: int = 20, seed: int = 3,
                image_size: int = 32,
                pe_types: Sequence[str] = PAPER_PE_TYPES) -> List[CoPoint]:
   """Random HW samples x supernet-evaluated archs -> joint design points."""
-  points: List[CoPoint] = []
-  for ti, pe_type in enumerate(pe_types):
-    cfgs = ppa_lib.sample_configs(pe_type, n_hw_per_type,
-                                  seed=seed + 17 * ti)
-    m = models[pe_type]
-    for arch, acc in arch_accs:
-      layers = arch_to_layers(arch, image_size=image_size)
-      lat = float(np.maximum(
-          m.predict_network_latency_s(cfgs, layers), 1e-9).mean())
-      # evaluate each cfg separately for the scatter
-      lats = np.maximum(m.predict_network_latency_s(cfgs, layers), 1e-9)
-      pwrs = np.maximum(m.predict_power_mw(cfgs), 1e-3)
-      areas = np.maximum(m.predict_area_mm2(cfgs), 1e-6)
-      from repro.core import oracle
-      pwrs = pwrs + np.asarray([oracle.gbuf_power_mw(c) for c in cfgs])
-      areas = areas + np.asarray([oracle.gbuf_area_mm2(c) for c in cfgs])
-      for c, l, p, a in zip(cfgs, lats, pwrs, areas):
-        points.append(CoPoint(c, arch, acc, float(l), float(p), float(a)))
-  return points
+  session = ExplorationSession(PolynomialBackend(models),
+                               DesignSpace(pe_types=tuple(pe_types)))
+  frame = session.co_explore(arch_accs, n_hw_per_type=n_hw_per_type,
+                             seed=seed, image_size=image_size)
+  return [CoPoint(cfg, arch, float(t1), float(l), float(p), float(a))
+          for cfg, arch, t1, l, p, a in zip(
+              frame.cfgs, frame.extra["arch"], frame.extra["top1"],
+              frame.latency_s, frame.power_mw, frame.area_mm2)]
 
 
 def normalize_and_front(points: Sequence[CoPoint]
                         ) -> Dict[str, np.ndarray]:
   """Fig. 12 processing: normalize energy/area to the min-energy/min-area
   INT16 pair; Pareto front on (top1_err, energy) and (top1_err, area)."""
-  int16 = [p for p in points if p.cfg.pe_type == "INT16"]
-  if not int16:
-    raise ValueError("need INT16 pairs for normalization")
-  e_ref = min(p.energy_mj for p in int16)
-  a_ref = min(p.area_mm2 for p in int16)
-  err = np.asarray([p.top1_err for p in points])
-  energy = np.asarray([p.energy_mj for p in points]) / e_ref
-  area = np.asarray([p.area_mm2 for p in points]) / a_ref
-  types = np.asarray([p.cfg.pe_type for p in points])
-  front_e = dse.pareto_front(np.stack([err, energy], axis=1))
-  front_a = dse.pareto_front(np.stack([err, area], axis=1))
-  return {"err": err, "energy": energy, "area": area, "types": types,
-          "front_energy": front_e, "front_area": front_a}
+  frame = _to_frame(points)
+  e_ref = float(frame.energy_mj[frame.reference_index("energy")])
+  a_ref = float(frame.area_mm2[frame.reference_index("area")])
+  err = frame.column("top1_err")
+  energy = frame.energy_mj / e_ref
+  area = frame.area_mm2 / a_ref
+  front_e = pareto_mask(np.stack([err, energy], axis=1))
+  front_a = pareto_mask(np.stack([err, area], axis=1))
+  return {"err": err, "energy": energy, "area": area,
+          "types": frame.pe_type, "front_energy": front_e,
+          "front_area": front_a}

@@ -1,76 +1,49 @@
-"""Design-space exploration and Pareto analysis (paper Secs. 3.3-4.5).
+"""Design-space exploration — COMPATIBILITY SHIM over ``repro.explore``.
 
-Evaluates accelerator design points — via the fast polynomial PPA models or
-the slow synthesis oracle — over DNN workloads, producing the paper's
-metrics:
+The exploration surface moved to the unified :mod:`repro.explore` package
+(declarative DesignSpace, pluggable OracleBackend/PolynomialBackend,
+columnar ResultFrame, ExplorationSession).  This module keeps the old
+names working as thin delegations:
 
-  performance            = 1 / latency            (Sec. 3.3)
-  performance per area   = perf / area
-  energy                 = power * latency        (per inference)
+  DesignPoint             -> repro.explore.DesignPoint (re-export)
+  evaluate_with_oracle    -> OracleBackend().evaluate(...).to_points()
+  evaluate_with_models    -> PolynomialBackend(models).evaluate(...)
+  pareto_front            -> repro.explore.pareto_mask (vectorized)
+  best_int16_reference    -> ResultFrame.reference_index
+  normalized_metrics      -> ResultFrame.normalize
+  distribution_stats      -> repro.explore.summary_stats
+  DesignSpaceExplorer     -> ExplorationSession + PolynomialBackend.fit
 
-with normalization against the *best INT16 configuration* (highest
-perf/area, resp. lowest energy), Pareto-front extraction, and distribution
-statistics (Fig. 9's violins).
+New code should import from :mod:`repro.explore` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import oracle
 from repro.core import ppa as ppa_lib
 from repro.core.dataflow import AcceleratorConfig, ConvLayer
 from repro.core.pe import PAPER_PE_TYPES
+from repro.explore.backend import OracleBackend, PolynomialBackend
+from repro.explore.frame import (DesignPoint, ResultFrame, pareto_mask,
+                                 summary_stats)
+from repro.explore.session import ExplorationSession
+from repro.explore.space import DesignSpace
 
-
-@dataclasses.dataclass
-class DesignPoint:
-  """One evaluated (hardware config, network) pair."""
-  cfg: AcceleratorConfig
-  network: str
-  latency_s: float
-  power_mw: float
-  area_mm2: float
-
-  @property
-  def perf(self) -> float:
-    return 1.0 / max(self.latency_s, 1e-12)
-
-  @property
-  def perf_per_area(self) -> float:
-    return self.perf / max(self.area_mm2, 1e-12)
-
-  @property
-  def energy_mj(self) -> float:
-    return self.power_mw * self.latency_s  # mW * s = mJ
+__all__ = [
+    "DesignPoint", "DesignSpaceExplorer", "ExplorationResult",
+    "best_int16_reference", "distribution_stats", "evaluate_with_models",
+    "evaluate_with_oracle", "normalized_metrics", "pareto_front",
+]
 
 
 def evaluate_with_oracle(cfgs: Sequence[AcceleratorConfig],
                          layers: Sequence[ConvLayer],
                          network: str) -> List[DesignPoint]:
   """Slow path: full characterization per design (synthesis stand-in)."""
-  out = []
-  for cfg in cfgs:
-    ch = oracle.characterize(cfg, layers)
-    out.append(DesignPoint(cfg, network, ch.latency_s, ch.power_mw,
-                           ch.area_mm2))
-  return out
-
-
-import functools
-
-
-@functools.lru_cache(maxsize=65536)
-def _gbuf_power_cached(cfg: AcceleratorConfig) -> float:
-  return oracle.gbuf_power_mw(cfg)
-
-
-@functools.lru_cache(maxsize=65536)
-def _gbuf_area_cached(cfg: AcceleratorConfig) -> float:
-  return oracle.gbuf_area_mm2(cfg)
+  return OracleBackend().evaluate(cfgs, layers, network).to_points()
 
 
 def evaluate_with_models(models: Dict[str, ppa_lib.PPAModels],
@@ -78,88 +51,41 @@ def evaluate_with_models(models: Dict[str, ppa_lib.PPAModels],
                          layers: Sequence[ConvLayer],
                          network: str) -> List[DesignPoint]:
   """Fast path: pre-characterized polynomial PPA models (batched)."""
-  by_type: Dict[str, List[int]] = {}
-  for i, c in enumerate(cfgs):
-    by_type.setdefault(c.pe_type, []).append(i)
-  lat = np.zeros(len(cfgs))
-  pwr = np.zeros(len(cfgs))
-  area = np.zeros(len(cfgs))
-  for pe_type, idxs in by_type.items():
-    sub = [cfgs[i] for i in idxs]
-    m = models[pe_type]
-    lat[idxs] = np.maximum(m.predict_network_latency_s(sub, layers), 1e-9)
-    # polynomial model covers the PE array; the global buffer composes as a
-    # pre-characterized SRAM macro (closed form, memoized per unique config)
-    gb_p = np.asarray([_gbuf_power_cached(c) for c in sub])
-    gb_a = np.asarray([_gbuf_area_cached(c) for c in sub])
-    pwr[idxs] = np.maximum(m.predict_power_mw(sub), 1e-3) + gb_p
-    area[idxs] = np.maximum(m.predict_area_mm2(sub), 1e-6) + gb_a
-  return [DesignPoint(c, network, float(lat[i]), float(pwr[i]),
-                      float(area[i])) for i, c in enumerate(cfgs)]
+  return PolynomialBackend(models).evaluate(cfgs, layers, network).to_points()
 
-
-# ---------------------------------------------------------------------------
-# Pareto machinery
-# ---------------------------------------------------------------------------
 
 def pareto_front(objectives: np.ndarray) -> np.ndarray:
   """Boolean mask of non-dominated rows; all objectives are MINIMIZED."""
-  obj = np.asarray(objectives, np.float64)
-  n = obj.shape[0]
-  mask = np.ones(n, dtype=bool)
-  for i in range(n):
-    if not mask[i]:
-      continue
-    # points strictly dominated by i die
-    dominated_by_i = (np.all(obj >= obj[i], axis=1)
-                      & np.any(obj > obj[i], axis=1))
-    mask[dominated_by_i] = False
-    # i dies if anyone dominates it
-    dominators = (np.all(obj <= obj[i], axis=1)
-                  & np.any(obj < obj[i], axis=1))
-    if np.any(dominators):
-      mask[i] = False
-  return mask
+  return pareto_mask(objectives)
 
 
 def best_int16_reference(points: Sequence[DesignPoint],
                          metric: str = "perf_per_area") -> DesignPoint:
   """The paper's normalization anchor: best INT16 config under `metric`."""
-  int16 = [p for p in points if p.cfg.pe_type == "INT16"]
-  if not int16:
-    raise ValueError("design space contains no INT16 points to normalize by")
-  if metric == "perf_per_area":
-    return max(int16, key=lambda p: p.perf_per_area)
-  if metric == "energy":
-    return min(int16, key=lambda p: p.energy_mj)
-  if metric == "area":
-    return min(int16, key=lambda p: p.area_mm2)
-  raise ValueError(f"unknown reference metric {metric!r}")
+  points = list(points)
+  frame = ResultFrame.from_points(points)
+  return points[frame.reference_index(metric)]
 
 
 def normalized_metrics(points: Sequence[DesignPoint],
                        ref: Optional[DesignPoint] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
   """(normalized perf/area, normalized energy) vs best-INT16-perf/area."""
+  frame = ResultFrame.from_points(points)
   if ref is None:
-    ref = best_int16_reference(points, "perf_per_area")
-  ppa = np.asarray([p.perf_per_area for p in points]) / ref.perf_per_area
-  en = np.asarray([p.energy_mj for p in points]) / ref.energy_mj
-  return ppa, en
+    norm = frame.normalize(ref="best-int16")
+  else:
+    norm = frame.normalize(ref=(ref.perf_per_area, ref.energy_mj))
+  return norm.perf_per_area, norm.energy
 
 
 def distribution_stats(values: np.ndarray) -> Dict[str, float]:
   """Fig. 9 violin summary: min / q1 / median / q3 / max / mean."""
-  v = np.asarray(values, np.float64)
-  return {
-      "min": float(v.min()), "q1": float(np.percentile(v, 25)),
-      "median": float(np.median(v)), "q3": float(np.percentile(v, 75)),
-      "max": float(v.max()), "mean": float(v.mean()),
-  }
+  return summary_stats(values)
 
 
 # ---------------------------------------------------------------------------
-# the explorer
+# the explorer (legacy facade)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -176,29 +102,28 @@ class ExplorationResult:
 
 
 class DesignSpaceExplorer:
-  """Fit-once / evaluate-many QUIDAM DSE driver."""
+  """Fit-once / evaluate-many QUIDAM DSE driver (legacy facade over
+  ExplorationSession; fits share the process-wide PolynomialBackend cache)."""
 
   def __init__(self, pe_types: Sequence[str] = PAPER_PE_TYPES,
                degree: int = 5, n_train: int = 240, seed: int = 0,
                layers: Optional[Sequence[ConvLayer]] = None):
     self.pe_types = tuple(pe_types)
-    self.models: Dict[str, ppa_lib.PPAModels] = {}
-    for i, t in enumerate(self.pe_types):
-      self.models[t] = ppa_lib.fit_ppa_models(
-          t, degree=degree, n_train=n_train, layers=layers, seed=seed + i)
+    self.backend = PolynomialBackend.fit(self.pe_types, degree=degree,
+                                         n_train=n_train, layers=layers,
+                                         seed=seed)
+    self.session = ExplorationSession(self.backend,
+                                      DesignSpace(pe_types=self.pe_types))
+
+  @property
+  def models(self) -> Dict[str, ppa_lib.PPAModels]:
+    return self.backend.models
 
   def explore(self, layers: Sequence[ConvLayer], network: str,
               n_per_type: int = 200, seed: int = 17,
               measure_oracle: int = 3) -> ExplorationResult:
-    cfgs: List[AcceleratorConfig] = []
-    for i, t in enumerate(self.pe_types):
-      cfgs.extend(ppa_lib.sample_configs(t, n_per_type, seed=seed + 100 * i))
-    t0 = time.perf_counter()
-    points = evaluate_with_models(self.models, cfgs, layers, network)
-    t_model = time.perf_counter() - t0
-    t_oracle = 0.0
-    if measure_oracle:
-      t1 = time.perf_counter()
-      evaluate_with_oracle(cfgs[:measure_oracle], layers, network)
-      t_oracle = (time.perf_counter() - t1) / measure_oracle
-    return ExplorationResult(points, t_model, t_oracle)
+    frame = self.session.explore(layers, network, n_per_type=n_per_type,
+                                 seed=seed, measure_oracle=measure_oracle)
+    return ExplorationResult(
+        frame.to_points(), frame.meta["eval_seconds"],
+        frame.meta.get("oracle_seconds_per_design", 0.0))

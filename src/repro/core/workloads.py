@@ -5,7 +5,7 @@ CIFAR (32x32) and ImageNet (224x224) — as row-stationary workload layer
 lists, plus a *bridge* that lowers any transformer architecture from the
 assigned zoo (``repro.configs``) into the same workload IR (matmuls as
 1x1 convolutions), so the paper's PPA models co-explore LM architectures
-as well (beyond-paper extension, see DESIGN.md §2B).
+as well (beyond-paper extension, see README.md "LM workloads bridge").
 """
 from __future__ import annotations
 

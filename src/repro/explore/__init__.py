@@ -1,0 +1,44 @@
+"""repro.explore — the unified design-space exploration API.
+
+This package is the single public entry point for QUIDAM-style
+fit-once / evaluate-many DSE and HW x NN co-exploration:
+
+  DesignSpace          declarative space spec: axes (from HW_RANGES), PE
+                       types, constraints; grid/random/stratified sampling
+                       with deterministic seeds                 [space]
+  EvaluationBackend    protocol turning (configs, workload) -> results
+    OracleBackend      slow, exact per-design characterization
+    PolynomialBackend  fast polynomial PPA models; fit-once cached,
+                       save/load to .npz                        [backend]
+  ResultFrame          columnar (struct-of-arrays) results with vectorized
+                       .pareto(), .normalize(), .stats(), .top_k() [frame]
+  ExplorationSession   facade driving plain DSE and co-exploration over
+                       the same backend + space                 [session]
+
+Quickstart::
+
+    from repro.explore import (DesignSpace, ExplorationSession,
+                               PolynomialBackend)
+    from repro.core.workloads import get_network
+
+    layers = get_network("resnet20")
+    backend = PolynomialBackend.fit(layers=layers)   # or .fit_or_load(path)
+    frame = ExplorationSession(backend).explore(layers, "resnet20")
+    ppa_n, energy_n = frame.normalize(ref="best-int16")
+    best = frame.top_k(1, by="perf_per_area")
+
+The legacy ``repro.core.dse`` / ``repro.core.coexplore`` modules remain as
+thin compatibility shims over this package.
+"""
+from repro.explore.backend import (EvaluationBackend, OracleBackend,
+                                   PolynomialBackend, gbuf_overheads)
+from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
+                                 pareto_mask, summary_stats)
+from repro.explore.session import ExplorationSession
+from repro.explore.space import AXIS_ORDER, Axis, DesignSpace
+
+__all__ = [
+    "AXIS_ORDER", "Axis", "DesignPoint", "DesignSpace", "EvaluationBackend",
+    "ExplorationSession", "Normalized", "OracleBackend", "PolynomialBackend",
+    "ResultFrame", "gbuf_overheads", "pareto_mask", "summary_stats",
+]

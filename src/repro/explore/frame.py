@@ -1,0 +1,325 @@
+"""Columnar exploration results: struct-of-arrays over design points.
+
+A :class:`ResultFrame` holds latency / power / area / pe_type as parallel
+numpy arrays (plus arbitrary extra columns such as ``top1`` for
+co-exploration), so million-point sweeps stay vectorized end to end.  It
+subsumes the old free functions of ``repro.core.dse``:
+
+  ============================  =================================
+  old (repro.core.dse)          new (ResultFrame)
+  ============================  =================================
+  pareto_front(obj)             frame.pareto(...) / pareto_mask(obj)
+  best_int16_reference(points)  frame.reference_index(metric)
+  normalized_metrics(points)    frame.normalize(ref="best-int16")
+  distribution_stats(values)    frame.stats(col) / summary_stats(v)
+  ============================  =================================
+
+``pareto_mask`` is vectorized (sort-based sweep in 2-D, non-dominated-
+sorted elimination otherwise): no O(n^2) Python loop, so 100k-point
+fronts are cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.dataflow import AcceleratorConfig
+
+BASE_COLUMNS = ("latency_s", "power_mw", "area_mm2")
+
+# derived columns where "bigger is better" (auto-negated inside pareto())
+_MAXIMIZE_COLUMNS = frozenset({"perf", "perf_per_area", "top1"})
+
+# normalization-anchor aliases: metric name -> (column, maximize)
+_REF_ALIASES = {
+    "perf_per_area": ("perf_per_area", True),
+    "perf": ("perf", True),
+    "energy": ("energy_mj", False),
+    "energy_mj": ("energy_mj", False),
+    "area": ("area_mm2", False),
+    "area_mm2": ("area_mm2", False),
+    "latency": ("latency_s", False),
+    "latency_s": ("latency_s", False),
+}
+
+
+@dataclasses.dataclass
+class DesignPoint:
+  """One evaluated (hardware config, network) pair (row view of a frame)."""
+  cfg: AcceleratorConfig
+  network: str
+  latency_s: float
+  power_mw: float
+  area_mm2: float
+
+  @property
+  def perf(self) -> float:
+    return 1.0 / max(self.latency_s, 1e-12)
+
+  @property
+  def perf_per_area(self) -> float:
+    return self.perf / max(self.area_mm2, 1e-12)
+
+  @property
+  def energy_mj(self) -> float:
+    return self.power_mw * self.latency_s  # mW * s = mJ
+
+
+# ---------------------------------------------------------------------------
+# Pareto machinery (vectorized)
+# ---------------------------------------------------------------------------
+
+def _pareto_mask_2d(obj: np.ndarray) -> np.ndarray:
+  """Exact 2-D front via one lexsort + prefix minima, O(n log n)."""
+  n = obj.shape[0]
+  order = np.lexsort((obj[:, 1], obj[:, 0]))  # by x asc, then y asc
+  xs, ys = obj[order, 0], obj[order, 1]
+  new_x = np.empty(n, np.bool_)
+  new_x[0] = True
+  new_x[1:] = xs[1:] != xs[:-1]
+  group_first = np.flatnonzero(new_x)
+  group_id = np.cumsum(new_x) - 1
+  # min y over all strictly-smaller-x points (dominates if <= our y) and
+  # min y within our own x group (dominates if < our y)
+  prefix_min = np.minimum.accumulate(ys)
+  before = np.full(group_first.shape, np.inf)
+  before[1:] = prefix_min[group_first[1:] - 1]
+  keep = (ys < before[group_id]) & (ys == ys[group_first][group_id])
+  mask = np.empty(n, np.bool_)
+  mask[order] = keep
+  return mask
+
+
+def _pareto_mask_nd(obj: np.ndarray) -> np.ndarray:
+  """General-dimension front: visit candidates in ascending objective-sum
+  order (a point alive when visited is provably non-dominated), kill its
+  dominated set vectorized.  O(front_size) full-array passes."""
+  n = obj.shape[0]
+  alive = np.ones(n, np.bool_)
+  front = np.zeros(n, np.bool_)
+  for i in np.argsort(obj.sum(axis=1), kind="stable"):
+    if not alive[i]:
+      continue
+    front[i] = True
+    dominated = (np.all(obj >= obj[i], axis=1)
+                 & np.any(obj > obj[i], axis=1))
+    alive &= ~dominated
+  return front
+
+
+def pareto_mask(objectives: np.ndarray) -> np.ndarray:
+  """Boolean mask of non-dominated rows; all objectives are MINIMIZED."""
+  obj = np.asarray(objectives, np.float64)
+  if obj.ndim != 2:
+    raise ValueError(f"objectives must be 2-D, got shape {obj.shape}")
+  if obj.shape[0] == 0:
+    return np.zeros(0, np.bool_)
+  if obj.shape[1] == 1:
+    return obj[:, 0] == obj[:, 0].min()
+  if obj.shape[1] == 2:
+    return _pareto_mask_2d(obj)
+  return _pareto_mask_nd(obj)
+
+
+def summary_stats(values: np.ndarray) -> Dict[str, float]:
+  """Fig. 9 violin summary: min / q1 / median / q3 / max / mean."""
+  v = np.asarray(values, np.float64)
+  return {
+      "min": float(v.min()), "q1": float(np.percentile(v, 25)),
+      "median": float(np.median(v)), "q3": float(np.percentile(v, 75)),
+      "max": float(v.max()), "mean": float(v.mean()),
+  }
+
+
+@dataclasses.dataclass
+class Normalized:
+  """Metrics normalized against a reference design (paper's best-INT16)."""
+  perf_per_area: np.ndarray
+  energy: np.ndarray
+  ref_index: Optional[int] = None
+
+  def __iter__(self) -> Iterator[np.ndarray]:  # (ppa, energy) unpacking
+    return iter((self.perf_per_area, self.energy))
+
+
+# ---------------------------------------------------------------------------
+# the frame
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class ResultFrame:
+  """Struct-of-arrays over evaluated design points."""
+  latency_s: np.ndarray
+  power_mw: np.ndarray
+  area_mm2: np.ndarray
+  pe_type: np.ndarray
+  cfgs: Tuple[AcceleratorConfig, ...] = ()
+  network: str = "net"
+  extra: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+  meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+  def __post_init__(self):
+    self.latency_s = np.asarray(self.latency_s, np.float64)
+    self.power_mw = np.asarray(self.power_mw, np.float64)
+    self.area_mm2 = np.asarray(self.area_mm2, np.float64)
+    self.pe_type = np.asarray(self.pe_type)
+    self.cfgs = tuple(self.cfgs)
+    n = len(self.latency_s)
+    for name, arr in (("power_mw", self.power_mw),
+                      ("area_mm2", self.area_mm2),
+                      ("pe_type", self.pe_type)):
+      if len(arr) != n:
+        raise ValueError(f"column {name!r} has {len(arr)} rows, expected {n}")
+    if self.cfgs and len(self.cfgs) != n:
+      raise ValueError(f"{len(self.cfgs)} cfgs for {n} rows")
+
+  def __len__(self) -> int:
+    return int(self.latency_s.shape[0])
+
+  # -- columns -------------------------------------------------------------
+
+  @property
+  def perf(self) -> np.ndarray:
+    return 1.0 / np.maximum(self.latency_s, 1e-12)
+
+  @property
+  def perf_per_area(self) -> np.ndarray:
+    return self.perf / np.maximum(self.area_mm2, 1e-12)
+
+  @property
+  def energy_mj(self) -> np.ndarray:
+    return self.power_mw * self.latency_s  # mW * s = mJ
+
+  def column(self, name: str) -> np.ndarray:
+    if name in BASE_COLUMNS or name in ("perf", "perf_per_area", "energy_mj"):
+      return getattr(self, name)
+    if name == "pe_type":
+      return self.pe_type
+    if name == "top1_err":
+      return 1.0 - self.extra["top1"]
+    if name in self.extra:
+      return self.extra[name]
+    raise KeyError(f"unknown column {name!r}; have base={BASE_COLUMNS}, "
+                   f"derived=(perf, perf_per_area, energy_mj, top1_err), "
+                   f"extra={tuple(self.extra)}")
+
+  def by_type(self, pe_type: str) -> np.ndarray:
+    return self.pe_type == pe_type
+
+  # -- construction / conversion -------------------------------------------
+
+  @classmethod
+  def from_points(cls, points: Sequence[DesignPoint],
+                  network: Optional[str] = None) -> "ResultFrame":
+    pts = list(points)
+    return cls(
+        latency_s=np.asarray([p.latency_s for p in pts], np.float64),
+        power_mw=np.asarray([p.power_mw for p in pts], np.float64),
+        area_mm2=np.asarray([p.area_mm2 for p in pts], np.float64),
+        pe_type=np.asarray([p.cfg.pe_type for p in pts]),
+        cfgs=tuple(p.cfg for p in pts),
+        network=network if network is not None
+        else (pts[0].network if pts else "net"))
+
+  def to_points(self) -> List[DesignPoint]:
+    return [DesignPoint(cfg, self.network, float(l), float(p), float(a))
+            for cfg, l, p, a in zip(self.cfgs, self.latency_s,
+                                    self.power_mw, self.area_mm2)]
+
+  def select(self, index: Union[np.ndarray, Sequence[int]]) -> "ResultFrame":
+    """Sub-frame by boolean mask or integer index array."""
+    idx = np.asarray(index)
+    if idx.dtype == np.bool_:
+      idx = np.flatnonzero(idx)
+    cfgs = tuple(self.cfgs[i] for i in idx) if self.cfgs else ()
+    return ResultFrame(
+        self.latency_s[idx], self.power_mw[idx], self.area_mm2[idx],
+        self.pe_type[idx], cfgs, self.network,
+        {k: v[idx] for k, v in self.extra.items()}, dict(self.meta))
+
+  @classmethod
+  def concat(cls, frames: Sequence["ResultFrame"]) -> "ResultFrame":
+    frames = list(frames)
+    if not frames:
+      raise ValueError("cannot concat zero frames")
+    keys = set(frames[0].extra)
+    if any(set(f.extra) != keys for f in frames):
+      raise ValueError("frames have mismatched extra columns")
+    return cls(
+        np.concatenate([f.latency_s for f in frames]),
+        np.concatenate([f.power_mw for f in frames]),
+        np.concatenate([f.area_mm2 for f in frames]),
+        np.concatenate([f.pe_type for f in frames]),
+        sum((f.cfgs for f in frames), ()),
+        frames[0].network,
+        {k: np.concatenate([f.extra[k] for f in frames]) for k in keys})
+
+  # -- analysis ------------------------------------------------------------
+
+  def pareto(self, cols: Sequence[str] = ("perf_per_area", "energy_mj"),
+             maximize: Optional[Sequence[str]] = None) -> np.ndarray:
+    """Non-dominated mask over the given columns.  Columns in `maximize`
+    (default: perf/perf_per_area/top1) are negated; the rest minimized."""
+    mx = _MAXIMIZE_COLUMNS if maximize is None else frozenset(maximize)
+    obj = np.stack([-self.column(c) if c in mx else self.column(c)
+                    for c in cols], axis=1)
+    return pareto_mask(obj)
+
+  def reference_index(self, metric: str = "perf_per_area",
+                      pe_type: Optional[str] = "INT16") -> int:
+    """Row index of the paper's normalization anchor: the best design under
+    `metric` among `pe_type` rows (None = whole frame)."""
+    if metric not in _REF_ALIASES:
+      raise ValueError(f"unknown reference metric {metric!r}; "
+                       f"one of {sorted(_REF_ALIASES)}")
+    col, maximize = _REF_ALIASES[metric]
+    if pe_type is None:
+      rows = np.arange(len(self))
+    else:
+      rows = np.flatnonzero(self.pe_type == pe_type)
+      if rows.size == 0:
+        raise ValueError(
+            f"design space contains no {pe_type} points to normalize by")
+    vals = self.column(col)[rows]
+    local = int(np.argmax(vals)) if maximize else int(np.argmin(vals))
+    return int(rows[local])
+
+  def normalize(self, ref: Union[str, int, Tuple[float, float]]
+                = "best-int16") -> Normalized:
+    """(normalized perf/area, normalized energy).
+
+    ref: "best-int16" (paper default: best-perf/area INT16 design), a row
+    index, or an explicit (perf_per_area_ref, energy_mj_ref) pair.
+    """
+    ref_index: Optional[int] = None
+    if isinstance(ref, str):
+      if ref != "best-int16":
+        raise ValueError(f"unknown normalization reference {ref!r}")
+      ref_index = self.reference_index("perf_per_area", "INT16")
+    elif isinstance(ref, (int, np.integer)):
+      ref_index = int(ref)
+    if ref_index is not None:
+      ppa_ref = float(self.perf_per_area[ref_index])
+      en_ref = float(self.energy_mj[ref_index])
+    else:
+      ppa_ref, en_ref = float(ref[0]), float(ref[1])
+    return Normalized(self.perf_per_area / ppa_ref,
+                      self.energy_mj / en_ref, ref_index)
+
+  def stats(self, col: str, mask: Optional[np.ndarray] = None
+            ) -> Dict[str, float]:
+    vals = self.column(col)
+    if mask is not None:
+      vals = vals[mask]
+    return summary_stats(vals)
+
+  def top_k(self, k: int, by: str = "perf_per_area",
+            maximize: Optional[bool] = None) -> "ResultFrame":
+    """Sub-frame of the k best rows under one column (best-first order)."""
+    if maximize is None:
+      maximize = by in _MAXIMIZE_COLUMNS
+    vals = self.column(by)
+    order = np.argsort(-vals if maximize else vals, kind="stable")
+    return self.select(order[:k])

@@ -1,0 +1,90 @@
+"""ExplorationSession: the one facade over plain DSE and HW x NN
+co-exploration.
+
+A session binds an :class:`EvaluationBackend` (how points are scored) to a
+:class:`DesignSpace` (which points exist) and drives both exploration
+flavours over the same machinery:
+
+  explore(...)      sample hardware configs, evaluate one workload
+                    -> ResultFrame (timings in frame.meta)
+  co_explore(...)   pair sampled hardware with supernet-evaluated NN
+                    architectures -> ResultFrame with top1/arch columns
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dataflow import AcceleratorConfig, ConvLayer
+from repro.explore.backend import EvaluationBackend, OracleBackend
+from repro.explore.frame import ResultFrame
+from repro.explore.space import DesignSpace
+
+
+class ExplorationSession:
+  """Fit-once / evaluate-many driver over a backend + space pair."""
+
+  def __init__(self, backend: EvaluationBackend,
+               space: Optional[DesignSpace] = None):
+    self.backend = backend
+    if space is None:
+      pe_types = getattr(backend, "pe_types", None)
+      space = DesignSpace(pe_types=pe_types) if pe_types else DesignSpace()
+    self.space = space
+
+  def evaluate(self, cfgs: Sequence[AcceleratorConfig],
+               layers: Sequence[ConvLayer],
+               network: str = "net") -> ResultFrame:
+    """Score explicit configs through the session's backend."""
+    return self.backend.evaluate(cfgs, layers, network)
+
+  def explore(self, layers: Sequence[ConvLayer], network: str,
+              n_per_type: int = 200, seed: int = 17,
+              method: str = "random", measure_oracle: int = 0
+              ) -> ResultFrame:
+    """Sample the space, evaluate `network`; optionally time the oracle on
+    the first `measure_oracle` configs for the paper's speedup claim.
+
+    frame.meta carries: eval_seconds, eval_us_per_design, and (when
+    measured) oracle_seconds_per_design + speedup.
+    """
+    cfgs = self.space.sample(n_per_type, seed=seed, method=method)
+    t0 = time.perf_counter()
+    frame = self.backend.evaluate(cfgs, layers, network)
+    t_eval = time.perf_counter() - t0
+    n = max(len(frame), 1)
+    frame.meta["eval_seconds"] = t_eval
+    frame.meta["eval_us_per_design"] = t_eval / n * 1e6
+    if measure_oracle:
+      k = min(measure_oracle, len(cfgs))
+      t1 = time.perf_counter()
+      OracleBackend().evaluate(cfgs[:k], layers, network)
+      per_design = (time.perf_counter() - t1) / max(k, 1)
+      frame.meta["oracle_seconds_per_design"] = per_design
+      frame.meta["speedup"] = per_design / max(t_eval / n, 1e-12)
+    return frame
+
+  def co_explore(self, arch_accs: Sequence[Tuple[object, float]],
+                 n_hw_per_type: int = 20, seed: int = 3,
+                 image_size: int = 32, method: str = "random"
+                 ) -> ResultFrame:
+    """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
+
+    Rows carry extra columns `top1` (float) and `arch` (object); energy /
+    area anchors come from frame.reference_index("energy"/"area").
+    """
+    from repro.core.supernet import arch_to_layers  # deferred: pulls jax
+    arch_layers = [(arch, acc, arch_to_layers(arch, image_size=image_size))
+                   for arch, acc in arch_accs]
+    frames: List[ResultFrame] = []
+    for ti, pe_type in enumerate(self.space.pe_types):
+      cfgs = self.space.sample_type(pe_type, n_hw_per_type,
+                                    seed=seed + 17 * ti, method=method)
+      for arch, acc, layers in arch_layers:
+        f = self.backend.evaluate(cfgs, layers, network="coexplore")
+        f.extra["top1"] = np.full(len(f), float(acc))
+        f.extra["arch"] = np.asarray([arch] * len(f), dtype=object)
+        frames.append(f)
+    return ResultFrame.concat(frames)

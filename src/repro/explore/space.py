@@ -1,0 +1,168 @@
+"""Declarative design-space specification + deterministic sampling.
+
+A :class:`DesignSpace` is the hardware half of QUIDAM's input space
+(Fig. 2) as data: one :class:`Axis` per hardware knob (defaults from
+``repro.core.ppa.HW_RANGES``, Sec. 3.3), a set of PE types, and optional
+constraint predicates.  Sampling is deterministic in the seed and comes in
+three flavours:
+
+  random      independent uniform choice per axis (the paper's sampler;
+              bit-identical to the legacy ``ppa.sample_configs`` sequence
+              for the default axes)
+  grid        evenly-strided slice of the full cartesian product
+  stratified  per-axis latin-hypercube: every axis value covered evenly,
+              axes decorrelated by independent seeded permutations
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dataflow import AcceleratorConfig
+from repro.core.pe import PAPER_PE_TYPES
+from repro.core.ppa import HW_RANGES
+
+# canonical axis order == AcceleratorConfig field order == the RNG call
+# order of the legacy sampler (determinism contract, do not reorder)
+AXIS_ORDER = ("pe_rows", "pe_cols", "sp_if", "sp_fw", "sp_ps", "gbuf_kb",
+              "bandwidth_gbps")
+
+Constraint = Callable[[AcceleratorConfig], bool]
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+  """One discrete hardware knob: a name and its allowed values."""
+  name: str
+  values: Tuple[float, ...]
+
+  def __post_init__(self):
+    if self.name not in AXIS_ORDER:
+      raise ValueError(f"unknown axis {self.name!r}; one of {AXIS_ORDER}")
+    if not self.values:
+      raise ValueError(f"axis {self.name!r} has no values")
+
+
+class DesignSpace:
+  """The declarative spec every exploration entry point consumes."""
+
+  def __init__(self, pe_types: Sequence[str] = PAPER_PE_TYPES,
+               axes: Optional[Mapping[str, Sequence[float]]] = None,
+               constraints: Sequence[Constraint] = ()):
+    self.pe_types = tuple(pe_types)
+    overrides = dict(axes or {})
+    unknown = set(overrides) - set(AXIS_ORDER)
+    if unknown:
+      raise ValueError(f"unknown axes {sorted(unknown)}; one of {AXIS_ORDER}")
+    self.axes: Tuple[Axis, ...] = tuple(
+        Axis(name, tuple(overrides.get(name, HW_RANGES[name])))
+        for name in AXIS_ORDER)
+    self.constraints = tuple(constraints)
+
+  # -- introspection -------------------------------------------------------
+
+  def axis(self, name: str) -> Axis:
+    for a in self.axes:
+      if a.name == name:
+        return a
+    raise KeyError(name)
+
+  def size(self) -> int:
+    """Cardinality of the unconstrained space (all PE types)."""
+    per_type = math.prod(len(a.values) for a in self.axes)
+    return per_type * len(self.pe_types)
+
+  def __repr__(self) -> str:
+    dims = "x".join(str(len(a.values)) for a in self.axes)
+    return (f"DesignSpace({len(self.pe_types)} PE types x {dims} grid, "
+            f"{len(self.constraints)} constraints, size={self.size():,})")
+
+  # -- construction helpers ------------------------------------------------
+
+  def _make(self, pe_type: str, values: Dict[str, float]) -> AcceleratorConfig:
+    kw = {name: (float(v) if name == "bandwidth_gbps" else int(v))
+          for name, v in values.items()}
+    return AcceleratorConfig(pe_type=pe_type, **kw)
+
+  def _passes(self, cfg: AcceleratorConfig) -> bool:
+    return all(c(cfg) for c in self.constraints)
+
+  # -- sampling ------------------------------------------------------------
+
+  def sample_type(self, pe_type: str, n: int, seed: int = 0,
+                  method: str = "random") -> List[AcceleratorConfig]:
+    """n deterministic configs of one PE type (may return fewer than n for
+    grid/stratified when constraints filter points)."""
+    if pe_type not in self.pe_types:
+      raise ValueError(f"{pe_type!r} not in this space's {self.pe_types}")
+    if method == "random":
+      return self._sample_random(pe_type, n, seed)
+    if method == "grid":
+      return self._sample_grid(pe_type, n)
+    if method == "stratified":
+      return self._sample_stratified(pe_type, n, seed)
+    raise ValueError(f"unknown sampling method {method!r}; "
+                     "one of ('random', 'grid', 'stratified')")
+
+  def sample(self, n_per_type: int, seed: int = 0, method: str = "random"
+             ) -> List[AcceleratorConfig]:
+    """n_per_type configs for every PE type (legacy per-type seed offsets
+    of 100*i, so default-space results match the old explorer exactly)."""
+    out: List[AcceleratorConfig] = []
+    for i, t in enumerate(self.pe_types):
+      out.extend(self.sample_type(t, n_per_type, seed=seed + 100 * i,
+                                  method=method))
+    return out
+
+  def _sample_random(self, pe_type: str, n: int, seed: int
+                     ) -> List[AcceleratorConfig]:
+    rng = np.random.RandomState(seed)
+    out: List[AcceleratorConfig] = []
+    tries = 0
+    max_tries = max(1000 * n, 1000)
+    while len(out) < n:
+      if tries >= max_tries:
+        raise ValueError(
+            f"constraints rejected {tries} straight samples; the "
+            f"constrained space is (nearly) empty for {pe_type}")
+      cfg = self._make(pe_type,
+                       {a.name: rng.choice(a.values) for a in self.axes})
+      tries += 1
+      if self._passes(cfg):
+        out.append(cfg)
+    return out
+
+  def _sample_grid(self, pe_type: str, n: int) -> List[AcceleratorConfig]:
+    sizes = [len(a.values) for a in self.axes]
+    total = math.prod(sizes)
+    if n >= total:
+      flat = np.arange(total, dtype=np.int64)
+    else:
+      flat = np.unique(np.linspace(0, total - 1, n).astype(np.int64))
+    out = []
+    for idx in flat:
+      values = {}
+      for a, size in zip(reversed(self.axes), reversed(sizes)):
+        values[a.name] = a.values[int(idx % size)]
+        idx //= size
+      cfg = self._make(pe_type, values)
+      if self._passes(cfg):
+        out.append(cfg)
+    return out
+
+  def _sample_stratified(self, pe_type: str, n: int, seed: int
+                         ) -> List[AcceleratorConfig]:
+    rng = np.random.RandomState(seed)
+    cols: Dict[str, np.ndarray] = {}
+    for a in self.axes:  # AXIS_ORDER: fixed RNG consumption order
+      bins = (np.arange(n) * len(a.values)) // n  # even per-value coverage
+      cols[a.name] = np.asarray(a.values)[bins][rng.permutation(n)]
+    out = []
+    for i in range(n):
+      cfg = self._make(pe_type, {name: cols[name][i] for name in cols})
+      if self._passes(cfg):
+        out.append(cfg)
+    return out

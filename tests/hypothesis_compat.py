@@ -1,0 +1,46 @@
+"""Optional-import shim for hypothesis.
+
+The property tests use hypothesis when it is installed; without it they
+skip cleanly (instead of killing the whole suite at collection time,
+which is what a hard ``from hypothesis import ...`` did).
+
+Usage in test modules::
+
+    from hypothesis_compat import given, settings, st
+"""
+try:
+  from hypothesis import given, settings, strategies as st
+  HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+  import pytest
+
+  HAVE_HYPOTHESIS = False
+
+  class _AnyStrategy:
+    """Stands in for hypothesis.strategies: every attribute / call chain
+    (st.integers(0, 5).filter(...), ...) returns another stub.  The values
+    are never drawn — @given replaces the test with a skip."""
+
+    def __call__(self, *args, **kwargs):
+      return self
+
+    def __getattr__(self, name):
+      if name.startswith("__"):
+        raise AttributeError(name)
+      return self
+
+  st = _AnyStrategy()
+
+  def given(*_args, **_kwargs):
+    def decorate(fn):
+      # plain (*a, **k) signature on purpose: pytest must not try to
+      # resolve the would-be hypothesis-drawn parameters as fixtures
+      def skipper(*args, **kwargs):
+        pytest.skip("hypothesis not installed (optional extra)")
+      skipper.__name__ = fn.__name__
+      skipper.__doc__ = fn.__doc__
+      return skipper
+    return decorate
+
+  def settings(*_args, **_kwargs):
+    return lambda fn: fn

@@ -21,8 +21,12 @@ KEY = jax.random.PRNGKey(0)
 def _fake_mesh(shape=(2, 2), axes=("data", "model")):
   devs = jax.devices()
   if len(devs) < np.prod(shape):
-    # abstract mesh purely for spec computation
-    return jax.sharding.AbstractMesh(shape, axes)
+    # abstract mesh purely for spec computation; signature differs across
+    # jax versions: (shape, axes) vs (((name, size), ...),)
+    try:
+      return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:
+      return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
   return jax.make_mesh(shape, axes,
                        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
                        devices=devs[: int(np.prod(shape))])

@@ -1,0 +1,322 @@
+"""Tests for the unified repro.explore API: DesignSpace sampling,
+evaluation backends (incl. save/load round trip), the columnar
+ResultFrame, and the vectorized Pareto front."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import coexplore, dse
+from repro.core.workloads import get_network
+from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                           PolynomialBackend, ResultFrame, pareto_mask,
+                           summary_stats)
+
+
+def brute_force_front(obj: np.ndarray) -> np.ndarray:
+  """O(n^2) dominance reference."""
+  obj = np.asarray(obj, np.float64)
+  n = obj.shape[0]
+  mask = np.ones(n, bool)
+  for i in range(n):
+    dom = np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1)
+    mask[i] = not dom.any()
+  return mask
+
+
+def legacy_pareto_loop(objectives: np.ndarray) -> np.ndarray:
+  """The pre-refactor dse.pareto_front O(n^2) Python loop (perf baseline)."""
+  obj = np.asarray(objectives, np.float64)
+  n = obj.shape[0]
+  mask = np.ones(n, dtype=bool)
+  for i in range(n):
+    if not mask[i]:
+      continue
+    dominated_by_i = (np.all(obj >= obj[i], axis=1)
+                      & np.any(obj > obj[i], axis=1))
+    mask[dominated_by_i] = False
+    dominators = (np.all(obj <= obj[i], axis=1)
+                  & np.any(obj < obj[i], axis=1))
+    if np.any(dominators):
+      mask[i] = False
+  return mask
+
+
+@pytest.fixture(scope="module")
+def small_backend():
+  """Tiny but real fit: 2 PE types, degree 3, 4 layers."""
+  layers = get_network("resnet20")[:4]
+  return PolynomialBackend.fit(pe_types=("INT16", "LightPE-1"), degree=3,
+                               n_train=80, layers=layers, seed=0)
+
+
+@pytest.fixture(scope="module")
+def small_layers():
+  return get_network("resnet20")[:4]
+
+
+class TestDesignSpace:
+  def test_sampling_deterministic(self):
+    space = DesignSpace()
+    assert space.sample(8, seed=5) == space.sample(8, seed=5)
+    assert space.sample_type("INT16", 20, seed=1) == \
+        space.sample_type("INT16", 20, seed=1)
+    assert space.sample_type("INT16", 20, seed=1) != \
+        space.sample_type("INT16", 20, seed=2)
+
+  def test_random_matches_legacy_sampler(self):
+    """Default-axes random sampling is bit-identical to ppa.sample_configs
+    (so refits and cached models stay comparable across the refactor)."""
+    from repro.core import ppa
+    space = DesignSpace()
+    assert space.sample_type("LightPE-2", 40, seed=9) == \
+        ppa.sample_configs("LightPE-2", 40, seed=9)
+
+  def test_constraint_filtering(self):
+    space = DesignSpace(constraints=[lambda c: c.n_pe <= 256,
+                                     lambda c: c.gbuf_kb >= 128])
+    cfgs = space.sample_type("INT16", 30, seed=0)
+    assert len(cfgs) == 30
+    assert all(c.n_pe <= 256 and c.gbuf_kb >= 128 for c in cfgs)
+
+  def test_impossible_constraint_raises(self):
+    space = DesignSpace(constraints=[lambda c: False])
+    with pytest.raises(ValueError, match="constraints rejected"):
+      space.sample_type("INT16", 2, seed=0)
+
+  def test_grid_deterministic_and_unique(self):
+    space = DesignSpace()
+    a = space.sample_type("INT16", 100, method="grid")
+    assert a == space.sample_type("INT16", 100, method="grid")
+    assert len(set(a)) == len(a)
+
+  def test_grid_small_space_enumerates_fully(self):
+    space = DesignSpace(axes={k: (v[0], v[-1]) for k, v in
+                              {"pe_rows": (8, 32), "pe_cols": (8, 32),
+                               "sp_if": (6, 64), "sp_fw": (64, 448),
+                               "sp_ps": (8, 64), "gbuf_kb": (64, 512),
+                               "bandwidth_gbps": (6.4, 25.6)}.items()})
+    cfgs = space.sample_type("INT16", 1000, method="grid")
+    assert len(cfgs) == 2 ** 7 == space.size() // 4
+
+  def test_stratified_covers_axis_values(self):
+    space = DesignSpace()
+    n = 9 * 8  # multiple of every axis cardinality's lcm? no: just check
+    cfgs = space.sample_type("INT16", n, seed=3, method="stratified")
+    assert len(cfgs) == n
+    rows = sorted({c.pe_rows for c in cfgs})
+    assert rows == sorted(space.axis("pe_rows").values)
+    assert cfgs == space.sample_type("INT16", n, seed=3, method="stratified")
+
+  def test_custom_axes_and_size(self):
+    space = DesignSpace(pe_types=("INT16",), axes={"gbuf_kb": (64, 128)})
+    assert space.axis("gbuf_kb").values == (64, 128)
+    cfgs = space.sample_type("INT16", 25, seed=0)
+    assert all(c.gbuf_kb in (64, 128) for c in cfgs)
+    with pytest.raises(ValueError):
+      DesignSpace(axes={"nonsense_axis": (1, 2)})
+
+
+class TestParetoMask:
+  def test_single_point(self):
+    assert pareto_mask(np.asarray([[1.0, 2.0]])).tolist() == [True]
+
+  def test_duplicate_points_all_kept(self):
+    pts = np.asarray([[1.0, 1.0], [1.0, 1.0], [2.0, 2.0], [1.0, 1.0]])
+    assert pareto_mask(pts).tolist() == [True, True, False, True]
+
+  def test_all_dominated_chain(self):
+    pts = np.asarray([[3.0, 3.0], [2.0, 2.0], [1.0, 1.0]])
+    assert pareto_mask(pts).tolist() == [False, False, True]
+
+  def test_ties_on_one_axis(self):
+    # same x: only min-y survives; same y, larger x: dominated
+    pts = np.asarray([[1.0, 5.0], [1.0, 4.0], [2.0, 4.0], [0.5, 9.0]])
+    assert pareto_mask(pts).tolist() == [False, True, False, True]
+
+  @pytest.mark.parametrize("dim", [1, 2, 3, 4])
+  def test_matches_brute_force(self, dim):
+    rng = np.random.RandomState(dim)
+    for _ in range(4):
+      pts = rng.uniform(0, 1, size=(400, dim))
+      pts[rng.randint(0, 400, 40)] = pts[rng.randint(0, 400, 40)]
+      assert np.array_equal(pareto_mask(pts), brute_force_front(pts))
+
+  def test_empty(self):
+    assert pareto_mask(np.zeros((0, 2))).shape == (0,)
+
+  def test_50k_points_exact_and_10x_faster_than_legacy(self):
+    """Acceptance: >=50k synthetic points, exact vs the brute-force loop,
+    >=10x faster than the old dse.pareto_front implementation."""
+    rng = np.random.RandomState(0)
+    theta = rng.uniform(0.0, np.pi / 2, 2000)
+    arc = np.stack([np.cos(theta), np.sin(theta)], axis=1)  # mutual front
+    fill = arc[rng.randint(0, 2000, 48_000)] + rng.uniform(
+        0.01, 1.0, size=(48_000, 2))
+    pts = np.concatenate([arc, fill])[rng.permutation(50_000)]
+    t0 = time.perf_counter()
+    fast = pareto_mask(pts)
+    t_fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = legacy_pareto_loop(pts)
+    t_legacy = time.perf_counter() - t0
+    assert np.array_equal(fast, ref)
+    assert fast.sum() >= 2000
+    assert t_legacy / t_fast >= 10.0, (t_legacy, t_fast)
+
+
+class TestBackends:
+  def test_oracle_backend_matches_characterize(self, small_layers):
+    from repro.core import oracle
+    cfgs = DesignSpace().sample_type("INT16", 3, seed=0)
+    frame = OracleBackend().evaluate(cfgs, small_layers, "net")
+    ch = oracle.characterize(cfgs[0], small_layers)
+    assert frame.latency_s[0] == ch.latency_s
+    assert frame.power_mw[0] == ch.power_mw
+
+  def test_polynomial_matches_legacy_evaluate_with_models(
+      self, small_backend, small_layers):
+    cfgs = DesignSpace().sample_type("INT16", 10, seed=4) + \
+        DesignSpace().sample_type("LightPE-1", 10, seed=5)
+    frame = small_backend.evaluate(cfgs, small_layers, "net")
+    pts = dse.evaluate_with_models(small_backend.models, cfgs,
+                                   small_layers, "net")
+    assert np.allclose(frame.latency_s, [p.latency_s for p in pts])
+    assert np.allclose(frame.power_mw, [p.power_mw for p in pts])
+    assert np.allclose(frame.area_mm2, [p.area_mm2 for p in pts])
+
+  def test_fit_once_in_process_cache(self, small_layers):
+    b1 = PolynomialBackend.fit(pe_types=("INT16",), degree=3, n_train=80,
+                               layers=small_layers, seed=0)
+    b2 = PolynomialBackend.fit(pe_types=("INT16",), degree=3, n_train=80,
+                               layers=small_layers, seed=0)
+    assert b1.models["INT16"] is b2.models["INT16"]  # no refit
+
+  def test_save_load_roundtrip_bit_identical(self, small_backend,
+                                             small_layers, tmp_path):
+    path = str(tmp_path / "models.npz")
+    small_backend.save(path)
+    loaded = PolynomialBackend.load(path)
+    assert loaded.pe_types == small_backend.pe_types
+    cfgs = DesignSpace().sample_type("INT16", 20, seed=11) + \
+        DesignSpace().sample_type("LightPE-1", 20, seed=12)
+    a = small_backend.evaluate(cfgs, small_layers, "net")
+    b = loaded.evaluate(cfgs, small_layers, "net")
+    assert np.array_equal(a.latency_s, b.latency_s)
+    assert np.array_equal(a.power_mw, b.power_mw)
+    assert np.array_equal(a.area_mm2, b.area_mm2)
+
+  def test_fit_or_load_uses_cache_file(self, small_layers, tmp_path):
+    path = str(tmp_path / "cache.npz")
+    kw = dict(pe_types=("INT16",), degree=3, n_train=80,
+              layers=small_layers, seed=0)
+    b1 = PolynomialBackend.fit_or_load(path, **kw)
+    assert b1.loaded_from is None  # fitted fresh, then saved
+    b2 = PolynomialBackend.fit_or_load(path, **kw)
+    assert b2.loaded_from == path
+    # changed fit spec -> refit, not a stale cache hit
+    b3 = PolynomialBackend.fit_or_load(path, pe_types=("INT16",), degree=3,
+                                       n_train=80, layers=small_layers,
+                                       seed=1)
+    assert b3.loaded_from is None
+
+  def test_fit_or_load_survives_corrupt_cache(self, small_layers, tmp_path):
+    path = str(tmp_path / "corrupt.npz")
+    with open(path, "wb") as f:
+      f.write(b"not an npz file")
+    kw = dict(pe_types=("INT16",), degree=3, n_train=80,
+              layers=small_layers, seed=0)
+    b = PolynomialBackend.fit_or_load(path, **kw)
+    assert b.loaded_from is None  # refit, overwrote the corrupt file
+    assert PolynomialBackend.fit_or_load(path, **kw).loaded_from == path
+
+  def test_missing_pe_type_raises(self, small_backend, small_layers):
+    cfgs = DesignSpace().sample_type("FP32", 2, seed=0)
+    with pytest.raises(KeyError, match="FP32"):
+      small_backend.evaluate(cfgs, small_layers, "net")
+
+
+class TestResultFrame:
+  @pytest.fixture(scope="class")
+  def frame(self, small_backend, small_layers):
+    space = DesignSpace(pe_types=("INT16", "LightPE-1"))
+    return ExplorationSession(small_backend, space).explore(
+        small_layers, "net", n_per_type=40, seed=2)
+
+  def test_points_roundtrip(self, frame):
+    back = ResultFrame.from_points(frame.to_points())
+    assert np.array_equal(back.latency_s, frame.latency_s)
+    assert np.array_equal(back.pe_type, frame.pe_type)
+    assert back.cfgs == frame.cfgs
+
+  def test_normalize_matches_legacy(self, frame):
+    ppa_n, en_n = frame.normalize(ref="best-int16")
+    l_ppa, l_en = dse.normalized_metrics(frame.to_points())
+    assert np.allclose(ppa_n, l_ppa)
+    assert np.allclose(en_n, l_en)
+    ref = frame.reference_index("perf_per_area", "INT16")
+    assert frame.pe_type[ref] == "INT16"
+    assert ppa_n[ref] == pytest.approx(1.0)
+
+  def test_normalize_requires_int16(self, small_backend, small_layers):
+    cfgs = DesignSpace().sample_type("LightPE-1", 4, seed=0)
+    fr = small_backend.evaluate(cfgs, small_layers, "net")
+    with pytest.raises(ValueError, match="INT16"):
+      fr.normalize(ref="best-int16")
+
+  def test_stats_matches_legacy(self, frame):
+    assert frame.stats("energy_mj") == \
+        dse.distribution_stats(frame.energy_mj)
+    m = frame.by_type("INT16")
+    assert frame.stats("area_mm2", mask=m) == \
+        summary_stats(frame.area_mm2[m])
+
+  def test_top_k(self, frame):
+    top = frame.top_k(5, by="perf_per_area")
+    assert len(top) == 5
+    assert top.perf_per_area[0] == frame.perf_per_area.max()
+    assert np.all(np.diff(top.perf_per_area) <= 0)
+    worst = frame.top_k(3, by="energy_mj")  # minimized column
+    assert worst.energy_mj[0] == frame.energy_mj.min()
+
+  def test_pareto_method(self, frame):
+    mask = frame.pareto(cols=("perf_per_area", "energy_mj"))
+    obj = np.stack([-frame.perf_per_area, frame.energy_mj], axis=1)
+    assert np.array_equal(mask, brute_force_front(obj))
+
+  def test_select_and_concat(self, frame):
+    m = frame.by_type("INT16")
+    sub = frame.select(m)
+    assert len(sub) == int(m.sum())
+    assert all(t == "INT16" for t in sub.pe_type)
+    both = ResultFrame.concat([sub, frame.select(~m)])
+    assert len(both) == len(frame)
+
+  def test_meta_timings(self, frame):
+    assert frame.meta["eval_seconds"] > 0
+    assert frame.meta["eval_us_per_design"] > 0
+
+
+class TestSession:
+  def test_coexplore_frame_and_shim_agree(self, small_backend):
+    import jax
+    from repro.core.cnn import sample_arch
+    arch_accs = [(sample_arch(jax.random.PRNGKey(0)), 0.8),
+                 (sample_arch(jax.random.PRNGKey(1)), 0.6)]
+    space = DesignSpace(pe_types=("INT16", "LightPE-1"))
+    sess = ExplorationSession(small_backend, space)
+    frame = sess.co_explore(arch_accs, n_hw_per_type=4, image_size=16)
+    assert len(frame) == 2 * 2 * 4
+    assert set(np.unique(frame.extra["top1"])) == {0.6, 0.8}
+    pts = coexplore.co_explore(small_backend.models, arch_accs,
+                               n_hw_per_type=4, image_size=16,
+                               pe_types=("INT16", "LightPE-1"))
+    assert len(pts) == len(frame)
+    assert [p.latency_s for p in pts] == frame.latency_s.tolist()
+    res = coexplore.normalize_and_front(pts)
+    assert np.array_equal(
+        res["front_energy"], frame.pareto(cols=("top1_err", "energy_mj")))
+
+  def test_session_default_space_follows_backend(self, small_backend):
+    sess = ExplorationSession(small_backend)
+    assert sess.space.pe_types == small_backend.pe_types

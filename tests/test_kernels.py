@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.int8_matmul import ops as i8_ops
 from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
