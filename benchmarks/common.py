@@ -1,8 +1,16 @@
-"""Benchmark harness utilities: timing + the name,us_per_call,derived CSV."""
+"""Benchmark harness utilities: timing, the name,us_per_call,derived CSV,
+and JSON perf records under ``results/`` (BENCH_*.json) so the performance
+trajectory is tracked across PRs."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
+
+# where write_bench_json lands records; benchmarks.run --json-dir overrides
+JSON_DIR = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                        "results")
 
 
 def time_call(fn: Callable, n: int = 3, warmup: int = 1) -> float:
@@ -17,3 +25,13 @@ def time_call(fn: Callable, n: int = 3, warmup: int = 1) -> float:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
   print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_bench_json(name: str, record: Dict) -> str:
+  """Write ``results/BENCH_<name>.json`` (pretty, stable key order)."""
+  os.makedirs(JSON_DIR, exist_ok=True)
+  path = os.path.join(JSON_DIR, f"BENCH_{name}.json")
+  with open(path, "w") as f:
+    json.dump(record, f, indent=2, sort_keys=True)
+    f.write("\n")
+  return path

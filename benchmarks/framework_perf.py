@@ -126,5 +126,64 @@ def explore_api_perf() -> None:
        f"eval_us_per_design={eval_us / len(frame):.1f}")
 
 
+def explore_vector_perf() -> None:
+  """The tentpole claim: vectorized oracle sweep throughput vs the scalar
+  per-design loop on a 100k-point power/area sweep, plus the Pareto time
+  over the resulting frame.  Records results/BENCH_explore.json so the
+  perf trajectory is tracked across PRs."""
+  from benchmarks.common import write_bench_json
+  from repro.core import oracle
+  from repro.explore import DesignSpace, pareto_mask
+
+  n_total = 100_000
+  space = DesignSpace()
+  t0 = time.perf_counter()
+  table = space.sample_table(n_total // len(space.pe_types), seed=0)
+  sample_s = time.perf_counter() - t0
+
+  # vector sweep: full characterization-free power/area pass over the table
+  t0 = time.perf_counter()
+  pwr, area = oracle.power_area_batch(table)
+  vec_s = time.perf_counter() - t0
+  vec_pts_per_s = len(table) / vec_s
+
+  # scalar baseline on a subsample (extrapolating the loop to 100k would
+  # dominate the whole benchmark suite), plus a parity check on it
+  n_scalar = 2000
+  sub = table.select(slice(0, n_scalar))
+  cfgs = sub.to_configs()
+  t0 = time.perf_counter()
+  s_pwr = np.asarray([oracle.power_mw(c) for c in cfgs])
+  s_area = np.asarray([oracle.area_mm2(c) for c in cfgs])
+  scalar_s = time.perf_counter() - t0
+  scalar_pts_per_s = n_scalar / scalar_s
+  parity = float(max(np.max(np.abs(pwr[:n_scalar] / s_pwr - 1.0)),
+                     np.max(np.abs(area[:n_scalar] / s_area - 1.0))))
+
+  t0 = time.perf_counter()
+  front = pareto_mask(np.stack([pwr, area], axis=1))
+  pareto_s = time.perf_counter() - t0
+
+  speedup = vec_pts_per_s / scalar_pts_per_s
+  record = {
+      "n_points": int(len(table)),
+      "sample_table_seconds": round(sample_s, 4),
+      "vector_seconds": round(vec_s, 4),
+      "vector_points_per_sec": round(vec_pts_per_s, 1),
+      "scalar_points_per_sec": round(scalar_pts_per_s, 1),
+      "scalar_sample_points": n_scalar,
+      "speedup": round(speedup, 1),
+      "parity_max_rel_err": parity,
+      "pareto_100k_seconds": round(pareto_s, 4),
+      "pareto_front_size": int(front.sum()),
+  }
+  path = write_bench_json("explore", record)
+  emit("explore_vector_perf", vec_s / len(table) * 1e6,
+       f"points={len(table)};vector_pts_per_s={vec_pts_per_s:.0f};"
+       f"scalar_pts_per_s={scalar_pts_per_s:.0f};speedup={speedup:.0f}x;"
+       f"parity_max_rel={parity:.1e};pareto_s={pareto_s:.3f};"
+       f"json={path}")
+
+
 ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput,
-       explore_api_perf]
+       explore_api_perf, explore_vector_perf]

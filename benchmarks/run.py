@@ -1,7 +1,11 @@
 """Benchmark runner: one function per paper table/figure + framework perf.
 
-Prints ``name,us_per_call,derived`` CSV rows.
-Usage: PYTHONPATH=src python -m benchmarks.run [--suite name] [--only substr]
+Prints ``name,us_per_call,derived`` CSV rows; benchmarks that track the
+perf trajectory additionally write ``BENCH_*.json`` records (default
+under ``results/``, see --json-dir) — e.g. ``BENCH_explore.json`` with
+scalar-vs-vector sweep points/sec and the Pareto-front time.
+Usage: PYTHONPATH=src python -m benchmarks.run [--suite name]
+       [--only substr] [--json-dir DIR]
 """
 from __future__ import annotations
 
@@ -17,7 +21,13 @@ def main() -> None:
                   help="benchmark module to run (default: all)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
+  ap.add_argument("--json-dir", default=None,
+                  help="directory for BENCH_*.json perf records "
+                       "(default: results/)")
   args = ap.parse_args()
+  if args.json_dir:
+    from benchmarks import common
+    common.JSON_DIR = args.json_dir
 
   from benchmarks import accuracy_experiments, framework_perf, paper_figures
   suites = {

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative link in the repo's markdown resolves.
+
+Scans README.md + docs/**/*.md for ``[text](target)`` links, skipping
+external (http/https/mailto) targets, and fails when a relative target
+file is missing or a ``#fragment`` names a heading that does not exist
+(GitHub-style slugs).  Run from anywhere: paths resolve against the repo
+root.  Used by CI (.github/workflows/ci.yml) and runnable standalone:
+
+    python scripts/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"^```.*?^```", re.MULTILINE | re.DOTALL)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+  """GitHub-flavoured anchor slug: lowercase, drop punctuation (backticks
+  included), spaces -> hyphens."""
+  text = heading.strip().lower()
+  text = re.sub(r"[`*_]", "", text)
+  text = re.sub(r"[^\w\- ]", "", text)
+  return text.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set:
+  # strip fenced code blocks first: '# comment' lines inside ``` fences
+  # are not headings and must not satisfy fragment links
+  text = FENCE_RE.sub("", md.read_text())
+  return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check() -> int:
+  md_files = [REPO / "README.md"] + sorted((REPO / "docs").glob("**/*.md"))
+  errors = []
+  for md in md_files:
+    if not md.exists():
+      errors.append(f"{md}: expected markdown file is missing")
+      continue
+    for target in LINK_RE.findall(FENCE_RE.sub("", md.read_text())):
+      if target.startswith(EXTERNAL):
+        continue
+      path_part, _, fragment = target.partition("#")
+      dest = md if not path_part else (md.parent / path_part).resolve()
+      if not dest.exists():
+        errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+        continue
+      if fragment and dest.suffix == ".md" \
+          and fragment not in anchors_of(dest):
+        errors.append(f"{md.relative_to(REPO)}: missing anchor -> {target}")
+  for e in errors:
+    print(f"ERROR: {e}", file=sys.stderr)
+  n_links = sum(len(LINK_RE.findall(FENCE_RE.sub("", m.read_text())))
+                for m in md_files if m.exists())
+  print(f"checked {len(md_files)} markdown files, {n_links} links: "
+        f"{len(errors)} broken")
+  return 1 if errors else 0
+
+
+if __name__ == "__main__":
+  sys.exit(check())

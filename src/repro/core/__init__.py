@@ -3,8 +3,11 @@
 Quantization-aware DNN accelerator + model co-exploration:
   quant      power-of-two (LightNN) and integer quantizers, QAT STE
   pe         processing-element types (FP32/INT16/INT8/INT4/LightPE-1/2)
-  dataflow   row-stationary spatial-array dataflow model
-  oracle     synthesis stand-in (Synopsys DC + VCS @ FreePDK45)
+  dataflow   row-stationary spatial-array dataflow model (scalar + batch)
+  oracle     synthesis stand-in (Synopsys DC + VCS @ FreePDK45), with
+             vectorized ``*_batch`` siblings over ConfigTables
+  table      ConfigTable: struct-of-arrays design points for the
+             vectorized million-point evaluation path
   ppa        polynomial PPA regression models + k-fold CV degree selection
   dse        design-space exploration (compat shim over repro.explore)
   workloads  VGG/ResNet workloads + transformer-as-workload bridge
@@ -12,12 +15,14 @@ Quantization-aware DNN accelerator + model co-exploration:
   coexplore  joint HW x NN co-exploration (compat shim over repro.explore)
 
 Exploration itself lives in :mod:`repro.explore` (DesignSpace,
-Oracle/Polynomial backends, columnar ResultFrame, ExplorationSession).
+Oracle/Vector/Polynomial backends, columnar ResultFrame,
+ExplorationSession).
 """
 from repro.core.dataflow import AcceleratorConfig, ConvLayer
 from repro.core.pe import PAPER_PE_TYPES, PE_TYPES, pe_type
+from repro.core.table import ConfigTable
 
 __all__ = [
-    "AcceleratorConfig", "ConvLayer", "PAPER_PE_TYPES", "PE_TYPES",
-    "pe_type",
+    "AcceleratorConfig", "ConfigTable", "ConvLayer", "PAPER_PE_TYPES",
+    "PE_TYPES", "pe_type",
 ]

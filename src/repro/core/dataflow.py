@@ -23,12 +23,19 @@ Mapping summary (Chen et al., ISCA'16):
       - ifmap spad      -> sliding window of C_tile * K activations
   * passes iterate over ceil(C / C_tile) * ceil(F / F_tile) tiles; psums
     spill to the global buffer between channel tiles.
+
+Each simulation entry point has a vectorized ``*_batch`` sibling
+(:func:`simulate_layer_batch`, :func:`simulate_network_batch`) that
+evaluates a whole :class:`repro.core.table.ConfigTable` column-at-a-time,
+bit-identically to the scalar model on the numpy path.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import pe as pe_lib
 
@@ -254,3 +261,176 @@ def simulate_network(cfg: AcceleratorConfig, layers: Sequence[ConvLayer],
     all_stats.append(st)
   latency_s = total_cycles / (clock_mhz * 1e6)
   return latency_s, total_energy_pj * 1e-9, all_stats  # pJ -> mJ
+
+
+# ---------------------------------------------------------------------------
+# vectorized siblings: N design points x one layer at a time
+# ---------------------------------------------------------------------------
+# The batch functions evaluate a whole ConfigTable (or its
+# ``numeric_columns()`` dict) against one layer per call, mirroring the
+# scalar control flow with xp.where / xp.minimum so the numpy path matches
+# :func:`simulate_layer` bit for bit.  ``xp`` may be jax.numpy for the
+# optional device path (approximate there: jax defaults to float32).
+
+
+def _cols_of(table_or_cols) -> Dict[str, "np.ndarray"]:
+  if hasattr(table_or_cols, "numeric_columns"):
+    return table_or_cols.numeric_columns()
+  return table_or_cols
+
+
+@dataclasses.dataclass
+class LayerStatsBatch:
+  """Column form of :class:`LayerStats` for N design points."""
+  cycles: "np.ndarray"
+  compute_cycles: "np.ndarray"
+  dram_stall_cycles: "np.ndarray"
+  utilization: "np.ndarray"
+  macs: int
+  spad_reads: "np.ndarray"
+  spad_writes: "np.ndarray"
+  gbuf_reads: "np.ndarray"
+  gbuf_writes: "np.ndarray"
+  dram_reads: "np.ndarray"
+  dram_writes: "np.ndarray"
+
+  def row(self, i: int) -> LayerStats:
+    """One design point's stats as the scalar dataclass."""
+    return LayerStats(
+        cycles=float(self.cycles[i]),
+        compute_cycles=float(self.compute_cycles[i]),
+        dram_stall_cycles=float(self.dram_stall_cycles[i]),
+        utilization=float(self.utilization[i]), macs=self.macs,
+        spad_reads=float(self.spad_reads[i]),
+        spad_writes=float(self.spad_writes[i]),
+        gbuf_reads=float(self.gbuf_reads[i]),
+        gbuf_writes=float(self.gbuf_writes[i]),
+        dram_reads=float(self.dram_reads[i]),
+        dram_writes=float(self.dram_writes[i]))
+
+
+def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
+                         ) -> LayerStatsBatch:
+  """Vectorized :func:`simulate_layer`: all table rows against one layer.
+
+  ``clock_mhz`` is a per-row array (or scalar, broadcast).  Every branch of
+  the scalar model becomes a masked select; integer tiling uses the same
+  float ceil/floor expressions the scalar path evaluates, so results agree
+  exactly on the numpy path.
+  """
+  c = _cols_of(table)
+  pe_rows, pe_cols, n_pe = c["pe_rows"], c["pe_cols"], c["n_pe"]
+  E = float(max(layer.out_dim, 1))
+  K, C, F = float(layer.K), float(layer.C), float(layer.F)
+
+  # ---- spatial mapping -------------------------------------------------
+  col_folds = xp.ceil(E / pe_cols)
+  cols_used = xp.minimum(E, pe_cols)
+  k_rows = xp.minimum(K, pe_rows)
+  row_folds = xp.ceil(K / pe_rows)
+  one_fold = row_folds == 1
+  sets_per_col = xp.where(one_fold, xp.maximum(pe_rows // k_rows, 1.0), 1.0)
+  spatial_util = xp.where(
+      one_fold, (k_rows * sets_per_col * cols_used) / n_pe,
+      (pe_rows * cols_used) / n_pe)
+
+  # ---- scratchpad-bounded tiling ----------------------------------------
+  f_tile = xp.maximum(1.0, xp.minimum(F, c["sp_ps"]))
+  c_tile = xp.maximum(1.0, xp.minimum(
+      C, c["sp_fw"] // xp.maximum(K * f_tile, 1.0)))
+  c_tile = xp.maximum(1.0, xp.minimum(
+      c_tile, xp.maximum(c["sp_if"] // max(K, 1.0), 1.0) * sets_per_col))
+  n_c_passes = xp.ceil(C / c_tile)
+  n_f_passes = xp.ceil(F / f_tile)
+  n_c_passes_eff = xp.ceil(n_c_passes / sets_per_col)
+  passes = n_c_passes_eff * n_f_passes * col_folds * row_folds
+
+  # ---- compute cycles ----------------------------------------------------
+  per_pass = E * K * c_tile * f_tile + (K + cols_used)
+  compute_cycles = passes * per_pass
+  ideal_cycles = layer.macs / n_pe
+  compute_cycles = xp.maximum(compute_cycles, ideal_cycles)
+  utilization = xp.minimum(1.0, ideal_cycles / xp.maximum(compute_cycles, 1.0)
+                           ) * xp.minimum(1.0, spatial_util + 1e-9)
+
+  # ---- access counts -----------------------------------------------------
+  macs = layer.macs
+  spad_reads = (2.0 + 1.0 / max(K, 1.0)) * macs + xp.zeros_like(n_pe)
+  spad_writes = macs / max(K, 1.0) + xp.zeros_like(n_pe)
+  ifmap_words = float(layer.ifmap_count)
+  gbuf_bits = c["gbuf_kb"] * 1024 * 8
+  ifmap_fits = ifmap_words * c["act_bits"] <= 0.5 * gbuf_bits
+  dram_if = ifmap_words * xp.where(ifmap_fits, 1.0, n_f_passes)
+  gbuf_if_reads = ifmap_words * n_f_passes * row_folds
+  weight_words = float(layer.weight_count)
+  weights_fit = weight_words * c["weight_bits"] <= 0.25 * gbuf_bits
+  dram_w = weight_words * xp.where(weights_fit, 1.0, col_folds)
+  gbuf_w_reads = weight_words * col_folds
+  of_words = float(layer.ofmap_count)
+  psum_spills = xp.maximum(n_c_passes_eff - 1.0, 0.0)
+  dram_of = of_words
+  gbuf_reads = gbuf_if_reads + gbuf_w_reads + of_words * psum_spills
+  gbuf_writes = of_words * (psum_spills + 1.0)
+  dram_reads = dram_if + dram_w
+  dram_writes = dram_of + xp.zeros_like(n_pe)
+
+  # ---- bandwidth bound ---------------------------------------------------
+  cycle_s = 1e-6 / clock_mhz
+  dram_bits = (dram_if * c["act_bits"] + dram_w * c["weight_bits"]
+               + dram_of * c["psum_bits"])
+  dram_time_s = dram_bits / 8.0 / (c["bandwidth_gbps"] * 1e9)
+  dram_cycles = dram_time_s / cycle_s
+  dram_stall = xp.maximum(0.0, dram_cycles - 0.85 * compute_cycles)
+  cycles = compute_cycles + dram_stall
+
+  return LayerStatsBatch(
+      cycles=cycles, compute_cycles=compute_cycles,
+      dram_stall_cycles=dram_stall, utilization=utilization, macs=macs,
+      spad_reads=spad_reads, spad_writes=spad_writes,
+      gbuf_reads=gbuf_reads, gbuf_writes=gbuf_writes,
+      dram_reads=dram_reads, dram_writes=dram_writes)
+
+
+def layer_energy_pj_batch(table, layer: ConvLayer, stats: LayerStatsBatch,
+                          clock_mhz, leakage_mw, xp=np):
+  """Vectorized :func:`layer_energy_pj` (pJ per design point)."""
+  c = _cols_of(table)
+  e = pe_lib.ENERGY_PJ
+  mac_e = stats.macs * c["mac_energy_pj"]
+  k = max(layer.K, 1)
+  spad_read_bits = stats.macs * (c["act_bits"] + c["weight_bits"]
+                                 + c["psum_bits"] / k)
+  spad_write_bits = stats.spad_writes * c["psum_bits"]
+  spad_e = (spad_read_bits + spad_write_bits) * e["spad_access_per_bit"]
+  gbuf_bits = (stats.gbuf_reads + stats.gbuf_writes) * (
+      (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0)
+  gbuf_e = gbuf_bits * e["gbuf_access_per_bit"]
+  dram_bits = (stats.dram_reads * (c["act_bits"] + c["weight_bits"]) / 2.0
+               + stats.dram_writes * c["psum_bits"])
+  dram_e = dram_bits * e["dram_access_per_bit"]
+  time_s = stats.cycles / (clock_mhz * 1e6)
+  leak_e = leakage_mw * 1e-3 * time_s * 1e12  # mW * s -> pJ
+  return mac_e + spad_e + gbuf_e + dram_e + leak_e
+
+
+def simulate_network_batch(table, layers: Sequence[ConvLayer],
+                           clock_mhz, leakage_mw, xp=np):
+  """Vectorized :func:`simulate_network` over a ConfigTable.
+
+  Returns ``(latency_s, energy_mj, utilization)`` arrays, where
+  utilization is the cycle-weighted mean the scalar
+  :func:`repro.core.oracle.characterize` computes from per-layer stats.
+  """
+  c = _cols_of(table)
+  total_cycles = 0.0
+  total_energy_pj = 0.0
+  util_weighted = 0.0
+  for layer in layers:
+    st = simulate_layer_batch(c, layer, clock_mhz, xp=xp)
+    total_cycles = total_cycles + st.cycles
+    total_energy_pj = total_energy_pj + layer_energy_pj_batch(
+        c, layer, st, clock_mhz, leakage_mw, xp=xp)
+    util_weighted = util_weighted + st.utilization * st.cycles
+  latency_s = total_cycles / (clock_mhz * 1e6)
+  utilization = util_weighted / xp.maximum(total_cycles, 1e-12)
+  return latency_s, total_energy_pj * 1e-9, utilization  # pJ -> mJ

@@ -12,18 +12,32 @@ Calibration anchors (paper, Table 3 + Figs 6/8 orderings):
   area/power: FP32 > INT16 >> LightPE-2 > LightPE-1 per PE.
 
 Everything is per *design point* (AcceleratorConfig); latency additionally
-takes workload layers and delegates to the RS dataflow model.
+takes workload layers and delegates to the RS dataflow model.  Every
+target also has a vectorized ``*_batch`` sibling that evaluates a whole
+:class:`repro.core.table.ConfigTable` at once (bit-identical to the
+scalar path on numpy; optional jax device path) — the engine behind
+:class:`repro.explore.VectorOracleBackend`'s million-point sweeps.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import math
-from typing import Dict, List, Sequence, Tuple
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core import pe as pe_lib
 from repro.core.dataflow import (AcceleratorConfig, ConvLayer, LayerStats,
                                  simulate_network)
+
+# Characterization-model version: bump whenever oracle outputs change for
+# the same config (invalidates on-disk polynomial-model caches fitted
+# against older outputs).  v2: column-hashed _variation (splitmix64 chain
+# over key columns) replaced the per-point string SHA-256.
+ORACLE_VERSION = 2
 
 # FIFO depth per the Eyeriss-style template (4 FIFOs per PE, Fig. 3).
 FIFO_DEPTH = 4
@@ -35,11 +49,40 @@ PSUM_AMORTIZE = 3.0         # psum spad is touched once per K MACs (a local
 ARRAY_CTRL_GATES = 12_000   # top-level controller, address generators
 
 
+# Layout variation hashes the design point's KEY COLUMNS (not a formatted
+# key string): salt and PE-type names are folded in as one-time SHA-256
+# constants, then each knob column is chained through a splitmix64-style
+# finalizer.  The same mixer runs per-row on Python ints (scalar path) and
+# on uint64 numpy columns (:func:`_variation_batch`), so the vectorized
+# million-point path is bit-identical to the scalar oracle by construction.
+_MASK64 = (1 << 64) - 1
+
+
+@functools.lru_cache(maxsize=None)
+def _name_const(name: str) -> int:
+  """Stable 64-bit constant for a salt / PE-type name (one-time hash)."""
+  return int.from_bytes(hashlib.sha256(name.encode()).digest()[:8], "little")
+
+
+def _mix64(z: int) -> int:
+  """splitmix64 finalizer on a Python int (mod 2^64)."""
+  z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+  z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+  return z ^ (z >> 31)
+
+
+def _variation_key_ints(cfg: AcceleratorConfig) -> Tuple[int, ...]:
+  return (_name_const(cfg.pe_type), cfg.pe_rows, cfg.pe_cols, cfg.sp_if,
+          cfg.sp_fw, cfg.sp_ps, cfg.gbuf_kb,
+          int.from_bytes(struct.pack("<d", float(cfg.bandwidth_gbps)),
+                         "little"))
+
+
 def _variation(cfg: AcceleratorConfig, salt: str, pct: float) -> float:
   """Deterministic pseudo-random multiplier in [1-pct, 1+pct]."""
-  key = f"{salt}|{cfg.pe_type}|{cfg.pe_rows}x{cfg.pe_cols}|" \
-        f"{cfg.sp_if},{cfg.sp_fw},{cfg.sp_ps}|{cfg.gbuf_kb}|{cfg.bandwidth_gbps}"
-  h = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "little")
+  h = _name_const(salt)
+  for v in _variation_key_ints(cfg):
+    h = _mix64(h ^ v)
   u = (h / 2**64) * 2.0 - 1.0
   return 1.0 + pct * u
 
@@ -239,4 +282,275 @@ def characterize_layer_latency(cfg: AcceleratorConfig, layer: ConvLayer
   from repro.core.dataflow import simulate_layer
   clk = clock_mhz(cfg)
   st = simulate_layer(cfg, layer, clk)
+  return st.cycles / (clk * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# vectorized siblings: whole ConfigTables at once
+# ---------------------------------------------------------------------------
+# Every scalar formula above has a ``*_batch`` twin that evaluates a
+# :class:`repro.core.table.ConfigTable` column-at-a-time.  The formulas are
+# written against an array module ``xp`` (numpy by default; jax.numpy for
+# the optional device path) and mirror the scalar expressions op for op, so
+# the numpy path is bit-identical to looping the scalar oracle.  The
+# variation term is precomputed with numpy uint64 arithmetic either way
+# (jax traces treat it as an input), because the mixer needs uint64.
+
+
+def _mix64_batch(z: np.ndarray) -> np.ndarray:
+  """splitmix64 finalizer across a uint64 column (wraps mod 2^64)."""
+  z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+  z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+  return z ^ (z >> np.uint64(31))
+
+
+def _variation_batch(table, salt: str, pct: float) -> np.ndarray:
+  """Vectorized :func:`_variation`: one multiplier per table row."""
+  type64 = np.asarray([_name_const(t) for t in table.pe_type_names],
+                      np.uint64)[table.pe_code]
+  h = np.full(len(table), _name_const(salt), np.uint64)
+  cols = (type64,
+          table.pe_rows.astype(np.uint64), table.pe_cols.astype(np.uint64),
+          table.sp_if.astype(np.uint64), table.sp_fw.astype(np.uint64),
+          table.sp_ps.astype(np.uint64), table.gbuf_kb.astype(np.uint64),
+          table.bandwidth_gbps.astype(np.float64).view(np.uint64))
+  for v in cols:
+    h = _mix64_batch(h ^ v)
+  u = h.astype(np.float64) / 2**64 * 2.0 - 1.0
+  return 1.0 + pct * u
+
+
+def batch_inputs(table) -> Dict[str, np.ndarray]:
+  """The array bundle all batch formulas consume: numeric columns +
+  per-row PE constants + the three precomputed variation columns."""
+  cols = table.numeric_columns()
+  cols["var_clk"] = _variation_batch(table, "clk", 0.004)
+  cols["var_area"] = _variation_batch(table, "area", 0.005)
+  cols["var_pwr"] = _variation_batch(table, "pwr", 0.005)
+  return cols
+
+
+def _decoder_levels_arr(words, xp):
+  return xp.maximum(xp.ceil(xp.log2(xp.maximum(words, 2.0))), 1.0)
+
+
+def _sram_access_scale_arr(words, xp):
+  return (0.47 + 0.45 * xp.sqrt(xp.maximum(words, 1.0) / 64.0)
+          + 0.022 * _decoder_levels_arr(words, xp))
+
+
+def _sram_area_um2_arr(bits, words, xp):
+  decoder = 6.0 * _decoder_levels_arr(words, xp) \
+      * xp.sqrt(xp.maximum(bits, 1.0)) / 8.0
+  area = bits * pe_lib.SRAM_BIT_UM2 + 3.0 * xp.sqrt(xp.maximum(bits, 0.0)) \
+      + decoder + 15.0
+  return xp.where(bits <= 0, 0.0, area)
+
+
+def _clock_cols(c, xp):
+  ctrl_ns = 0.028 * xp.log2(xp.maximum(c["n_pe"], 2.0)) \
+      + 0.006 * xp.log2(xp.maximum(c["sp_fw"] + c["sp_if"] + c["sp_ps"], 2.0))
+  period_ns = (c["critical_path_ns"] + ctrl_ns) * c["var_clk"]
+  return 1000.0 / period_ns
+
+
+def _pe_area_cols(c, xp):
+  arith = c["arith_gates"] * pe_lib.GATE_AREA_UM2
+  spad = (_sram_area_um2_arr(c["sp_if"] * c["act_bits"], c["sp_if"], xp)
+          + _sram_area_um2_arr(c["sp_fw"] * c["weight_bits"], c["sp_fw"], xp)
+          + _sram_area_um2_arr(c["sp_ps"] * c["psum_bits"], c["sp_ps"], xp))
+  fifo_bits = FIFO_DEPTH * (2 * c["act_bits"] + c["weight_bits"]
+                            + c["psum_bits"])
+  fifo = fifo_bits * FLOP_BIT_UM2
+  ctrl = 0.04 * (arith + spad) + 220 * pe_lib.GATE_AREA_UM2
+  return arith + spad + fifo + ctrl
+
+
+def _array_area_cols(c, xp):
+  pe_area = _pe_area_cols(c, xp) * c["n_pe"]
+  word = (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0
+  noc = NOC_GATES_PER_PE * (word / 21.0) * c["n_pe"] * pe_lib.GATE_AREA_UM2
+  top = ARRAY_CTRL_GATES * pe_lib.GATE_AREA_UM2
+  congestion = 0.30 * (c["n_pe"] / 1024.0) ** 0.7
+  route = 1.0 / (1.0 - xp.minimum(congestion, 0.45))
+  um2 = (pe_area + noc + top) * route * c["var_area"]
+  return um2 * 1e-6
+
+
+def _gbuf_area_cols(c, xp):
+  return _sram_area_um2_arr(c["gbuf_kb"] * 1024 * 8, c["gbuf_kb"] * 512, xp) \
+      * 1.15 * 1e-6
+
+
+def _leakage_cols(c, xp):
+  word = (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0
+  logic_um2 = (c["arith_gates"] + NOC_GATES_PER_PE * word / 21.0) \
+      * pe_lib.GATE_AREA_UM2 * c["n_pe"] \
+      + ARRAY_CTRL_GATES * pe_lib.GATE_AREA_UM2
+  sram_bits = c["n_pe"] * (c["sp_if"] * c["act_bits"]
+                           + c["sp_fw"] * c["weight_bits"]
+                           + c["sp_ps"] * c["psum_bits"])
+  leak = (logic_um2 / pe_lib.GATE_AREA_UM2) * pe_lib.GATE_LEAKAGE_UW \
+      + sram_bits * 0.00035
+  return leak * 1e-3
+
+
+def _array_power_cols(c, xp, clock=None, array_area=None):
+  if clock is None:
+    clock = _clock_cols(c, xp)
+  if array_area is None:
+    array_area = _array_area_cols(c, xp)
+  f_hz = clock * 1e6
+  e = pe_lib.ENERGY_PJ
+  spad_pj = e["spad_access_per_bit"] * (
+      c["act_bits"] * _sram_access_scale_arr(c["sp_if"], xp)
+      + c["weight_bits"] * _sram_access_scale_arr(c["sp_fw"], xp)
+      + (2.0 / PSUM_AMORTIZE) * c["psum_bits"]
+      * _sram_access_scale_arr(c["sp_ps"], xp))
+  per_pe_pj = (c["mac_energy_pj"] + spad_pj
+               + FIFO_DEPTH * 0.25 * e["fifo_access_per_bit"])
+  activity = 0.62
+  dyn_pe_mw = c["n_pe"] * per_pe_pj * activity * f_hz * 1e-9
+  gbuf_word_bits = (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0
+  noc_mw = c["n_pe"] * 0.004 * (f_hz * 1e-9) * gbuf_word_bits
+  dyn = dyn_pe_mw + noc_mw
+  density = dyn / xp.maximum(array_area, 1e-6)
+  leak = _leakage_cols(c, xp) * (1.0 + 0.9 * density / (density + 40.0))
+  return dyn * c["var_pwr"] + leak
+
+
+def _gbuf_power_cols(c, xp, clock=None):
+  if clock is None:
+    clock = _clock_cols(c, xp)
+  f_hz = clock * 1e6
+  e = pe_lib.ENERGY_PJ
+  gbuf_word_bits = (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0
+  gbuf_pj_bit = e["gbuf_access_per_bit"] * _sram_access_scale_arr(
+      c["gbuf_kb"] * 16.0, xp)
+  dyn = xp.sqrt(c["n_pe"]) * gbuf_word_bits * gbuf_pj_bit * 0.62 \
+      * f_hz * 1e-9
+  leak = c["gbuf_kb"] * 8192 * 0.00035 * 1e-3
+  return dyn + leak
+
+
+# -- public batch API (each takes a ConfigTable, like the scalar siblings
+# take an AcceleratorConfig) -------------------------------------------------
+
+def clock_mhz_batch(table, xp=np, inputs: Optional[Dict] = None) -> np.ndarray:
+  """Vectorized :func:`clock_mhz` over a ConfigTable."""
+  return _clock_cols(inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def pe_area_um2_batch(table, xp=np, inputs: Optional[Dict] = None
+                      ) -> np.ndarray:
+  """Vectorized :func:`pe_area_um2`."""
+  return _pe_area_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def array_area_mm2_batch(table, xp=np, inputs: Optional[Dict] = None
+                         ) -> np.ndarray:
+  """Vectorized :func:`array_area_mm2`."""
+  return _array_area_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def gbuf_area_mm2_batch(table, xp=np, inputs: Optional[Dict] = None
+                        ) -> np.ndarray:
+  """Vectorized :func:`gbuf_area_mm2`."""
+  return _gbuf_area_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def area_mm2_batch(table, xp=np, inputs: Optional[Dict] = None) -> np.ndarray:
+  """Vectorized :func:`area_mm2`."""
+  c = inputs if inputs is not None else batch_inputs(table)
+  return _array_area_cols(c, xp) + _gbuf_area_cols(c, xp)
+
+
+def leakage_mw_batch(table, xp=np, inputs: Optional[Dict] = None
+                     ) -> np.ndarray:
+  """Vectorized :func:`leakage_mw`."""
+  return _leakage_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def array_power_mw_batch(table, xp=np, inputs: Optional[Dict] = None
+                         ) -> np.ndarray:
+  """Vectorized :func:`array_power_mw`."""
+  return _array_power_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def gbuf_power_mw_batch(table, xp=np, inputs: Optional[Dict] = None
+                        ) -> np.ndarray:
+  """Vectorized :func:`gbuf_power_mw`."""
+  return _gbuf_power_cols(
+      inputs if inputs is not None else batch_inputs(table), xp)
+
+
+def power_mw_batch(table, xp=np, inputs: Optional[Dict] = None) -> np.ndarray:
+  """Vectorized :func:`power_mw`."""
+  c = inputs if inputs is not None else batch_inputs(table)
+  clock = _clock_cols(c, xp)
+  return _array_power_cols(c, xp, clock=clock) \
+      + _gbuf_power_cols(c, xp, clock=clock)
+
+
+def power_area_batch(table, xp=np, inputs: Optional[Dict] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+  """(power_mw, area_mm2) per row, sharing the clock / array-area
+  intermediates both targets need — the hot pair of every DSE sweep."""
+  c = inputs if inputs is not None else batch_inputs(table)
+  clock = _clock_cols(c, xp)
+  array_area = _array_area_cols(c, xp)
+  gbuf_area = _gbuf_area_cols(c, xp)
+  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
+      + _gbuf_power_cols(c, xp, clock=clock)
+  return power, array_area + gbuf_area
+
+
+@dataclasses.dataclass
+class BatchCharacterization:
+  """Column form of :class:`Characterization` for N design points."""
+  clock_mhz: np.ndarray
+  area_mm2: np.ndarray
+  power_mw: np.ndarray
+  latency_s: np.ndarray
+  energy_mj: np.ndarray
+  utilization: np.ndarray
+
+  def __len__(self) -> int:
+    return int(self.clock_mhz.shape[0])
+
+
+def characterize_batch(table, layers: Sequence[ConvLayer], xp=np,
+                       inputs: Optional[Dict] = None
+                       ) -> BatchCharacterization:
+  """Vectorized :func:`characterize`: one synthesis-oracle characterization
+  per table row, sharing clock/area/variation intermediates across targets.
+  """
+  from repro.core.dataflow import simulate_network_batch
+  c = inputs if inputs is not None else batch_inputs(table)
+  clock = _clock_cols(c, xp)
+  array_area = _array_area_cols(c, xp)
+  area = array_area + _gbuf_area_cols(c, xp)
+  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
+      + _gbuf_power_cols(c, xp, clock=clock)
+  leak = _leakage_cols(c, xp)
+  latency_s, energy_mj, utilization = simulate_network_batch(
+      c, layers, clock, leak, xp=xp)
+  return BatchCharacterization(
+      clock_mhz=clock, area_mm2=area, power_mw=power,
+      latency_s=latency_s, energy_mj=energy_mj, utilization=utilization)
+
+
+def characterize_layer_latency_batch(table, layer: ConvLayer, xp=np,
+                                     inputs: Optional[Dict] = None
+                                     ) -> np.ndarray:
+  """Vectorized :func:`characterize_layer_latency` (seconds per row)."""
+  from repro.core.dataflow import simulate_layer_batch
+  c = inputs if inputs is not None else batch_inputs(table)
+  clk = _clock_cols(c, xp)
+  st = simulate_layer_batch(c, layer, clk, xp=xp)
   return st.cycles / (clk * 1e6)

@@ -219,7 +219,11 @@ def sample_configs(pe_type: str, n: int, seed: int = 0
   return cfgs
 
 
-def hw_feature_matrix(cfgs: Sequence[AcceleratorConfig]) -> np.ndarray:
+def hw_feature_matrix(cfgs) -> np.ndarray:
+  """(N, 4) power/area features from a config sequence or a ConfigTable
+  (the table path never touches per-point Python objects)."""
+  if hasattr(cfgs, "hw_features"):  # ConfigTable
+    return cfgs.hw_features()
   return np.asarray([c.hw_features() for c in cfgs], np.float64)
 
 
@@ -275,18 +279,24 @@ class PPAModels:
   area: PolyModel
   latency: PolyModel
 
-  def predict_power_mw(self, cfgs: Sequence[AcceleratorConfig]) -> np.ndarray:
+  def predict_power_mw(self, cfgs) -> np.ndarray:
+    """Configs sequence or ConfigTable -> array-PE-subsystem power (mW)."""
     return self.power.predict(hw_feature_matrix(cfgs))
 
-  def predict_area_mm2(self, cfgs: Sequence[AcceleratorConfig]) -> np.ndarray:
+  def predict_area_mm2(self, cfgs) -> np.ndarray:
+    """Configs sequence or ConfigTable -> array-PE-subsystem area (mm^2)."""
     return self.area.predict(hw_feature_matrix(cfgs))
 
-  def predict_network_latency_s(self, cfgs: Sequence[AcceleratorConfig],
+  def predict_network_latency_s(self, cfgs,
                                 layers: Sequence[ConvLayer]) -> np.ndarray:
     """Sum of per-layer latency predictions (layer-level strategy).
-    Vectorized: hw features tiled against cached layer features."""
-    cfgs = list(cfgs)
-    hw = np.asarray([c.latency_hw_features() for c in cfgs], np.float64)
+    Vectorized: hw features tiled against cached layer features; accepts a
+    config sequence or a ConfigTable."""
+    if hasattr(cfgs, "latency_hw_features"):  # ConfigTable
+      hw = cfgs.latency_hw_features()
+    else:
+      cfgs = list(cfgs)
+      hw = np.asarray([c.latency_hw_features() for c in cfgs], np.float64)
     lf = np.asarray([l.features() for l in layers], np.float64)
     n_c, n_l = hw.shape[0], lf.shape[0]
     rows = np.concatenate(

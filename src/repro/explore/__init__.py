@@ -5,11 +5,17 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
 
   DesignSpace          declarative space spec: axes (from HW_RANGES), PE
                        types, constraints; grid/random/stratified sampling
-                       with deterministic seeds                 [space]
+                       with deterministic seeds; list or ConfigTable
+                       materialization                          [space]
+  ConfigTable          struct-of-arrays design points — the input-side
+                       twin of ResultFrame (re-export of
+                       repro.core.table)                        [table]
   EvaluationBackend    protocol turning (configs, workload) -> results
     OracleBackend      slow, exact per-design characterization
+    VectorOracleBackend  the same oracle vectorized over ConfigTables in
+                       bounded-memory chunks (optional jax.jit path)
     PolynomialBackend  fast polynomial PPA models; fit-once cached,
-                       save/load to .npz                        [backend]
+                       save/load to .npz; list or table inputs  [backend]
   ResultFrame          columnar (struct-of-arrays) results with vectorized
                        .pareto(), .normalize(), .stats(), .top_k() [frame]
   ExplorationSession   facade driving plain DSE and co-exploration over
@@ -18,7 +24,7 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
 Quickstart::
 
     from repro.explore import (DesignSpace, ExplorationSession,
-                               PolynomialBackend)
+                               PolynomialBackend, VectorOracleBackend)
     from repro.core.workloads import get_network
 
     layers = get_network("resnet20")
@@ -27,18 +33,28 @@ Quickstart::
     ppa_n, energy_n = frame.normalize(ref="best-int16")
     best = frame.top_k(1, by="perf_per_area")
 
+    # exact-oracle sweep over 1M design points, fully vectorized:
+    session = ExplorationSession(VectorOracleBackend(chunk_size=65536))
+    big = session.explore(layers, "resnet20", n_per_type=250_000)
+
 The legacy ``repro.core.dse`` / ``repro.core.coexplore`` modules remain as
-thin compatibility shims over this package.
+thin compatibility shims over this package.  See ``docs/explore.md`` for
+the full guide and ``docs/architecture.md`` for the paper-to-code map.
 """
+from repro.core.table import ConfigTable
 from repro.explore.backend import (EvaluationBackend, OracleBackend,
-                                   PolynomialBackend, gbuf_overheads)
+                                   PolynomialBackend, VectorOracleBackend,
+                                   gbuf_overheads, gbuf_overheads_table)
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
                                  pareto_mask, summary_stats)
 from repro.explore.session import ExplorationSession
-from repro.explore.space import AXIS_ORDER, Axis, DesignSpace
+from repro.explore.space import (AXIS_ORDER, Axis, DesignSpace,
+                                 VectorConstraint, vector_constraint)
 
 __all__ = [
-    "AXIS_ORDER", "Axis", "DesignPoint", "DesignSpace", "EvaluationBackend",
-    "ExplorationSession", "Normalized", "OracleBackend", "PolynomialBackend",
-    "ResultFrame", "gbuf_overheads", "pareto_mask", "summary_stats",
+    "AXIS_ORDER", "Axis", "ConfigTable", "DesignPoint", "DesignSpace",
+    "EvaluationBackend", "ExplorationSession", "Normalized", "OracleBackend",
+    "PolynomialBackend", "ResultFrame", "VectorConstraint",
+    "VectorOracleBackend", "gbuf_overheads", "gbuf_overheads_table",
+    "pareto_mask", "summary_stats", "vector_constraint",
 ]

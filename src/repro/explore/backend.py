@@ -1,26 +1,35 @@
 """Pluggable evaluation backends: how a design point gets its PPA numbers.
 
-Two implementations of the :class:`EvaluationBackend` protocol:
+Three implementations of the :class:`EvaluationBackend` protocol:
 
-  OracleBackend      slow, exact — full per-design characterization via the
-                     synthesis stand-in (``repro.core.oracle``)
-  PolynomialBackend  fast — QUIDAM's fit-once / evaluate-many polynomial
-                     models (``repro.core.ppa``), with in-process fit
-                     memoization and ``save``/``load`` to ``.npz`` so
-                     sessions and benchmarks never refit
+  OracleBackend        slow, exact — full per-design characterization via
+                       the synthesis stand-in (``repro.core.oracle``),
+                       one Python call per design point
+  VectorOracleBackend  the same oracle, array-at-a-time — consumes a
+                       :class:`~repro.core.table.ConfigTable` in
+                       bounded-memory chunks via the ``*_batch`` formulas;
+                       bit-identical to OracleBackend on the numpy path,
+                       ~2 orders of magnitude faster, with an optional
+                       ``jax.jit`` / ``shard_map`` device path
+  PolynomialBackend    fast — QUIDAM's fit-once / evaluate-many polynomial
+                       models (``repro.core.ppa``), with in-process fit
+                       memoization and ``save``/``load`` to ``.npz`` so
+                       sessions and benchmarks never refit; accepts config
+                       lists or ConfigTables (the table path predicts
+                       without building per-point objects)
 
-Both compose the global buffer the same way: the polynomial targets cover
+All compose the global buffer the same way: the polynomial targets cover
 the PE-array subsystem only (the paper's 4-feature vector cannot see GBS),
-so the buffer adds on as a pre-characterized SRAM macro via the single
-memoized helper :func:`gbuf_overheads` — previously duplicated between
-``dse.evaluate_with_models`` and ``coexplore.co_explore``.
+so the buffer adds on as a pre-characterized SRAM macro via
+:func:`gbuf_overheads` (memoized, scalar) / :func:`gbuf_overheads_table`
+(vectorized).
 """
 from __future__ import annotations
 
 import functools
 import hashlib
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -28,7 +37,10 @@ from repro.core import oracle
 from repro.core import ppa as ppa_lib
 from repro.core.dataflow import AcceleratorConfig, ConvLayer
 from repro.core.pe import PAPER_PE_TYPES
+from repro.core.table import ConfigTable
 from repro.explore.frame import ResultFrame
+
+Configs = Union[Sequence[AcceleratorConfig], ConfigTable]
 
 try:  # Protocol is typing-only; keep runtime deps minimal
   from typing import Protocol
@@ -37,11 +49,18 @@ except ImportError:  # pragma: no cover - py<3.8
 
 
 class EvaluationBackend(Protocol):
-  """Anything that turns (configs, workload) into a ResultFrame."""
+  """Anything that turns (configs, workload) into a ResultFrame.
+
+  ``cfgs`` may be a sequence of per-point dataclasses or a columnar
+  :class:`ConfigTable`.  Backends that implement the optional
+  ``evaluate_table(table, layers, network)`` method (and advertise
+  ``prefers_table = True``) get handed ConfigTables directly by
+  :class:`~repro.explore.ExplorationSession`, keeping million-point
+  sweeps columnar end to end.
+  """
   name: str
 
-  def evaluate(self, cfgs: Sequence[AcceleratorConfig],
-               layers: Sequence[ConvLayer],
+  def evaluate(self, cfgs: Configs, layers: Sequence[ConvLayer],
                network: str = "net") -> ResultFrame:
     ...
 
@@ -55,10 +74,13 @@ def _gbuf_cached(cfg: AcceleratorConfig) -> Tuple[float, float]:
   return oracle.gbuf_power_mw(cfg), oracle.gbuf_area_mm2(cfg)
 
 
-def gbuf_overheads(cfgs: Sequence[AcceleratorConfig]
-                   ) -> Tuple[np.ndarray, np.ndarray]:
+def gbuf_overheads(cfgs: Configs) -> Tuple[np.ndarray, np.ndarray]:
   """(power_mw, area_mm2) of the global-buffer SRAM macro per config,
-  memoized per unique config across all backends and callers."""
+  memoized per unique config across all backends and callers.  ConfigTable
+  inputs take the vectorized (unmemoized — it is cheaper than the cache
+  lookup loop) path."""
+  if isinstance(cfgs, ConfigTable):
+    return gbuf_overheads_table(cfgs)
   pwr = np.empty(len(cfgs))
   area = np.empty(len(cfgs))
   for i, c in enumerate(cfgs):
@@ -66,16 +88,23 @@ def gbuf_overheads(cfgs: Sequence[AcceleratorConfig]
   return pwr, area
 
 
+def gbuf_overheads_table(table: ConfigTable, xp=np
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+  """Vectorized :func:`gbuf_overheads` over a ConfigTable."""
+  inputs = oracle.batch_inputs(table)
+  return (oracle.gbuf_power_mw_batch(table, xp=xp, inputs=inputs),
+          oracle.gbuf_area_mm2_batch(table, xp=xp, inputs=inputs))
+
+
 # ---------------------------------------------------------------------------
-# oracle backend (slow, exact)
+# oracle backends (exact): scalar loop + vectorized chunked sibling
 # ---------------------------------------------------------------------------
 
 class OracleBackend:
   """Full characterization per design — the synthesis stand-in."""
   name = "oracle"
 
-  def evaluate(self, cfgs: Sequence[AcceleratorConfig],
-               layers: Sequence[ConvLayer],
+  def evaluate(self, cfgs: Configs, layers: Sequence[ConvLayer],
                network: str = "net") -> ResultFrame:
     cfgs = list(cfgs)
     lat = np.empty(len(cfgs))
@@ -87,6 +116,104 @@ class OracleBackend:
     return ResultFrame(lat, pwr, area,
                        np.asarray([c.pe_type for c in cfgs]),
                        tuple(cfgs), network)
+
+
+class VectorOracleBackend:
+  """The synthesis stand-in, array-at-a-time over ConfigTables.
+
+  Evaluates design points in bounded-memory chunks of ``chunk_size`` rows
+  through the vectorized oracle/dataflow formulas.  On the default numpy
+  path results are bit-identical to :class:`OracleBackend`; with
+  ``jit=True`` the per-chunk formula evaluation runs under ``jax.jit``
+  (and, when several devices are visible, ``shard_map`` over the row
+  axis), which is *approximate* — jax defaults to float32 — so it is a
+  throughput option, not a parity option.
+  """
+  name = "vector-oracle"
+  prefers_table = True
+
+  def __init__(self, chunk_size: int = 65536, jit: bool = False):
+    if chunk_size <= 0:
+      raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    self.chunk_size = chunk_size
+    self.jit = jit
+    self._jit_cache: Dict[Tuple[ConvLayer, ...], object] = {}
+
+  def evaluate(self, cfgs: Configs, layers: Sequence[ConvLayer],
+               network: str = "net") -> ResultFrame:
+    """Config lists are converted to a table; the frame keeps whichever
+    design-point representation came in."""
+    if isinstance(cfgs, ConfigTable):
+      return self.evaluate_table(cfgs, layers, network)
+    cfgs = list(cfgs)
+    frame = self.evaluate_table(ConfigTable.from_configs(cfgs), layers,
+                                network)
+    frame.cfgs = tuple(cfgs)
+    return frame
+
+  def evaluate_table(self, table: ConfigTable, layers: Sequence[ConvLayer],
+                     network: str = "net") -> ResultFrame:
+    n = len(table)
+    lat = np.empty(n)
+    pwr = np.empty(n)
+    area = np.empty(n)
+    lo = 0
+    for chunk in table.chunks(self.chunk_size):
+      if self.jit:
+        l, p, a = self._eval_chunk_jax(chunk, tuple(layers))
+      else:
+        ch = oracle.characterize_batch(chunk, layers)
+        l, p, a = ch.latency_s, ch.power_mw, ch.area_mm2
+      hi = lo + len(chunk)
+      lat[lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
+      lo = hi
+    return ResultFrame(lat, pwr, area, table.pe_type_strings(), (),
+                       network, table=table)
+
+  # -- optional device path -------------------------------------------------
+
+  def _eval_chunk_jax(self, chunk: ConfigTable,
+                      layers: Tuple[ConvLayer, ...]):
+    import jax
+    inputs = oracle.batch_inputs(chunk)  # variations need host uint64
+    fn = self._jit_cache.get(layers)
+    if fn is None:
+      fn = self._build_jax_fn(layers)
+      self._jit_cache[layers] = fn
+    l, p, a = fn(inputs)
+    return (np.asarray(jax.device_get(l), np.float64),
+            np.asarray(jax.device_get(p), np.float64),
+            np.asarray(jax.device_get(a), np.float64))
+
+  @staticmethod
+  def _build_jax_fn(layers: Tuple[ConvLayer, ...]):
+    import jax
+    import jax.numpy as jnp
+
+    def formulas(inputs):
+      ch = oracle.characterize_batch(None, layers, xp=jnp, inputs=inputs)
+      return ch.latency_s, ch.power_mw, ch.area_mm2
+
+    devices = jax.devices()
+    if len(devices) > 1:
+      from jax.experimental.shard_map import shard_map
+      from jax.sharding import Mesh, PartitionSpec as P
+      mesh = Mesh(np.asarray(devices), ("batch",))
+      sharded = shard_map(formulas, mesh=mesh,
+                          in_specs=(P("batch"),), out_specs=P("batch"))
+
+      def padded(inputs):
+        n = next(iter(inputs.values())).shape[0]
+        pad = (-n) % len(devices)
+        if pad:
+          inputs = {k: jnp.concatenate([jnp.asarray(v),
+                                        jnp.asarray(v[-1:]).repeat(pad, 0)])
+                    for k, v in inputs.items()}
+        l, p, a = sharded(inputs)
+        return l[:n], p[:n], a[:n]
+
+      return jax.jit(padded)
+    return jax.jit(formulas)
 
 
 # ---------------------------------------------------------------------------
@@ -103,8 +230,10 @@ def _layers_fingerprint(layers: Optional[Sequence[ConvLayer]]) -> str:
 def _fit_key(pe_types: Tuple[str, ...], degree: int, n_train: int,
              seed: int, layers: Optional[Sequence[ConvLayer]]
              ) -> Tuple[str, ...]:
+  # oracle.ORACLE_VERSION is part of the fingerprint: a cache fitted
+  # against older oracle outputs must refit, not silently load
   return (",".join(pe_types), str(degree), str(n_train), str(seed),
-          _layers_fingerprint(layers))
+          _layers_fingerprint(layers), f"oracle-v{oracle.ORACLE_VERSION}")
 
 
 # in-process fit-once cache: identical fit requests share one model bundle
@@ -220,10 +349,12 @@ class PolynomialBackend:
 
   # -- evaluation -----------------------------------------------------------
 
-  def evaluate(self, cfgs: Sequence[AcceleratorConfig],
-               layers: Sequence[ConvLayer],
+  def evaluate(self, cfgs: Configs, layers: Sequence[ConvLayer],
                network: str = "net") -> ResultFrame:
-    """Batched prediction, grouped by PE type (one model set per type)."""
+    """Batched prediction, grouped by PE type (one model set per type).
+    ConfigTables take the fully columnar path."""
+    if isinstance(cfgs, ConfigTable):
+      return self.evaluate_table(cfgs, layers, network)
     cfgs = list(cfgs)
     by_type: Dict[str, List[int]] = {}
     for i, c in enumerate(cfgs):
@@ -245,3 +376,30 @@ class PolynomialBackend:
     return ResultFrame(lat, pwr, area,
                        np.asarray([c.pe_type for c in cfgs]),
                        tuple(cfgs), network)
+
+  def evaluate_table(self, table: ConfigTable, layers: Sequence[ConvLayer],
+                     network: str = "net",
+                     chunk_size: int = 32768) -> ResultFrame:
+    """Columnar prediction over a ConfigTable, per-PE-type model sets, in
+    bounded-memory chunks (the latency feature matrix is rows x layers
+    wide — chunking caps it at ``chunk_size * len(layers)`` rows)."""
+    missing = {t for t, idx in table.groups_by_type()} - set(self.models)
+    if missing:
+      raise KeyError(f"backend has no models for PE types {sorted(missing)}; "
+                     f"fitted types: {sorted(self.models)}")
+    n = len(table)
+    lat = np.zeros(n)
+    pwr = np.zeros(n)
+    area = np.zeros(n)
+    for pe_type, idxs in table.groups_by_type():
+      m = self.models[pe_type]
+      for lo in range(0, idxs.size, chunk_size):
+        sel = idxs[lo:lo + chunk_size]
+        sub = table.select(sel)
+        lat[sel] = np.maximum(
+            m.predict_network_latency_s(sub, layers), 1e-9)
+        gb_p, gb_a = gbuf_overheads_table(sub)
+        pwr[sel] = np.maximum(m.predict_power_mw(sub), 1e-3) + gb_p
+        area[sel] = np.maximum(m.predict_area_mm2(sub), 1e-6) + gb_a
+    return ResultFrame(lat, pwr, area, table.pe_type_strings(), (),
+                       network, table=table)

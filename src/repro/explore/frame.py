@@ -26,6 +26,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.dataflow import AcceleratorConfig
+from repro.core.table import ConfigTable
 
 BASE_COLUMNS = ("latency_s", "power_mw", "area_mm2")
 
@@ -150,7 +151,13 @@ class Normalized:
 
 @dataclasses.dataclass(eq=False)
 class ResultFrame:
-  """Struct-of-arrays over evaluated design points."""
+  """Struct-of-arrays over evaluated design points.
+
+  Design points can ride along either as a tuple of per-point ``cfgs``
+  dataclasses (the scalar path) or as a columnar :class:`ConfigTable`
+  (the vectorized path, where million-point sweeps never build per-point
+  objects); :meth:`config_at` reads from whichever is present.
+  """
   latency_s: np.ndarray
   power_mw: np.ndarray
   area_mm2: np.ndarray
@@ -159,6 +166,7 @@ class ResultFrame:
   network: str = "net"
   extra: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
   meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+  table: Optional[ConfigTable] = None
 
   def __post_init__(self):
     self.latency_s = np.asarray(self.latency_s, np.float64)
@@ -174,6 +182,8 @@ class ResultFrame:
         raise ValueError(f"column {name!r} has {len(arr)} rows, expected {n}")
     if self.cfgs and len(self.cfgs) != n:
       raise ValueError(f"{len(self.cfgs)} cfgs for {n} rows")
+    if self.table is not None and len(self.table) != n:
+      raise ValueError(f"{len(self.table)}-row table for {n} rows")
 
   def __len__(self) -> int:
     return int(self.latency_s.shape[0])
@@ -223,9 +233,21 @@ class ResultFrame:
         network=network if network is not None
         else (pts[0].network if pts else "net"))
 
+  def config_at(self, i: int) -> AcceleratorConfig:
+    """The i-th design point, from ``cfgs`` or the columnar ``table``."""
+    if self.cfgs:
+      return self.cfgs[i]
+    if self.table is not None:
+      return self.table.config_at(i)
+    raise ValueError("frame carries neither cfgs nor a ConfigTable")
+
   def to_points(self) -> List[DesignPoint]:
+    if not self.cfgs and self.table is not None:
+      cfgs = self.table.to_configs()
+    else:
+      cfgs = self.cfgs
     return [DesignPoint(cfg, self.network, float(l), float(p), float(a))
-            for cfg, l, p, a in zip(self.cfgs, self.latency_s,
+            for cfg, l, p, a in zip(cfgs, self.latency_s,
                                     self.power_mw, self.area_mm2)]
 
   def select(self, index: Union[np.ndarray, Sequence[int]]) -> "ResultFrame":
@@ -237,7 +259,8 @@ class ResultFrame:
     return ResultFrame(
         self.latency_s[idx], self.power_mw[idx], self.area_mm2[idx],
         self.pe_type[idx], cfgs, self.network,
-        {k: v[idx] for k, v in self.extra.items()}, dict(self.meta))
+        {k: v[idx] for k, v in self.extra.items()}, dict(self.meta),
+        self.table.select(idx) if self.table is not None else None)
 
   @classmethod
   def concat(cls, frames: Sequence["ResultFrame"]) -> "ResultFrame":
@@ -247,14 +270,28 @@ class ResultFrame:
     keys = set(frames[0].extra)
     if any(set(f.extra) != keys for f in frames):
       raise ValueError("frames have mismatched extra columns")
+    cfgs = sum((f.cfgs for f in frames), ()) \
+        if all(f.cfgs or not len(f) for f in frames) else ()
+    if all(f.table is not None for f in frames):
+      table = ConfigTable.concat([f.table for f in frames])
+    elif not cfgs and all(f.table is not None or f.cfgs or not len(f)
+                          for f in frames):
+      # mixed representations: lift the cfgs-only frames into tables so
+      # design points survive the concat (tables are the cheap direction)
+      table = ConfigTable.concat([
+          f.table if f.table is not None else ConfigTable.from_configs(f.cfgs)
+          for f in frames])
+    else:
+      table = None
     return cls(
         np.concatenate([f.latency_s for f in frames]),
         np.concatenate([f.power_mw for f in frames]),
         np.concatenate([f.area_mm2 for f in frames]),
         np.concatenate([f.pe_type for f in frames]),
-        sum((f.cfgs for f in frames), ()),
+        cfgs,
         frames[0].network,
-        {k: np.concatenate([f.extra[k] for f in frames]) for k in keys})
+        {k: np.concatenate([f.extra[k] for f in frames]) for k in keys},
+        table=table)
 
   # -- analysis ------------------------------------------------------------
 

@@ -9,11 +9,17 @@ flavours over the same machinery:
                     -> ResultFrame (timings in frame.meta)
   co_explore(...)   pair sampled hardware with supernet-evaluated NN
                     architectures -> ResultFrame with top1/arch columns
+
+``explore`` picks between two sampling materializations: the legacy
+per-point config list, and the columnar :class:`ConfigTable` path for
+backends that prefer it (``prefers_table = True``, e.g.
+:class:`~repro.explore.VectorOracleBackend`) — million-point sweeps then
+stay struct-of-arrays from sampling through evaluation to the frame.
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -42,15 +48,30 @@ class ExplorationSession:
 
   def explore(self, layers: Sequence[ConvLayer], network: str,
               n_per_type: int = 200, seed: int = 17,
-              method: str = "random", measure_oracle: int = 0
-              ) -> ResultFrame:
+              method: str = "random", measure_oracle: int = 0,
+              vectorized: Union[bool, str] = "auto") -> ResultFrame:
     """Sample the space, evaluate `network`; optionally time the oracle on
     the first `measure_oracle` configs for the paper's speedup claim.
+
+    vectorized: "auto" (default) samples a columnar ConfigTable when the
+    backend advertises ``prefers_table``; True forces the table path for
+    any backend with ``evaluate_table``; False keeps the legacy per-point
+    config list (bit-compatible with the pre-table sampler sequences).
 
     frame.meta carries: eval_seconds, eval_us_per_design, and (when
     measured) oracle_seconds_per_design + speedup.
     """
-    cfgs = self.space.sample(n_per_type, seed=seed, method=method)
+    if vectorized == "auto":
+      use_table = bool(getattr(self.backend, "prefers_table", False))
+    else:
+      use_table = bool(vectorized)
+    if use_table and not hasattr(self.backend, "evaluate_table"):
+      raise ValueError(f"backend {self.backend.name!r} has no "
+                       "evaluate_table; pass vectorized=False")
+    if use_table:
+      cfgs = self.space.sample_table(n_per_type, seed=seed, method=method)
+    else:
+      cfgs = self.space.sample(n_per_type, seed=seed, method=method)
     t0 = time.perf_counter()
     frame = self.backend.evaluate(cfgs, layers, network)
     t_eval = time.perf_counter() - t0
@@ -59,8 +80,10 @@ class ExplorationSession:
     frame.meta["eval_us_per_design"] = t_eval / n * 1e6
     if measure_oracle:
       k = min(measure_oracle, len(cfgs))
+      sample = cfgs.select(slice(0, k)).to_configs() \
+          if use_table else cfgs[:k]
       t1 = time.perf_counter()
-      OracleBackend().evaluate(cfgs[:k], layers, network)
+      OracleBackend().evaluate(sample, layers, network)
       per_design = (time.perf_counter() - t1) / max(k, 1)
       frame.meta["oracle_seconds_per_design"] = per_design
       frame.meta["speedup"] = per_design / max(t_eval / n, 1e-12)

@@ -12,6 +12,16 @@ three flavours:
   grid        evenly-strided slice of the full cartesian product
   stratified  per-axis latin-hypercube: every axis value covered evenly,
               axes decorrelated by independent seeded permutations
+
+Every flavour also has a columnar twin (:meth:`DesignSpace.sample_table` /
+:meth:`DesignSpace.sample_type_table`) that materializes a
+:class:`~repro.core.table.ConfigTable` directly — million-point sweeps
+never instantiate per-point dataclasses.  ``grid`` and ``stratified``
+tables enumerate the exact same design-point sequence as their list twins;
+``random`` tables draw column-major (one RNG call per axis) and therefore
+have their own deterministic sequence.  Constraints apply to tables too:
+plain per-config predicates are evaluated row-by-row (slow, correct),
+while :func:`vector_constraint`-wrapped predicates filter whole columns.
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import numpy as np
 from repro.core.dataflow import AcceleratorConfig
 from repro.core.pe import PAPER_PE_TYPES
 from repro.core.ppa import HW_RANGES
+from repro.core.table import ConfigTable
 
 # canonical axis order == AcceleratorConfig field order == the RNG call
 # order of the legacy sampler (determinism contract, do not reorder)
@@ -31,6 +42,34 @@ AXIS_ORDER = ("pe_rows", "pe_cols", "sp_if", "sp_fw", "sp_ps", "gbuf_kb",
               "bandwidth_gbps")
 
 Constraint = Callable[[AcceleratorConfig], bool]
+
+
+class VectorConstraint:
+  """A constraint usable on both paths: a per-config predicate plus a
+  columnar mask over a :class:`ConfigTable`.
+
+  Built via :func:`vector_constraint`; plain callables remain valid
+  constraints but force row-by-row evaluation when sampling tables.
+  """
+
+  def __init__(self, scalar: Constraint,
+               mask: Callable[[ConfigTable], np.ndarray]):
+    self._scalar = scalar
+    self.mask = mask
+
+  def __call__(self, cfg: AcceleratorConfig) -> bool:
+    return bool(self._scalar(cfg))
+
+
+def vector_constraint(scalar: Constraint,
+                      mask: Callable[[ConfigTable], np.ndarray]
+                      ) -> VectorConstraint:
+  """Pair a scalar predicate with its vectorized table mask, e.g.::
+
+      vector_constraint(lambda c: c.n_pe <= 256,
+                        lambda t: t.n_pe <= 256)
+  """
+  return VectorConstraint(scalar, mask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,3 +205,110 @@ class DesignSpace:
       if self._passes(cfg):
         out.append(cfg)
     return out
+
+  # -- columnar sampling (no per-point dataclasses) --------------------------
+
+  def _table_mask(self, table: ConfigTable) -> np.ndarray:
+    """Constraint mask over a candidate table.  VectorConstraints filter
+    whole columns; plain predicates fall back to row-by-row dataclasses."""
+    mask = np.ones(len(table), np.bool_)
+    for c in self.constraints:
+      if hasattr(c, "mask"):
+        mask &= np.asarray(c.mask(table), np.bool_)
+      else:
+        idx = np.flatnonzero(mask)
+        scalar = np.asarray([bool(c(table.config_at(int(i)))) for i in idx])
+        mask[idx] &= scalar
+    return mask
+
+  def _make_table(self, pe_type: str, cols: Dict[str, np.ndarray]
+                  ) -> ConfigTable:
+    n = len(cols[AXIS_ORDER[0]])
+    cast = {name: (np.asarray(v, np.float64) if name == "bandwidth_gbps"
+                   else np.asarray(v).astype(np.int64))
+            for name, v in cols.items()}
+    return ConfigTable.full(pe_type, n, cast)
+
+  def sample_type_table(self, pe_type: str, n: int, seed: int = 0,
+                        method: str = "random") -> ConfigTable:
+    """Columnar twin of :meth:`sample_type`: n deterministic design points
+    of one PE type as a ConfigTable (fewer when constraints filter
+    grid/stratified points)."""
+    if pe_type not in self.pe_types:
+      raise ValueError(f"{pe_type!r} not in this space's {self.pe_types}")
+    if method == "random":
+      return self._sample_random_table(pe_type, n, seed)
+    if method == "grid":
+      return self._sample_grid_table(pe_type, n)
+    if method == "stratified":
+      return self._sample_stratified_table(pe_type, n, seed)
+    raise ValueError(f"unknown sampling method {method!r}; "
+                     "one of ('random', 'grid', 'stratified')")
+
+  def sample_table(self, n_per_type: int, seed: int = 0,
+                   method: str = "random") -> ConfigTable:
+    """Columnar twin of :meth:`sample` (same per-type seed offsets)."""
+    return ConfigTable.concat([
+        self.sample_type_table(t, n_per_type, seed=seed + 100 * i,
+                               method=method)
+        for i, t in enumerate(self.pe_types)])
+
+  def _sample_random_table(self, pe_type: str, n: int, seed: int
+                           ) -> ConfigTable:
+    rng = np.random.RandomState(seed)
+    if n <= 0:
+      return self._make_table(
+          pe_type, {a.name: np.asarray(a.values)[:0] for a in self.axes})
+    kept: List[ConfigTable] = []
+    have = 0
+    drawn = 0
+    max_draws = max(1000 * n, 1000)
+    while have < n:
+      batch = min(max(n - have, 1024), max_draws - drawn)
+      if batch <= 0:
+        raise ValueError(
+            f"constraints rejected all but {have}/{n} of {drawn} draws; the "
+            f"constrained space is (nearly) empty for {pe_type}")
+      # column-major draws: one rng.choice per axis, in AXIS_ORDER
+      cols = {a.name: np.asarray(a.values)[
+          rng.randint(0, len(a.values), size=batch)] for a in self.axes}
+      drawn += batch
+      cand = self._make_table(pe_type, cols)
+      mask = self._table_mask(cand)
+      if mask.all() and not kept:
+        kept, have = [cand], len(cand)
+      else:
+        sub = cand.select(mask)
+        kept.append(sub)
+        have += len(sub)
+    table = kept[0] if len(kept) == 1 else ConfigTable.concat(kept)
+    return table.select(slice(0, n))
+
+  def _sample_grid_table(self, pe_type: str, n: int) -> ConfigTable:
+    """Same evenly-strided flat indices (and therefore the exact same
+    design-point sequence) as :meth:`_sample_grid`, unraveled columnwise."""
+    sizes = [len(a.values) for a in self.axes]
+    total = math.prod(sizes)
+    if n >= total:
+      flat = np.arange(total, dtype=np.int64)
+    else:
+      flat = np.unique(np.linspace(0, total - 1, n).astype(np.int64))
+    idx = flat.copy()
+    cols: Dict[str, np.ndarray] = {}
+    for a, size in zip(reversed(self.axes), reversed(sizes)):
+      cols[a.name] = np.asarray(a.values)[idx % size]
+      idx //= size
+    table = self._make_table(pe_type, cols)
+    return table.select(self._table_mask(table))
+
+  def _sample_stratified_table(self, pe_type: str, n: int, seed: int
+                               ) -> ConfigTable:
+    """Identical column construction + RNG consumption to
+    :meth:`_sample_stratified`, so both paths yield the same sequence."""
+    rng = np.random.RandomState(seed)
+    cols: Dict[str, np.ndarray] = {}
+    for a in self.axes:  # AXIS_ORDER: fixed RNG consumption order
+      bins = (np.arange(n) * len(a.values)) // n
+      cols[a.name] = np.asarray(a.values)[bins][rng.permutation(n)]
+    table = self._make_table(pe_type, cols)
+    return table.select(self._table_mask(table))

@@ -1,0 +1,388 @@
+"""Scalar <-> vector parity for the million-point evaluation path.
+
+Covers ConfigTable round trips, the column-hashed variation term, every
+``*_batch`` oracle target (clock/power/area/latency) for every PE type,
+``gbuf_overheads``, the VectorOracleBackend acceptance criterion
+(<= 1e-9 relative vs OracleBackend on a mixed-PE-type sample), chunking
+invariance, the columnar samplers, and hypothesis property tests over
+random ConfigTables (skipped cleanly when hypothesis is absent).
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import oracle, ppa
+from repro.core.dataflow import (AcceleratorConfig, ConvLayer,
+                                 simulate_layer, simulate_layer_batch)
+from repro.core.pe import PAPER_PE_TYPES, PE_TYPES
+from repro.core.table import ConfigTable
+from repro.core.workloads import get_network
+from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                           PolynomialBackend, VectorOracleBackend,
+                           gbuf_overheads, gbuf_overheads_table,
+                           vector_constraint)
+
+ALL_TYPES = tuple(PE_TYPES)  # paper's four + INT8/INT4 companions
+
+# every oracle target with a batch sibling: (batch fn, scalar fn)
+ORACLE_TARGETS = {
+    "clock_mhz": (oracle.clock_mhz_batch, oracle.clock_mhz),
+    "pe_area_um2": (oracle.pe_area_um2_batch, oracle.pe_area_um2),
+    "array_area_mm2": (oracle.array_area_mm2_batch, oracle.array_area_mm2),
+    "gbuf_area_mm2": (oracle.gbuf_area_mm2_batch, oracle.gbuf_area_mm2),
+    "area_mm2": (oracle.area_mm2_batch, oracle.area_mm2),
+    "leakage_mw": (oracle.leakage_mw_batch, oracle.leakage_mw),
+    "array_power_mw": (oracle.array_power_mw_batch, oracle.array_power_mw),
+    "gbuf_power_mw": (oracle.gbuf_power_mw_batch, oracle.gbuf_power_mw),
+    "power_mw": (oracle.power_mw_batch, oracle.power_mw),
+}
+
+EDGE_LAYERS = [
+    ConvLayer("conv3", A=32, C=64, F=64, K=3, S=1, P=1),
+    ConvLayer("conv1", A=8, C=3, F=1000, K=1),            # 1x1 classifier
+    ConvLayer("stride", A=56, C=256, F=512, K=3, S=2, P=1),
+    ConvLayer("wide", A=224, C=3, F=64, K=7, S=2, P=3),   # K > many rows
+    ConvLayer("tiny", A=1, C=1, F=1, K=1),
+]
+
+
+def mixed_table(n_per_type=20, types=ALL_TYPES, seed0=0):
+  cfgs = []
+  for i, t in enumerate(types):
+    cfgs += ppa.sample_configs(t, n_per_type, seed=seed0 + i)
+  return ConfigTable.from_configs(cfgs), cfgs
+
+
+@pytest.fixture(scope="module")
+def small_layers():
+  return get_network("resnet20")[:4]
+
+
+class TestConfigTable:
+  def test_round_trip(self):
+    tbl, cfgs = mixed_table(8)
+    assert tbl.to_configs() == cfgs
+    assert tbl.config_at(5) == cfgs[5]
+    assert list(tbl.pe_type_strings()) == [c.pe_type for c in cfgs]
+
+  def test_select_concat_chunks(self):
+    tbl, cfgs = mixed_table(6)
+    idx = np.asarray([0, 3, 11, 17])
+    assert tbl.select(idx).to_configs() == [cfgs[i] for i in idx]
+    mask = tbl.n_pe <= 256
+    assert tbl.select(mask).to_configs() == \
+        [c for c in cfgs if c.n_pe <= 256]
+    parts = list(tbl.chunks(7))
+    assert sum(len(p) for p in parts) == len(tbl)
+    assert ConfigTable.concat(parts).to_configs() == cfgs
+
+  def test_pe_const_and_features(self):
+    tbl, cfgs = mixed_table(4)
+    act = tbl.pe_const("act_bits")
+    assert act.tolist() == [float(c.pe.act_bits) for c in cfgs]
+    assert np.array_equal(tbl.hw_features(), ppa.hw_feature_matrix(cfgs))
+    want = np.asarray([c.latency_hw_features() for c in cfgs])
+    assert np.array_equal(tbl.latency_hw_features(), want)
+
+  def test_validation(self):
+    with pytest.raises(ValueError, match="missing columns"):
+      ConfigTable.from_columns(["INT16"], {"pe_rows": np.asarray([8])})
+    with pytest.raises(ValueError, match="unknown PE type"):
+      ConfigTable.full("NOPE", 1, {k: np.asarray([8]) for k in
+                                   ("pe_rows", "pe_cols", "sp_if", "sp_fw",
+                                    "sp_ps", "gbuf_kb", "bandwidth_gbps")})
+
+
+class TestVariationParity:
+  @pytest.mark.parametrize("salt,pct",
+                           [("clk", 0.004), ("area", 0.005), ("pwr", 0.005)])
+  def test_exact(self, salt, pct):
+    tbl, cfgs = mixed_table(25)
+    batch = oracle._variation_batch(tbl, salt, pct)
+    scalar = np.asarray([oracle._variation(c, salt, pct) for c in cfgs])
+    assert np.array_equal(batch, scalar)
+
+  def test_distinct_across_salts_and_rows(self):
+    tbl, _ = mixed_table(25)
+    a = oracle._variation_batch(tbl, "clk", 0.004)
+    b = oracle._variation_batch(tbl, "pwr", 0.004)
+    assert not np.array_equal(a, b)
+    assert len(np.unique(a)) == len(a)  # no collisions across configs
+
+
+class TestOracleParity:
+  @pytest.mark.parametrize("pe_type", ALL_TYPES)
+  def test_all_targets_per_type(self, pe_type):
+    cfgs = ppa.sample_configs(pe_type, 20, seed=hash(pe_type) % 1000)
+    tbl = ConfigTable.from_configs(cfgs)
+    inputs = oracle.batch_inputs(tbl)
+    for name, (bfn, sfn) in ORACLE_TARGETS.items():
+      batch = bfn(tbl, inputs=inputs)
+      scalar = np.asarray([sfn(c) for c in cfgs])
+      np.testing.assert_allclose(batch, scalar, rtol=1e-9, err_msg=name)
+
+  def test_mixed_types_bit_identical(self):
+    """The numpy batch formulas mirror the scalar ops exactly."""
+    tbl, cfgs = mixed_table(15)
+    for name, (bfn, sfn) in ORACLE_TARGETS.items():
+      assert np.array_equal(
+          bfn(tbl), np.asarray([sfn(c) for c in cfgs])), name
+
+  def test_power_area_batch_shares_intermediates(self):
+    tbl, _ = mixed_table(12)
+    p, a = oracle.power_area_batch(tbl)
+    assert np.array_equal(p, oracle.power_mw_batch(tbl))
+    assert np.array_equal(a, oracle.area_mm2_batch(tbl))
+
+  def test_gbuf_overheads_table(self):
+    tbl, cfgs = mixed_table(10)
+    p_s, a_s = gbuf_overheads(cfgs)
+    p_t, a_t = gbuf_overheads_table(tbl)
+    assert np.array_equal(p_s, p_t)
+    assert np.array_equal(a_s, a_t)
+    p_d, a_d = gbuf_overheads(tbl)  # table dispatch through the shared API
+    assert np.array_equal(p_d, p_t) and np.array_equal(a_d, a_t)
+
+
+class TestDataflowParity:
+  @pytest.mark.parametrize("layer", EDGE_LAYERS, ids=lambda l: l.name)
+  def test_simulate_layer_batch(self, layer):
+    tbl, cfgs = mixed_table(10)
+    clk = oracle.clock_mhz_batch(tbl)
+    batch = simulate_layer_batch(tbl, layer, clk)
+    fields = ("cycles", "compute_cycles", "dram_stall_cycles", "utilization",
+              "spad_reads", "spad_writes", "gbuf_reads", "gbuf_writes",
+              "dram_reads", "dram_writes")
+    for i, cfg in enumerate(cfgs):
+      scalar = simulate_layer(cfg, layer, float(clk[i]))
+      assert batch.row(i).macs == scalar.macs
+      for f in fields:
+        assert float(getattr(batch, f)[i]) == getattr(scalar, f), \
+            (layer.name, f, cfg)
+
+  def test_layer_latency_batch(self):
+    tbl, cfgs = mixed_table(8)
+    for layer in EDGE_LAYERS[:3]:
+      batch = oracle.characterize_layer_latency_batch(tbl, layer)
+      scalar = [oracle.characterize_layer_latency(c, layer) for c in cfgs]
+      np.testing.assert_allclose(batch, scalar, rtol=1e-12)
+
+  def test_characterize_batch(self, small_layers):
+    tbl, cfgs = mixed_table(6)
+    ch = oracle.characterize_batch(tbl, small_layers)
+    for i, cfg in enumerate(cfgs):
+      sc = oracle.characterize(cfg, small_layers)
+      for f in ("clock_mhz", "area_mm2", "power_mw", "latency_s",
+                "energy_mj", "utilization"):
+        assert float(getattr(ch, f)[i]) == pytest.approx(
+            getattr(sc, f), rel=1e-12), f
+
+
+class TestVectorOracleBackend:
+  def test_acceptance_1k_mixed_within_1e9(self, small_layers):
+    """Acceptance: VectorOracleBackend matches OracleBackend within 1e-9
+    relative on a 1k-point mixed-PE-type sample."""
+    cfgs = DesignSpace().sample(250, seed=42)  # 4 types x 250 = 1000
+    assert len(cfgs) == 1000
+    fo = OracleBackend().evaluate(cfgs, small_layers, "net")
+    fv = VectorOracleBackend().evaluate(cfgs, small_layers, "net")
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      a, b = getattr(fo, col), getattr(fv, col)
+      assert np.max(np.abs(b - a) / np.abs(a)) <= 1e-9, col
+    assert list(fo.pe_type) == list(fv.pe_type)
+    assert fv.cfgs == fo.cfgs  # list input keeps per-point cfgs
+
+  def test_chunking_invariance(self, small_layers):
+    tbl = DesignSpace().sample_table(25, seed=3)
+    frames = [VectorOracleBackend(chunk_size=cs).evaluate_table(
+        tbl, small_layers) for cs in (1, 7, 64, 10_000)]
+    for f in frames[1:]:
+      for col in ("latency_s", "power_mw", "area_mm2"):
+        assert np.array_equal(getattr(f, col), getattr(frames[0], col)), col
+
+  def test_table_frame_carries_table_not_cfgs(self, small_layers):
+    tbl = DesignSpace().sample_table(5, seed=0)
+    f = VectorOracleBackend().evaluate_table(tbl, small_layers)
+    assert f.cfgs == () and f.table is tbl
+    assert f.config_at(2) == tbl.config_at(2)
+    top = f.top_k(3, by="perf_per_area")
+    assert len(top.table) == 3
+
+  def test_jit_path_close(self, small_layers):
+    """Device path is float32-approximate, not a parity path."""
+    jax = pytest.importorskip("jax")
+    del jax
+    tbl = DesignSpace().sample_table(10, seed=1)
+    base = VectorOracleBackend().evaluate_table(tbl, small_layers)
+    jit = VectorOracleBackend(chunk_size=16, jit=True).evaluate_table(
+        tbl, small_layers)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      np.testing.assert_allclose(getattr(jit, col), getattr(base, col),
+                                 rtol=1e-3)
+
+  def test_bad_chunk_size(self):
+    with pytest.raises(ValueError, match="chunk_size"):
+      VectorOracleBackend(chunk_size=0)
+
+
+class TestPolynomialTablePath:
+  def test_table_matches_list(self, small_layers):
+    backend = PolynomialBackend.fit(pe_types=("INT16", "LightPE-1"),
+                                    degree=3, n_train=80,
+                                    layers=small_layers, seed=0)
+    space = DesignSpace(pe_types=("INT16", "LightPE-1"))
+    cfgs = space.sample(30, seed=9)
+    fl = backend.evaluate(cfgs, small_layers, "net")
+    ft = backend.evaluate(ConfigTable.from_configs(cfgs), small_layers,
+                          "net")
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      np.testing.assert_allclose(getattr(ft, col), getattr(fl, col),
+                                 rtol=1e-12, err_msg=col)
+    # chunked table prediction is invariant too
+    fc = backend.evaluate_table(ConfigTable.from_configs(cfgs),
+                                small_layers, "net", chunk_size=7)
+    assert np.allclose(fc.latency_s, ft.latency_s, rtol=1e-12)
+
+  def test_missing_type_raises(self, small_layers):
+    backend = PolynomialBackend.fit(pe_types=("INT16",), degree=3,
+                                    n_train=80, layers=small_layers, seed=0)
+    tbl = DesignSpace().sample_type_table("FP32", 3, seed=0)
+    with pytest.raises(KeyError, match="FP32"):
+      backend.evaluate(tbl, small_layers, "net")
+
+
+class TestTableSampling:
+  @pytest.mark.parametrize("method", ["grid", "stratified"])
+  def test_table_matches_list_sequence(self, method):
+    """grid/stratified tables enumerate the exact list-path sequence."""
+    space = DesignSpace()
+    lst = space.sample_type("LightPE-2", 60, seed=5, method=method)
+    tbl = space.sample_type_table("LightPE-2", 60, seed=5, method=method)
+    assert tbl.to_configs() == lst
+
+  def test_random_table_deterministic(self):
+    space = DesignSpace()
+    t1 = space.sample_table(40, seed=8)
+    t2 = space.sample_table(40, seed=8)
+    assert t1.to_configs() == t2.to_configs()
+    assert len(t1) == 40 * len(space.pe_types)
+    t3 = space.sample_table(40, seed=9)
+    assert t1.to_configs() != t3.to_configs()
+
+  def test_vector_constraints(self):
+    space = DesignSpace(constraints=[
+        vector_constraint(lambda c: c.n_pe <= 256, lambda t: t.n_pe <= 256)])
+    tbl = space.sample_type_table("INT16", 200, seed=0)
+    assert len(tbl) == 200 and int(tbl.n_pe.max()) <= 256
+    # the same constraint object works on the scalar path
+    assert all(c.n_pe <= 256 for c in space.sample_type("INT16", 20, seed=0))
+
+  def test_plain_predicate_fallback(self):
+    space = DesignSpace(constraints=[lambda c: c.gbuf_kb >= 128])
+    tbl = space.sample_type_table("INT16", 50, seed=0)
+    assert len(tbl) == 50 and int(tbl.gbuf_kb.min()) >= 128
+
+  def test_impossible_constraint_raises(self):
+    space = DesignSpace(constraints=[
+        vector_constraint(lambda c: False,
+                          lambda t: np.zeros(len(t), bool))])
+    with pytest.raises(ValueError, match="constraints rejected"):
+      space.sample_type_table("INT16", 2, seed=0)
+
+
+class TestFrameMixedRepresentations:
+  def test_concat_mixed_cfgs_and_table_keeps_points(self, small_layers):
+    """Concat of a table-backed and a cfgs-backed frame lifts the cfgs
+    side into the table so design points survive."""
+    from repro.explore import ResultFrame
+    tbl = DesignSpace().sample_table(3, seed=0)
+    f_table = VectorOracleBackend().evaluate_table(tbl, small_layers)
+    cfgs = DesignSpace().sample(2, seed=1)
+    f_cfgs = OracleBackend().evaluate(cfgs, small_layers, "net")
+    both = ResultFrame.concat([f_table, f_cfgs])
+    assert len(both) == len(f_table) + len(f_cfgs)
+    assert both.table is not None
+    pts = both.to_points()
+    assert len(pts) == len(both)
+    assert pts[-1].cfg == cfgs[-1]
+    assert both.config_at(0) == tbl.config_at(0)
+
+  def test_fit_or_load_rejects_stale_oracle_version(self, small_layers,
+                                                    tmp_path, monkeypatch):
+    """Caches fitted against an older oracle refit instead of loading."""
+    path = str(tmp_path / "cache.npz")
+    kw = dict(pe_types=("INT16",), degree=3, n_train=80,
+              layers=small_layers, seed=0)
+    PolynomialBackend.fit_or_load(path, **kw)
+    assert PolynomialBackend.fit_or_load(path, **kw).loaded_from == path
+    monkeypatch.setattr(oracle, "ORACLE_VERSION", oracle.ORACLE_VERSION + 1)
+    from repro.explore import backend as backend_mod
+    backend_mod._FIT_CACHE.clear()
+    assert PolynomialBackend.fit_or_load(path, **kw).loaded_from is None
+
+
+class TestSessionVectorized:
+  def test_auto_uses_table_for_vector_backend(self, small_layers):
+    sess = ExplorationSession(VectorOracleBackend())
+    frame = sess.explore(small_layers, "net", n_per_type=10, seed=4)
+    assert frame.table is not None and len(frame) == 40
+    assert frame.meta["eval_seconds"] > 0
+
+  def test_explicit_vectorized_flag(self, small_layers):
+    backend = PolynomialBackend.fit(pe_types=("INT16",), degree=3,
+                                    n_train=80, layers=small_layers, seed=0)
+    sess = ExplorationSession(backend)
+    legacy = sess.explore(small_layers, "net", n_per_type=12, seed=4,
+                          vectorized=False)
+    assert legacy.table is None  # auto keeps the legacy list path
+    table = sess.explore(small_layers, "net", n_per_type=12, seed=4,
+                         vectorized=True)
+    assert table.table is not None
+    with pytest.raises(ValueError, match="evaluate_table"):
+      ExplorationSession(OracleBackend()).explore(
+          small_layers, "net", n_per_type=2, vectorized=True)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional — skip cleanly without it)
+# ---------------------------------------------------------------------------
+
+def _random_table(rng: np.random.RandomState, n: int) -> ConfigTable:
+  cols = {name: np.asarray(vals)[rng.randint(0, len(vals), size=n)]
+          for name, vals in ppa.HW_RANGES.items()}
+  types = np.asarray(list(ALL_TYPES))[rng.randint(0, len(ALL_TYPES), n)]
+  return ConfigTable.from_columns(list(types), cols)
+
+
+class TestProperties:
+  @given(st.integers(0, 10_000), st.integers(1, 40))
+  @settings(max_examples=20, deadline=None)
+  def test_oracle_parity_random_tables(self, seed, n):
+    tbl = _random_table(np.random.RandomState(seed), n)
+    cfgs = tbl.to_configs()
+    for name in ("clock_mhz", "power_mw", "area_mm2"):
+      bfn, sfn = ORACLE_TARGETS[name]
+      assert np.array_equal(bfn(tbl), np.asarray([sfn(c) for c in cfgs]))
+
+  @given(st.integers(0, 10_000), st.integers(2, 30), st.integers(1, 31))
+  @settings(max_examples=10, deadline=None)
+  def test_chunking_invariance_random(self, seed, n, chunk):
+    tbl = _random_table(np.random.RandomState(seed), n)
+    layer = EDGE_LAYERS[seed % len(EDGE_LAYERS)]
+    whole = VectorOracleBackend(chunk_size=10_000).evaluate_table(
+        tbl, [layer])
+    chunked = VectorOracleBackend(chunk_size=chunk).evaluate_table(
+        tbl, [layer])
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      assert np.array_equal(getattr(whole, col), getattr(chunked, col))
+
+  @given(st.integers(0, 10_000), st.integers(1, 25))
+  @settings(max_examples=10, deadline=None)
+  def test_latency_parity_random_tables(self, seed, n):
+    rng = np.random.RandomState(seed)
+    tbl = _random_table(rng, n)
+    layer = EDGE_LAYERS[seed % len(EDGE_LAYERS)]
+    batch = oracle.characterize_layer_latency_batch(tbl, layer)
+    scalar = [oracle.characterize_layer_latency(c, layer)
+              for c in tbl.to_configs()]
+    np.testing.assert_allclose(batch, scalar, rtol=1e-12)
