@@ -133,7 +133,7 @@ def explore_vector_perf() -> None:
   perf trajectory is tracked across PRs."""
   from benchmarks.common import write_bench_json
   from repro.core import oracle
-  from repro.explore import DesignSpace, pareto_mask
+  from repro.explore import DesignSpace
 
   n_total = 100_000
   space = DesignSpace()
@@ -160,9 +160,25 @@ def explore_vector_perf() -> None:
   parity = float(max(np.max(np.abs(pwr[:n_scalar] / s_pwr - 1.0)),
                      np.max(np.abs(area[:n_scalar] / s_area - 1.0))))
 
+  # Pareto on the paper's axes: (perf_per_area, energy).  Raw (power,
+  # area) are near-perfectly correlated across this space, which
+  # degenerates the front to ~1 point — perf/area vs energy needs the
+  # latency sweep too, so characterize against a small workload head.
+  from repro.core.workloads import get_network
+  from repro.explore import VectorOracleBackend
+  layers = get_network("resnet20")[:8]
   t0 = time.perf_counter()
-  front = pareto_mask(np.stack([pwr, area], axis=1))
+  frame = VectorOracleBackend(chunk_size=65536).evaluate_table(
+      table, layers, "resnet20-head")
+  latency_s = time.perf_counter() - t0
+  t0 = time.perf_counter()
+  front = frame.pareto(cols=("perf_per_area", "energy_mj"))
   pareto_s = time.perf_counter() - t0
+  # per-type fronts (Fig. 11-style): each PE type's own non-dominated set
+  front_by_type = {
+      t: int(frame.select(frame.by_type(t))
+             .pareto(cols=("perf_per_area", "energy_mj")).sum())
+      for t in space.pe_types}
 
   speedup = vec_pts_per_s / scalar_pts_per_s
   record = {
@@ -174,16 +190,98 @@ def explore_vector_perf() -> None:
       "scalar_sample_points": n_scalar,
       "speedup": round(speedup, 1),
       "parity_max_rel_err": parity,
+      "latency_sweep_seconds": round(latency_s, 4),
+      "pareto_axes": ["perf_per_area", "energy_mj"],
       "pareto_100k_seconds": round(pareto_s, 4),
       "pareto_front_size": int(front.sum()),
+      "pareto_front_size_by_type": front_by_type,
   }
   path = write_bench_json("explore", record)
   emit("explore_vector_perf", vec_s / len(table) * 1e6,
        f"points={len(table)};vector_pts_per_s={vec_pts_per_s:.0f};"
        f"scalar_pts_per_s={scalar_pts_per_s:.0f};speedup={speedup:.0f}x;"
        f"parity_max_rel={parity:.1e};pareto_s={pareto_s:.3f};"
+       f"front={int(front.sum())};json={path}")
+
+
+def coexplore_vector_perf() -> None:
+  """The joint-sweep tentpole claim: vectorized HW x NN co-exploration
+  (JointTable + LayerStack + characterize_joint) vs the scalar nested
+  per-(arch, hw) oracle loop, on a 1M-pair sweep (1k archs x 1k HW
+  configs).  Records scalar/vector throughput, exact-parity max-rel-err,
+  and the 3-objective joint Pareto front size into
+  results/BENCH_coexplore.json."""
+  from benchmarks.common import write_bench_json
+  from repro.core.cnn import SEARCH_SPACE, ArchChoice
+  from repro.core.supernet import arch_to_layers
+  from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                             VectorOracleBackend)
+
+  n_archs, n_hw_per_type, image_size = 1000, 250, 16
+  rng = np.random.RandomState(0)
+  archs = [ArchChoice(tuple((int(rng.choice(reps)), int(rng.choice(chs)))
+                            for reps, chs in SEARCH_SPACE))
+           for _ in range(n_archs)]
+  # pseudo-accuracies: the throughput/front shape does not need a trained
+  # supernet (examples/coexplore_cnn.py demos the real accuracy loop)
+  accs = rng.uniform(0.5, 0.95, size=n_archs)
+  arch_accs = list(zip(archs, accs))
+
+  space = DesignSpace()
+  session = ExplorationSession(VectorOracleBackend(chunk_size=262144), space)
+  t0 = time.perf_counter()
+  frame = session.co_explore(arch_accs, n_hw_per_type=n_hw_per_type,
+                             seed=3, image_size=image_size)  # auto -> joint
+  vec_s = time.perf_counter() - t0
+  n_pairs = len(frame)
+  vec_pairs_per_s = n_pairs / vec_s
+
+  # scalar baseline: the pre-vectorization nested loop (per-point oracle
+  # characterization per (arch, hw) pair) on a subsample, plus exact
+  # parity against the matching joint-frame rows.  Type-0 block rows are
+  # arch-major: row(a, h) = a * n_hw_per_type + h.
+  k_archs, k_hw = 2, 50
+  hw0 = space.sample_type_table(space.pe_types[0], n_hw_per_type, seed=3)
+  sub_cfgs = hw0.select(slice(0, k_hw)).to_configs()
+  ob = OracleBackend()
+  parity = 0.0
+  t0 = time.perf_counter()
+  for a in range(k_archs):
+    fs = ob.evaluate(sub_cfgs, arch_to_layers(archs[a], image_size),
+                     "coexplore")
+    rows = slice(a * n_hw_per_type, a * n_hw_per_type + k_hw)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      rel = np.abs(getattr(frame, col)[rows] / getattr(fs, col) - 1.0)
+      parity = max(parity, float(rel.max()))
+  scalar_s = time.perf_counter() - t0
+  scalar_pairs_per_s = k_archs * k_hw / scalar_s
+
+  t0 = time.perf_counter()
+  front3 = frame.pareto(cols=("top1_err", "energy_mj", "area_mm2"))
+  front3_s = time.perf_counter() - t0
+
+  speedup = vec_pairs_per_s / scalar_pairs_per_s
+  record = {
+      "n_pairs": int(n_pairs),
+      "n_archs": n_archs,
+      "n_hw": n_hw_per_type * len(space.pe_types),
+      "vector_seconds": round(vec_s, 4),
+      "vector_pairs_per_sec": round(vec_pairs_per_s, 1),
+      "scalar_pairs_per_sec": round(scalar_pairs_per_s, 1),
+      "scalar_sample_pairs": k_archs * k_hw,
+      "speedup": round(speedup, 1),
+      "parity_max_rel_err": parity,
+      "pareto3d_axes": ["top1_err", "energy_mj", "area_mm2"],
+      "pareto3d_seconds": round(front3_s, 4),
+      "pareto3d_front_size": int(front3.sum()),
+  }
+  path = write_bench_json("coexplore", record)
+  emit("coexplore_vector_perf", vec_s / n_pairs * 1e6,
+       f"pairs={n_pairs};vector_pairs_per_s={vec_pairs_per_s:.0f};"
+       f"scalar_pairs_per_s={scalar_pairs_per_s:.0f};speedup={speedup:.0f}x;"
+       f"parity_max_rel={parity:.1e};front3d={int(front3.sum())};"
        f"json={path}")
 
 
 ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput,
-       explore_api_perf, explore_vector_perf]
+       explore_api_perf, explore_vector_perf, coexplore_vector_perf]

@@ -17,8 +17,10 @@ import traceback
 def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--suite", default="all",
-                  choices=("paper", "accuracy", "framework", "all"),
-                  help="benchmark module to run (default: all)")
+                  choices=("paper", "accuracy", "framework", "coexplore",
+                           "all"),
+                  help="benchmark module to run (default: all); "
+                       "'coexplore' runs just the joint-sweep perf record")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -34,6 +36,7 @@ def main() -> None:
       "paper": paper_figures.ALL,
       "accuracy": accuracy_experiments.ALL,
       "framework": framework_perf.ALL,
+      "coexplore": [framework_perf.coexplore_vector_perf],
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL

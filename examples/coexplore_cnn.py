@@ -32,7 +32,10 @@ def main():
   layers = arch_to_layers(arch_accs[0][0])
   backend = PolynomialBackend.fit(degree=5, n_train=200, layers=layers)
   session = ExplorationSession(backend)
-  frame = session.co_explore(arch_accs, n_hw_per_type=args.hw_per_type)
+  # vectorized=True: the whole archs x HW cross product evaluates
+  # array-at-a-time (JointTable + LayerStack; power/area once per HW row)
+  frame = session.co_explore(arch_accs, n_hw_per_type=args.hw_per_type,
+                             vectorized=True)
   front = frame.pareto(cols=("top1_err", "energy_mj"))
   print(f"\n{len(frame)} (HW, NN) pairs; energy-front breakdown:")
   for t in ("FP32", "INT16", "LightPE-2", "LightPE-1"):
@@ -41,6 +44,11 @@ def main():
   lights = np.isin(frame.pe_type[front], ("LightPE-1", "LightPE-2"))
   print(f"\nLightPE share of the front: {lights.mean() * 100:.0f}% "
         "(paper: LightPEs consistently on the front)")
+  front3 = frame.pareto(cols=("top1_err", "energy_mj", "area_mm2"))
+  best = int(np.flatnonzero(front3)[0])
+  print(f"3-objective (err, energy, area) front: {int(front3.sum())} "
+        f"points; e.g. arch {frame.arch_at(best).stages} on "
+        f"{frame.pe_type[best]}")
 
 
 if __name__ == "__main__":

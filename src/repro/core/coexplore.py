@@ -4,7 +4,10 @@ The joint exploration of paper Sec. 4.5 / Fig. 12 now runs through
 :meth:`repro.explore.ExplorationSession.co_explore`, which shares the
 evaluation backends (and their memoized global-buffer composition) with
 plain DSE.  This module keeps the old list-of-CoPoint API working; new
-code should use the session + ResultFrame directly.
+code should use the session + ResultFrame directly.  Internally frames
+use the coded-architecture representation (integer ``arch_id`` column +
+``arch_lookup``, see :mod:`repro.explore.frame`) — the CoPoint list is
+materialized from it bit-compatibly.
 """
 from __future__ import annotations
 
@@ -45,7 +48,17 @@ class CoPoint:
 
 
 def _to_frame(points: Sequence[CoPoint]) -> ResultFrame:
+  """CoPoint list -> coded-arch ResultFrame (integer ``arch_id`` column +
+  shared ``arch_lookup``; no object-dtype columns)."""
   pts = list(points)
+  lookup: List[ArchChoice] = []
+  index: Dict[ArchChoice, int] = {}
+  ids = np.empty(len(pts), np.int64)
+  for i, p in enumerate(pts):
+    if p.arch not in index:
+      index[p.arch] = len(lookup)
+      lookup.append(p.arch)
+    ids[i] = index[p.arch]
   return ResultFrame(
       latency_s=np.asarray([p.latency_s for p in pts]),
       power_mw=np.asarray([p.power_mw for p in pts]),
@@ -53,7 +66,8 @@ def _to_frame(points: Sequence[CoPoint]) -> ResultFrame:
       pe_type=np.asarray([p.cfg.pe_type for p in pts]),
       cfgs=tuple(p.cfg for p in pts), network="coexplore",
       extra={"top1": np.asarray([p.top1 for p in pts], np.float64),
-             "arch": np.asarray([p.arch for p in pts], dtype=object)})
+             "arch_id": ids},
+      arch_lookup=tuple(lookup))
 
 
 def co_explore(models: Dict[str, ppa_lib.PPAModels],
@@ -65,10 +79,13 @@ def co_explore(models: Dict[str, ppa_lib.PPAModels],
   session = ExplorationSession(PolynomialBackend(models),
                                DesignSpace(pe_types=tuple(pe_types)))
   frame = session.co_explore(arch_accs, n_hw_per_type=n_hw_per_type,
-                             seed=seed, image_size=image_size)
-  return [CoPoint(cfg, arch, float(t1), float(l), float(p), float(a))
-          for cfg, arch, t1, l, p, a in zip(
-              frame.cfgs, frame.extra["arch"], frame.extra["top1"],
+                             seed=seed, image_size=image_size,
+                             vectorized=False)
+  lookup = frame.arch_lookup
+  return [CoPoint(cfg, lookup[int(aid)], float(t1), float(l), float(p),
+                  float(a))
+          for cfg, aid, t1, l, p, a in zip(
+              frame.cfgs, frame.extra["arch_id"], frame.extra["top1"],
               frame.latency_s, frame.power_mw, frame.area_mm2)]
 
 

@@ -28,6 +28,15 @@ Each simulation entry point has a vectorized ``*_batch`` sibling
 (:func:`simulate_layer_batch`, :func:`simulate_network_batch`) that
 evaluates a whole :class:`repro.core.table.ConfigTable` column-at-a-time,
 bit-identically to the scalar model on the numpy path.
+
+For joint HW x NN co-exploration the per-network layer loop additionally
+batches over *architectures*: :class:`LayerStack` pre-packs every
+architecture's layer features into padded ``(n_archs, max_layers)``
+tensors once, and :func:`simulate_network_stack` evaluates all
+``n_archs x n_hw`` pairs with one ``(n_archs, n_hw)``-shaped pass per
+layer slot — the same formulas as :func:`simulate_layer_batch`, with the
+layer-side constants promoted from Python floats to broadcast arrays, so
+the numpy path stays bit-identical to the scalar nested loop.
 """
 from __future__ import annotations
 
@@ -281,12 +290,16 @@ def _cols_of(table_or_cols) -> Dict[str, "np.ndarray"]:
 
 @dataclasses.dataclass
 class LayerStatsBatch:
-  """Column form of :class:`LayerStats` for N design points."""
+  """Column form of :class:`LayerStats` for N design points.
+
+  ``macs`` is an int for the one-layer path and an ``(n_archs, 1)`` array
+  on the joint (LayerStack) path, where every stat column broadcasts to
+  ``(n_archs, n_hw)``."""
   cycles: "np.ndarray"
   compute_cycles: "np.ndarray"
   dram_stall_cycles: "np.ndarray"
   utilization: "np.ndarray"
-  macs: int
+  macs: "int | np.ndarray"
   spad_reads: "np.ndarray"
   spad_writes: "np.ndarray"
   gbuf_reads: "np.ndarray"
@@ -309,19 +322,29 @@ class LayerStatsBatch:
         dram_writes=float(self.dram_writes[i]))
 
 
-def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
-                         ) -> LayerStatsBatch:
-  """Vectorized :func:`simulate_layer`: all table rows against one layer.
+def _layer_feats(layer: ConvLayer) -> Dict[str, float]:
+  """The layer-side constants the batch formulas consume, as Python
+  floats (one ConvLayer) — :class:`LayerStack` supplies the same keys as
+  broadcastable ``(n_archs, 1)`` arrays."""
+  return {
+      "E": float(max(layer.out_dim, 1)),
+      "K": float(layer.K), "C": float(layer.C), "F": float(layer.F),
+      "macs": float(layer.macs),
+      "ifmap_words": float(layer.ifmap_count),
+      "weight_words": float(layer.weight_count),
+      "of_words": float(layer.ofmap_count),
+  }
 
-  ``clock_mhz`` is a per-row array (or scalar, broadcast).  Every branch of
-  the scalar model becomes a masked select; integer tiling uses the same
-  float ceil/floor expressions the scalar path evaluates, so results agree
-  exactly on the numpy path.
-  """
-  c = _cols_of(table)
+
+def _simulate_layer_feats(c, f, clock_mhz, xp) -> LayerStatsBatch:
+  """The batch RS-dataflow formulas over HW columns ``c`` x layer
+  features ``f``.  ``f`` values are floats (one layer) or ``(n_archs, 1)``
+  arrays (a LayerStack slot, broadcasting against ``(n_hw,)`` columns to
+  ``(n_archs, n_hw)``); the elementwise op sequence is identical either
+  way, so the numpy path matches the scalar model bit for bit."""
   pe_rows, pe_cols, n_pe = c["pe_rows"], c["pe_cols"], c["n_pe"]
-  E = float(max(layer.out_dim, 1))
-  K, C, F = float(layer.K), float(layer.C), float(layer.F)
+  E, K, C, F = f["E"], f["K"], f["C"], f["F"]
+  k_safe = xp.maximum(K, 1.0)
 
   # ---- spatial mapping -------------------------------------------------
   col_folds = xp.ceil(E / pe_cols)
@@ -339,7 +362,7 @@ def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
   c_tile = xp.maximum(1.0, xp.minimum(
       C, c["sp_fw"] // xp.maximum(K * f_tile, 1.0)))
   c_tile = xp.maximum(1.0, xp.minimum(
-      c_tile, xp.maximum(c["sp_if"] // max(K, 1.0), 1.0) * sets_per_col))
+      c_tile, xp.maximum(c["sp_if"] // k_safe, 1.0) * sets_per_col))
   n_c_passes = xp.ceil(C / c_tile)
   n_f_passes = xp.ceil(F / f_tile)
   n_c_passes_eff = xp.ceil(n_c_passes / sets_per_col)
@@ -348,25 +371,25 @@ def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
   # ---- compute cycles ----------------------------------------------------
   per_pass = E * K * c_tile * f_tile + (K + cols_used)
   compute_cycles = passes * per_pass
-  ideal_cycles = layer.macs / n_pe
+  ideal_cycles = f["macs"] / n_pe
   compute_cycles = xp.maximum(compute_cycles, ideal_cycles)
   utilization = xp.minimum(1.0, ideal_cycles / xp.maximum(compute_cycles, 1.0)
                            ) * xp.minimum(1.0, spatial_util + 1e-9)
 
   # ---- access counts -----------------------------------------------------
-  macs = layer.macs
-  spad_reads = (2.0 + 1.0 / max(K, 1.0)) * macs + xp.zeros_like(n_pe)
-  spad_writes = macs / max(K, 1.0) + xp.zeros_like(n_pe)
-  ifmap_words = float(layer.ifmap_count)
+  macs = f["macs"]
+  spad_reads = (2.0 + 1.0 / k_safe) * macs + xp.zeros_like(n_pe)
+  spad_writes = macs / k_safe + xp.zeros_like(n_pe)
+  ifmap_words = f["ifmap_words"]
   gbuf_bits = c["gbuf_kb"] * 1024 * 8
   ifmap_fits = ifmap_words * c["act_bits"] <= 0.5 * gbuf_bits
   dram_if = ifmap_words * xp.where(ifmap_fits, 1.0, n_f_passes)
   gbuf_if_reads = ifmap_words * n_f_passes * row_folds
-  weight_words = float(layer.weight_count)
+  weight_words = f["weight_words"]
   weights_fit = weight_words * c["weight_bits"] <= 0.25 * gbuf_bits
   dram_w = weight_words * xp.where(weights_fit, 1.0, col_folds)
   gbuf_w_reads = weight_words * col_folds
-  of_words = float(layer.ofmap_count)
+  of_words = f["of_words"]
   psum_spills = xp.maximum(n_c_passes_eff - 1.0, 0.0)
   dram_of = of_words
   gbuf_reads = gbuf_if_reads + gbuf_w_reads + of_words * psum_spills
@@ -391,13 +414,28 @@ def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
       dram_reads=dram_reads, dram_writes=dram_writes)
 
 
-def layer_energy_pj_batch(table, layer: ConvLayer, stats: LayerStatsBatch,
-                          clock_mhz, leakage_mw, xp=np):
-  """Vectorized :func:`layer_energy_pj` (pJ per design point)."""
-  c = _cols_of(table)
+def simulate_layer_batch(table, layer: ConvLayer, clock_mhz, xp=np
+                         ) -> LayerStatsBatch:
+  """Vectorized :func:`simulate_layer`: all table rows against one layer.
+
+  ``clock_mhz`` is a per-row array (or scalar, broadcast).  Every branch of
+  the scalar model becomes a masked select; integer tiling uses the same
+  float ceil/floor expressions the scalar path evaluates, so results agree
+  exactly on the numpy path.
+  """
+  st = _simulate_layer_feats(_cols_of(table), _layer_feats(layer),
+                             clock_mhz, xp)
+  st.macs = layer.macs  # exact int for LayerStatsBatch.row()
+  return st
+
+
+def _layer_energy_feats(c, f, stats: LayerStatsBatch, clock_mhz,
+                        leakage_mw, xp):
+  """Hierarchical energy formulas over HW columns x layer features (pJ),
+  broadcasting like :func:`_simulate_layer_feats`."""
   e = pe_lib.ENERGY_PJ
   mac_e = stats.macs * c["mac_energy_pj"]
-  k = max(layer.K, 1)
+  k = xp.maximum(f["K"], 1.0)
   spad_read_bits = stats.macs * (c["act_bits"] + c["weight_bits"]
                                  + c["psum_bits"] / k)
   spad_write_bits = stats.spad_writes * c["psum_bits"]
@@ -411,6 +449,13 @@ def layer_energy_pj_batch(table, layer: ConvLayer, stats: LayerStatsBatch,
   time_s = stats.cycles / (clock_mhz * 1e6)
   leak_e = leakage_mw * 1e-3 * time_s * 1e12  # mW * s -> pJ
   return mac_e + spad_e + gbuf_e + dram_e + leak_e
+
+
+def layer_energy_pj_batch(table, layer: ConvLayer, stats: LayerStatsBatch,
+                          clock_mhz, leakage_mw, xp=np):
+  """Vectorized :func:`layer_energy_pj` (pJ per design point)."""
+  return _layer_energy_feats(_cols_of(table), _layer_feats(layer), stats,
+                             clock_mhz, leakage_mw, xp)
 
 
 def simulate_network_batch(table, layers: Sequence[ConvLayer],
@@ -431,6 +476,167 @@ def simulate_network_batch(table, layers: Sequence[ConvLayer],
     total_energy_pj = total_energy_pj + layer_energy_pj_batch(
         c, layer, st, clock_mhz, leakage_mw, xp=xp)
     util_weighted = util_weighted + st.utilization * st.cycles
+  latency_s = total_cycles / (clock_mhz * 1e6)
+  utilization = util_weighted / xp.maximum(total_cycles, 1e-12)
+  return latency_s, total_energy_pj * 1e-9, utilization  # pJ -> mJ
+
+
+# ---------------------------------------------------------------------------
+# joint HW x NN batching: all architectures x all design points at once
+# ---------------------------------------------------------------------------
+
+# Padded layer slots use a benign 1x1x1 layer so every formula stays
+# finite; the validity mask zeroes their contribution before accumulation
+# (x + 0.0 == x exactly, so padding never perturbs the numpy-path bits).
+_PAD_LAYER = ConvLayer("pad", A=1, C=1, F=1, K=1, S=1, P=0)
+
+# ConvLayer int fields packed into the stack, in feature order
+_STACK_FIELDS = ("A", "C", "F", "K", "S", "P", "rs", "ds")
+
+
+@dataclasses.dataclass(eq=False)
+class LayerStack:
+  """Padded per-architecture layer features: ``(n_archs, max_layers)``
+  int64 tensors per ConvLayer field plus a validity mask.
+
+  Built once per co-exploration sweep (``from_layer_lists``); the derived
+  quantities every dataflow formula needs (out_dim, MAC count, tensor
+  word counts) are precomputed as float64 tensors so the per-layer-slot
+  inner loop is pure array arithmetic.
+  """
+  A: np.ndarray
+  C: np.ndarray
+  F: np.ndarray
+  K: np.ndarray
+  S: np.ndarray
+  P: np.ndarray
+  rs: np.ndarray
+  ds: np.ndarray
+  valid: np.ndarray
+
+  def __post_init__(self):
+    for name in _STACK_FIELDS:
+      setattr(self, name, np.asarray(getattr(self, name), np.int64))
+    self.valid = np.asarray(self.valid, np.bool_)
+    shape = self.A.shape
+    if len(shape) != 2:
+      raise ValueError(f"LayerStack fields must be 2-D, got shape {shape}")
+    for name in _STACK_FIELDS + ("valid",):
+      if getattr(self, name).shape != shape:
+        raise ValueError(f"field {name!r} has shape "
+                         f"{getattr(self, name).shape}, expected {shape}")
+    # derived float64 tensors (all integer-valued, exact in float64)
+    a, c, f, k = (x.astype(np.float64) for x in (self.A, self.C, self.F,
+                                                 self.K))
+    s, p = self.S.astype(np.float64), self.P.astype(np.float64)
+    out = np.floor((a + 2.0 * p - k) / np.maximum(s, 1.0)) + 1.0
+    self._E = np.maximum(out, 1.0)
+    self._macs = out * out * k * k * c * f
+    self._ifmap_words = a * a * c
+    self._weight_words = k * k * c * f
+    self._of_words = out * out * f
+
+  @property
+  def n_archs(self) -> int:
+    return int(self.A.shape[0])
+
+  @property
+  def max_layers(self) -> int:
+    return int(self.A.shape[1])
+
+  def n_layers(self) -> np.ndarray:
+    """Per-architecture true layer count."""
+    return self.valid.sum(axis=1)
+
+  @classmethod
+  def from_layer_lists(cls, layer_lists: Sequence[Sequence[ConvLayer]]
+                       ) -> "LayerStack":
+    """Pack one ConvLayer list per architecture, right-padded to the
+    longest network."""
+    lists = [list(ls) for ls in layer_lists]
+    n_max = max((len(ls) for ls in lists), default=0) or 1
+    padded = [ls + [_PAD_LAYER] * (n_max - len(ls)) for ls in lists]
+    cols = {name: np.asarray([[getattr(l, name) for l in ls]
+                              for ls in padded], np.int64)
+            for name in _STACK_FIELDS}
+    valid = np.asarray([[True] * len(ls) + [False] * (n_max - len(ls))
+                        for ls in lists], np.bool_)
+    return cls(valid=valid, **cols)
+
+  def layers_of(self, arch_id: int) -> List[ConvLayer]:
+    """Materialize one architecture's ConvLayer list (scalar escape)."""
+    out = []
+    for li in range(self.max_layers):
+      if not self.valid[arch_id, li]:
+        break
+      out.append(ConvLayer(
+          f"a{arch_id}l{li}",
+          **{name: int(getattr(self, name)[arch_id, li])
+             for name in _STACK_FIELDS}))
+    return out
+
+  def features(self) -> np.ndarray:
+    """(n_archs, max_layers, 8) float64 layer-feature tensor in the
+    paper's latency-model order (== ConvLayer.features())."""
+    return np.stack([getattr(self, name).astype(np.float64)
+                     for name in _STACK_FIELDS], axis=2)
+
+  def feats_at(self, li: int) -> Dict[str, np.ndarray]:
+    """Layer slot ``li`` as ``(n_archs, 1)`` broadcastable feature
+    columns (the array twin of :func:`_layer_feats`)."""
+    sl = slice(li, li + 1)
+    return {
+        "E": self._E[:, sl], "K": self.K[:, sl].astype(np.float64),
+        "C": self.C[:, sl].astype(np.float64),
+        "F": self.F[:, sl].astype(np.float64),
+        "macs": self._macs[:, sl],
+        "ifmap_words": self._ifmap_words[:, sl],
+        "weight_words": self._weight_words[:, sl],
+        "of_words": self._of_words[:, sl],
+    }
+
+  def fingerprint(self) -> str:
+    """Content hash (jit-cache key for the device path)."""
+    import hashlib
+    h = hashlib.sha256()
+    for name in _STACK_FIELDS + ("valid",):
+      h.update(np.ascontiguousarray(getattr(self, name)).tobytes())
+    return h.hexdigest()[:16]
+
+  def __repr__(self) -> str:
+    return (f"LayerStack({self.n_archs} archs x <= {self.max_layers} "
+            f"layers)")
+
+
+def simulate_network_stack(table, stack: LayerStack, clock_mhz, leakage_mw,
+                           xp=np):
+  """Joint :func:`simulate_network_batch`: every architecture in ``stack``
+  x every design point in ``table`` in one batched pass per layer slot.
+
+  Returns ``(latency_s, energy_mj, utilization)`` shaped
+  ``(n_archs, n_hw)``.  Row ``a`` is bit-identical (numpy path) to
+  ``simulate_network_batch(table, stack.layers_of(a), ...)``: padded
+  slots contribute exactly 0.0 and the per-slot accumulation order
+  matches the scalar per-layer loop.
+  """
+  c = _cols_of(table)
+  total_cycles = 0.0
+  total_energy_pj = 0.0
+  util_weighted = 0.0
+  for li in range(stack.max_layers):
+    f = stack.feats_at(li)
+    st = _simulate_layer_feats(c, f, clock_mhz, xp)
+    e_pj = _layer_energy_feats(c, f, st, clock_mhz, leakage_mw, xp)
+    v = stack.valid[:, li:li + 1]
+    if bool(np.all(v)):  # common fast path: no masking needed
+      total_cycles = total_cycles + st.cycles
+      total_energy_pj = total_energy_pj + e_pj
+      util_weighted = util_weighted + st.utilization * st.cycles
+    else:
+      total_cycles = total_cycles + xp.where(v, st.cycles, 0.0)
+      total_energy_pj = total_energy_pj + xp.where(v, e_pj, 0.0)
+      util_weighted = util_weighted + xp.where(
+          v, st.utilization * st.cycles, 0.0)
   latency_s = total_cycles / (clock_mhz * 1e6)
   utilization = util_weighted / xp.maximum(total_cycles, 1e-12)
   return latency_s, total_energy_pj * 1e-9, utilization  # pJ -> mJ

@@ -554,3 +554,56 @@ def characterize_layer_latency_batch(table, layer: ConvLayer, xp=np,
   clk = _clock_cols(c, xp)
   st = simulate_layer_batch(c, layer, clk, xp=xp)
   return st.cycles / (clk * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# joint HW x NN characterization: every architecture x every design point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JointCharacterization:
+  """Characterization of ``n_archs x n_hw`` (architecture, HW) pairs.
+
+  Clock / power / area depend only on the hardware and are ``(n_hw,)``;
+  the workload-dependent targets are ``(n_archs, n_hw)`` (arch-major,
+  matching :class:`repro.core.table.JointTable` row order when
+  flattened)."""
+  clock_mhz: np.ndarray
+  area_mm2: np.ndarray
+  power_mw: np.ndarray
+  latency_s: np.ndarray
+  energy_mj: np.ndarray
+  utilization: np.ndarray
+
+  @property
+  def n_archs(self) -> int:
+    return int(self.latency_s.shape[0])
+
+  @property
+  def n_hw(self) -> int:
+    return int(self.latency_s.shape[1])
+
+
+def characterize_joint(table, stack, xp=np, inputs: Optional[Dict] = None
+                       ) -> JointCharacterization:
+  """Joint :func:`characterize_batch`: one characterization per
+  (architecture, design point) pair, computing the HW-only targets
+  (clock/area/power) once per design point instead of once per pair.
+
+  ``stack`` is a :class:`repro.core.dataflow.LayerStack`; on the numpy
+  path row ``a`` of the workload targets is bit-identical to
+  ``characterize_batch(table, stack.layers_of(a))``.
+  """
+  from repro.core.dataflow import simulate_network_stack
+  c = inputs if inputs is not None else batch_inputs(table)
+  clock = _clock_cols(c, xp)
+  array_area = _array_area_cols(c, xp)
+  area = array_area + _gbuf_area_cols(c, xp)
+  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
+      + _gbuf_power_cols(c, xp, clock=clock)
+  leak = _leakage_cols(c, xp)
+  latency_s, energy_mj, utilization = simulate_network_stack(
+      c, stack, clock, leak, xp=xp)
+  return JointCharacterization(
+      clock_mhz=clock, area_mm2=area, power_mw=power,
+      latency_s=latency_s, energy_mj=energy_mj, utilization=utilization)

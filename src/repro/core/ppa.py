@@ -298,6 +298,15 @@ class PPAModels:
       cfgs = list(cfgs)
       hw = np.asarray([c.latency_hw_features() for c in cfgs], np.float64)
     lf = np.asarray([l.features() for l in layers], np.float64)
+    return self.predict_network_latency_feats(hw, lf)
+
+  def predict_network_latency_feats(self, hw: np.ndarray, lf: np.ndarray
+                                    ) -> np.ndarray:
+    """Network latency from precomputed feature matrices: ``hw`` is
+    (n_cfgs, 6) latency hardware features, ``lf`` is (n_layers, 8) layer
+    features.  The joint co-exploration path calls this directly with
+    LayerStack rows, bypassing per-point objects; ops (and therefore the
+    float64 bits) match :meth:`predict_network_latency_s` exactly."""
     n_c, n_l = hw.shape[0], lf.shape[0]
     rows = np.concatenate(
         [np.repeat(hw, n_l, axis=0), np.tile(lf, (n_c, 1))], axis=1)

@@ -10,6 +10,12 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
   ConfigTable          struct-of-arrays design points — the input-side
                        twin of ResultFrame (re-export of
                        repro.core.table)                        [table]
+  JointTable           lazy archs x ConfigTable cross product for HW x NN
+                       co-exploration (``table.cross(n_archs)``); pairs
+                       exist only as integer index arithmetic   [table]
+  LayerStack           padded (n_archs, max_layers) layer-feature tensors
+                       feeding the joint batch dataflow model
+                       (re-export of repro.core.dataflow)     [dataflow]
   EvaluationBackend    protocol turning (configs, workload) -> results
     OracleBackend      slow, exact per-design characterization
     VectorOracleBackend  the same oracle vectorized over ConfigTables in
@@ -37,11 +43,17 @@ Quickstart::
     session = ExplorationSession(VectorOracleBackend(chunk_size=65536))
     big = session.explore(layers, "resnet20", n_per_type=250_000)
 
+    # joint HW x NN co-exploration, also vectorized (arch features stack
+    # once; HW x arch pairs never become Python objects):
+    joint = session.co_explore(arch_accs, n_hw_per_type=250)  # auto=joint
+    front3 = joint.pareto(("top1_err", "energy_mj", "area_mm2"))
+
 The legacy ``repro.core.dse`` / ``repro.core.coexplore`` modules remain as
 thin compatibility shims over this package.  See ``docs/explore.md`` for
 the full guide and ``docs/architecture.md`` for the paper-to-code map.
 """
-from repro.core.table import ConfigTable
+from repro.core.dataflow import LayerStack
+from repro.core.table import ConfigTable, JointTable
 from repro.explore.backend import (EvaluationBackend, OracleBackend,
                                    PolynomialBackend, VectorOracleBackend,
                                    gbuf_overheads, gbuf_overheads_table)
@@ -53,8 +65,9 @@ from repro.explore.space import (AXIS_ORDER, Axis, DesignSpace,
 
 __all__ = [
     "AXIS_ORDER", "Axis", "ConfigTable", "DesignPoint", "DesignSpace",
-    "EvaluationBackend", "ExplorationSession", "Normalized", "OracleBackend",
-    "PolynomialBackend", "ResultFrame", "VectorConstraint",
-    "VectorOracleBackend", "gbuf_overheads", "gbuf_overheads_table",
-    "pareto_mask", "summary_stats", "vector_constraint",
+    "EvaluationBackend", "ExplorationSession", "JointTable", "LayerStack",
+    "Normalized", "OracleBackend", "PolynomialBackend", "ResultFrame",
+    "VectorConstraint", "VectorOracleBackend", "gbuf_overheads",
+    "gbuf_overheads_table", "pareto_mask", "summary_stats",
+    "vector_constraint",
 ]

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import oracle
 from repro.core import ppa as ppa_lib
-from repro.core.dataflow import AcceleratorConfig, ConvLayer
+from repro.core.dataflow import AcceleratorConfig, ConvLayer, LayerStack
 from repro.core.pe import PAPER_PE_TYPES
 from repro.core.table import ConfigTable
 from repro.explore.frame import ResultFrame
@@ -170,6 +170,40 @@ class VectorOracleBackend:
     return ResultFrame(lat, pwr, area, table.pe_type_strings(), (),
                        network, table=table)
 
+  def co_evaluate_table(self, hw: ConfigTable, stack: LayerStack,
+                        network: str = "coexplore") -> ResultFrame:
+    """Joint HW x NN sweep: every stack architecture against every HW row.
+
+    Evaluates ``characterize_joint`` over bounded-memory HW chunks (the
+    working set is ``n_archs x hw_chunk`` where
+    ``hw_chunk = chunk_size // n_archs``); clock/power/area are computed
+    once per HW row, latency/energy once per pair.  Returns an arch-major
+    joint frame (row ``a * n_hw + h``) carrying a lazy
+    :class:`~repro.core.table.JointTable` plus an ``arch_id`` extra
+    column — the caller (session) attaches ``top1`` and ``arch_lookup``.
+    Bit-identical (numpy path) to the scalar per-(arch, hw) loop.
+    """
+    n_hw, n_archs = len(hw), stack.n_archs
+    lat = np.empty((n_archs, n_hw))
+    pwr = np.empty(n_hw)
+    area = np.empty(n_hw)
+    hw_chunk = max(1, self.chunk_size // max(n_archs, 1))
+    lo = 0
+    for chunk in hw.chunks(hw_chunk):
+      if self.jit:
+        l, p, a = self._co_eval_chunk_jax(chunk, stack)
+      else:
+        ch = oracle.characterize_joint(chunk, stack)
+        l, p, a = ch.latency_s, ch.power_mw, ch.area_mm2
+      hi = lo + len(chunk)
+      lat[:, lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
+      lo = hi
+    joint = hw.cross(n_archs)
+    return ResultFrame(
+        lat.reshape(-1), np.tile(pwr, n_archs), np.tile(area, n_archs),
+        joint.pe_type_strings(), (), network, table=joint,
+        extra={"arch_id": joint.arch_ids()})
+
   # -- optional device path -------------------------------------------------
 
   def _eval_chunk_jax(self, chunk: ConfigTable,
@@ -180,6 +214,19 @@ class VectorOracleBackend:
     if fn is None:
       fn = self._build_jax_fn(layers)
       self._jit_cache[layers] = fn
+    l, p, a = fn(inputs)
+    return (np.asarray(jax.device_get(l), np.float64),
+            np.asarray(jax.device_get(p), np.float64),
+            np.asarray(jax.device_get(a), np.float64))
+
+  def _co_eval_chunk_jax(self, chunk: ConfigTable, stack: LayerStack):
+    import jax
+    inputs = oracle.batch_inputs(chunk)
+    key = ("joint", stack.fingerprint())
+    fn = self._jit_cache.get(key)
+    if fn is None:
+      fn = self._build_jax_joint_fn(stack)
+      self._jit_cache[key] = fn
     l, p, a = fn(inputs)
     return (np.asarray(jax.device_get(l), np.float64),
             np.asarray(jax.device_get(p), np.float64),
@@ -211,6 +258,39 @@ class VectorOracleBackend:
                     for k, v in inputs.items()}
         l, p, a = sharded(inputs)
         return l[:n], p[:n], a[:n]
+
+      return jax.jit(padded)
+    return jax.jit(formulas)
+
+  @staticmethod
+  def _build_jax_joint_fn(stack: LayerStack):
+    import jax
+    import jax.numpy as jnp
+
+    def formulas(inputs):
+      ch = oracle.characterize_joint(None, stack, xp=jnp, inputs=inputs)
+      return ch.latency_s, ch.power_mw, ch.area_mm2
+
+    devices = jax.devices()
+    if len(devices) > 1:
+      from jax.experimental.shard_map import shard_map
+      from jax.sharding import Mesh, PartitionSpec as P
+      mesh = Mesh(np.asarray(devices), ("batch",))
+      # HW rows shard over the mesh; the arch axis of latency replicates
+      # the batch split on its second dimension
+      sharded = shard_map(formulas, mesh=mesh, in_specs=(P("batch"),),
+                          out_specs=(P(None, "batch"), P("batch"),
+                                     P("batch")))
+
+      def padded(inputs):
+        n = next(iter(inputs.values())).shape[0]
+        pad = (-n) % len(devices)
+        if pad:
+          inputs = {k: jnp.concatenate([jnp.asarray(v),
+                                        jnp.asarray(v[-1:]).repeat(pad, 0)])
+                    for k, v in inputs.items()}
+        l, p, a = sharded(inputs)
+        return l[:, :n], p[:n], a[:n]
 
       return jax.jit(padded)
     return jax.jit(formulas)
@@ -403,3 +483,46 @@ class PolynomialBackend:
         area[sel] = np.maximum(m.predict_area_mm2(sub), 1e-6) + gb_a
     return ResultFrame(lat, pwr, area, table.pe_type_strings(), (),
                        network, table=table)
+
+  def co_evaluate_table(self, hw: ConfigTable, stack: LayerStack,
+                        network: str = "coexplore",
+                        chunk_size: int = 32768) -> ResultFrame:
+    """Joint HW x NN sweep through the fitted models.
+
+    Power/area (+ the memoized global-buffer macro) are predicted once
+    per HW row; latency is predicted per (arch, HW) pair from the stack's
+    precomputed feature tensors — no per-pair Python objects, and the
+    per-arch predictions are bit-identical to
+    ``predict_network_latency_s(sub, arch_layers)`` on the scalar loop.
+    Returns the same arch-major joint frame as
+    :meth:`VectorOracleBackend.co_evaluate_table`.
+    """
+    missing = {t for t, idx in hw.groups_by_type()} - set(self.models)
+    if missing:
+      raise KeyError(f"backend has no models for PE types {sorted(missing)}; "
+                     f"fitted types: {sorted(self.models)}")
+    n_hw, n_archs = len(hw), stack.n_archs
+    lat = np.zeros((n_archs, n_hw))
+    pwr = np.zeros(n_hw)
+    area = np.zeros(n_hw)
+    feats = stack.features()
+    n_layers = stack.n_layers()
+    hw_chunk = max(1, chunk_size // max(stack.max_layers, 1))
+    for pe_type, idxs in hw.groups_by_type():
+      m = self.models[pe_type]
+      for lo in range(0, idxs.size, hw_chunk):
+        sel = idxs[lo:lo + hw_chunk]
+        sub = hw.select(sel)
+        gb_p, gb_a = gbuf_overheads_table(sub)
+        pwr[sel] = np.maximum(m.predict_power_mw(sub), 1e-3) + gb_p
+        area[sel] = np.maximum(m.predict_area_mm2(sub), 1e-6) + gb_a
+        hw_feats = sub.latency_hw_features()
+        for a in range(n_archs):
+          lf = feats[a, :int(n_layers[a])]
+          lat[a, sel] = np.maximum(
+              m.predict_network_latency_feats(hw_feats, lf), 1e-9)
+    joint = hw.cross(n_archs)
+    return ResultFrame(
+        lat.reshape(-1), np.tile(pwr, n_archs), np.tile(area, n_archs),
+        joint.pe_type_strings(), (), network, table=joint,
+        extra={"arch_id": joint.arch_ids()})

@@ -26,7 +26,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.dataflow import AcceleratorConfig
-from repro.core.table import ConfigTable
+from repro.core.table import ConfigTable, JointTable
 
 BASE_COLUMNS = ("latency_s", "power_mw", "area_mm2")
 
@@ -154,9 +154,16 @@ class ResultFrame:
   """Struct-of-arrays over evaluated design points.
 
   Design points can ride along either as a tuple of per-point ``cfgs``
-  dataclasses (the scalar path) or as a columnar :class:`ConfigTable`
-  (the vectorized path, where million-point sweeps never build per-point
-  objects); :meth:`config_at` reads from whichever is present.
+  dataclasses (the scalar path) or as a columnar :class:`ConfigTable` /
+  :class:`JointTable` (the vectorized paths, where million-point sweeps
+  never build per-point objects); :meth:`config_at` reads from whichever
+  is present.
+
+  Co-exploration frames carry architectures as an integer ``arch_id``
+  extra column plus the shared ``arch_lookup`` tuple (one entry per
+  distinct architecture) — never as an object-dtype column, which would
+  defeat vectorized stats/pareto and make ``concat`` allocation-heavy.
+  :meth:`arch_at` maps a row back to its architecture object.
   """
   latency_s: np.ndarray
   power_mw: np.ndarray
@@ -166,7 +173,8 @@ class ResultFrame:
   network: str = "net"
   extra: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
   meta: Dict[str, float] = dataclasses.field(default_factory=dict)
-  table: Optional[ConfigTable] = None
+  table: Optional[Union[ConfigTable, JointTable]] = None
+  arch_lookup: Tuple[object, ...] = ()
 
   def __post_init__(self):
     self.latency_s = np.asarray(self.latency_s, np.float64)
@@ -174,6 +182,7 @@ class ResultFrame:
     self.area_mm2 = np.asarray(self.area_mm2, np.float64)
     self.pe_type = np.asarray(self.pe_type)
     self.cfgs = tuple(self.cfgs)
+    self.arch_lookup = tuple(self.arch_lookup)
     n = len(self.latency_s)
     for name, arr in (("power_mw", self.power_mw),
                       ("area_mm2", self.area_mm2),
@@ -184,6 +193,13 @@ class ResultFrame:
       raise ValueError(f"{len(self.cfgs)} cfgs for {n} rows")
     if self.table is not None and len(self.table) != n:
       raise ValueError(f"{len(self.table)}-row table for {n} rows")
+    if self.arch_lookup:
+      ids = self.extra.get("arch_id")
+      if ids is None:
+        raise ValueError("arch_lookup given without an 'arch_id' column")
+      self.extra["arch_id"] = ids = np.asarray(ids, np.int64)
+      if ids.size and (ids.min() < 0 or ids.max() >= len(self.arch_lookup)):
+        raise ValueError("arch_id out of range for arch_lookup")
 
   def __len__(self) -> int:
     return int(self.latency_s.shape[0])
@@ -241,6 +257,13 @@ class ResultFrame:
       return self.table.config_at(i)
     raise ValueError("frame carries neither cfgs nor a ConfigTable")
 
+  def arch_at(self, i: int) -> object:
+    """The i-th row's architecture object (``arch_lookup[arch_id[i]]``)."""
+    if not self.arch_lookup:
+      raise ValueError("frame carries no arch_lookup (not a co-exploration "
+                       "frame)")
+    return self.arch_lookup[int(self.extra["arch_id"][i])]
+
   def to_points(self) -> List[DesignPoint]:
     if not self.cfgs and self.table is not None:
       cfgs = self.table.to_configs()
@@ -260,7 +283,36 @@ class ResultFrame:
         self.latency_s[idx], self.power_mw[idx], self.area_mm2[idx],
         self.pe_type[idx], cfgs, self.network,
         {k: v[idx] for k, v in self.extra.items()}, dict(self.meta),
-        self.table.select(idx) if self.table is not None else None)
+        self.table.select(idx) if self.table is not None else None,
+        self.arch_lookup)
+
+  @staticmethod
+  def _merge_arch_lookups(frames: Sequence["ResultFrame"]
+                          ) -> Tuple[Tuple[object, ...], Optional[np.ndarray]]:
+    """Union the frames' arch lookups; returns (merged lookup, remapped
+    arch_id column or None when ids can pass through unchanged)."""
+    lookups = [f.arch_lookup for f in frames]
+    if not any(lookups):
+      return (), None
+    if any(not lu and len(f) for lu, f in zip(lookups, frames)):
+      raise ValueError("cannot concat coded-arch frames with frames that "
+                       "have arch_id but no arch_lookup")
+    first = next(lu for lu in lookups if lu)
+    if all(lu == first or not len(f) for lu, f in zip(lookups, frames)):
+      return first, None  # identical lookups: ids are already aligned
+    merged: List[object] = []
+    index: Dict[object, int] = {}
+    parts: List[np.ndarray] = []
+    for f in frames:
+      remap = np.empty(len(f.arch_lookup), np.int64)
+      for j, arch in enumerate(f.arch_lookup):
+        if arch not in index:
+          index[arch] = len(merged)
+          merged.append(arch)
+        remap[j] = index[arch]
+      parts.append(remap[np.asarray(f.extra["arch_id"], np.int64)]
+                   if len(f) else np.zeros(0, np.int64))
+    return tuple(merged), np.concatenate(parts)
 
   @classmethod
   def concat(cls, frames: Sequence["ResultFrame"]) -> "ResultFrame":
@@ -272,17 +324,25 @@ class ResultFrame:
       raise ValueError("frames have mismatched extra columns")
     cfgs = sum((f.cfgs for f in frames), ()) \
         if all(f.cfgs or not len(f) for f in frames) else ()
-    if all(f.table is not None for f in frames):
-      table = ConfigTable.concat([f.table for f in frames])
-    elif not cfgs and all(f.table is not None or f.cfgs or not len(f)
-                          for f in frames):
+    # JointTables flatten to plain ConfigTables across a concat (numpy
+    # tiling; still no per-point Python objects)
+    tables = [f.table.materialize() if isinstance(f.table, JointTable)
+              else f.table for f in frames]
+    if all(t is not None for t in tables):
+      table = ConfigTable.concat(tables)
+    elif not cfgs and all(t is not None or f.cfgs or not len(f)
+                          for t, f in zip(tables, frames)):
       # mixed representations: lift the cfgs-only frames into tables so
       # design points survive the concat (tables are the cheap direction)
       table = ConfigTable.concat([
-          f.table if f.table is not None else ConfigTable.from_configs(f.cfgs)
-          for f in frames])
+          t if t is not None else ConfigTable.from_configs(f.cfgs)
+          for t, f in zip(tables, frames)])
     else:
       table = None
+    extra = {k: np.concatenate([f.extra[k] for f in frames]) for k in keys}
+    arch_lookup, remapped = cls._merge_arch_lookups(frames)
+    if remapped is not None:
+      extra["arch_id"] = remapped
     return cls(
         np.concatenate([f.latency_s for f in frames]),
         np.concatenate([f.power_mw for f in frames]),
@@ -290,8 +350,9 @@ class ResultFrame:
         np.concatenate([f.pe_type for f in frames]),
         cfgs,
         frames[0].network,
-        {k: np.concatenate([f.extra[k] for f in frames]) for k in keys},
-        table=table)
+        extra,
+        table=table,
+        arch_lookup=arch_lookup)
 
   # -- analysis ------------------------------------------------------------
 

@@ -91,23 +91,61 @@ class ExplorationSession:
 
   def co_explore(self, arch_accs: Sequence[Tuple[object, float]],
                  n_hw_per_type: int = 20, seed: int = 3,
-                 image_size: int = 32, method: str = "random"
-                 ) -> ResultFrame:
+                 image_size: int = 32, method: str = "random",
+                 vectorized: Union[bool, str] = "auto") -> ResultFrame:
     """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
 
-    Rows carry extra columns `top1` (float) and `arch` (object); energy /
-    area anchors come from frame.reference_index("energy"/"area").
+    Rows carry a ``top1`` float column and an integer ``arch_id`` column
+    resolving through ``frame.arch_lookup`` (one entry per architecture,
+    in ``arch_accs`` order); energy / area anchors come from
+    frame.reference_index("energy"/"area"), and the 3-objective joint
+    front is ``frame.pareto(("top1_err", "energy_mj", "area_mm2"))``.
+
+    vectorized: "auto" (default) takes the joint-table path when the
+    backend advertises ``prefers_table`` and implements
+    ``co_evaluate_table`` — the whole archs x HW cross product evaluates
+    array-at-a-time (arch layer features stacked once, HW sampled as
+    ConfigTables), with power/area computed once per HW row instead of
+    once per pair.  True forces that path for any backend implementing
+    ``co_evaluate_table`` (e.g. PolynomialBackend); False keeps the
+    legacy nested arch x HW loop of scalar ``backend.evaluate`` calls.
+    Both paths emit rows in the same (pe_type, arch, hw) order; note
+    ``method="random"`` samples different (each deterministic) HW
+    sequences per path, exactly like :meth:`explore` — use
+    ``grid``/``stratified`` when comparing paths point for point.
     """
+    from repro.core.dataflow import LayerStack  # local: keep header lean
     from repro.core.supernet import arch_to_layers  # deferred: pulls jax
-    arch_layers = [(arch, acc, arch_to_layers(arch, image_size=image_size))
-                   for arch, acc in arch_accs]
+    if vectorized == "auto":
+      use_joint = bool(getattr(self.backend, "prefers_table", False)) \
+          and hasattr(self.backend, "co_evaluate_table")
+    else:
+      use_joint = bool(vectorized)
+    if use_joint and not hasattr(self.backend, "co_evaluate_table"):
+      raise ValueError(f"backend {self.backend.name!r} has no "
+                       "co_evaluate_table; pass vectorized=False")
+    archs = [arch for arch, _ in arch_accs]
+    accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
+    arch_layers = [arch_to_layers(arch, image_size=image_size)
+                   for arch in archs]
     frames: List[ResultFrame] = []
+    if use_joint:
+      stack = LayerStack.from_layer_lists(arch_layers)
+      for ti, pe_type in enumerate(self.space.pe_types):
+        hw = self.space.sample_type_table(pe_type, n_hw_per_type,
+                                          seed=seed + 17 * ti, method=method)
+        f = self.backend.co_evaluate_table(hw, stack, network="coexplore")
+        f.extra["top1"] = accs[f.extra["arch_id"]]
+        f.arch_lookup = tuple(archs)
+        frames.append(f)
+      return ResultFrame.concat(frames)
     for ti, pe_type in enumerate(self.space.pe_types):
       cfgs = self.space.sample_type(pe_type, n_hw_per_type,
                                     seed=seed + 17 * ti, method=method)
-      for arch, acc, layers in arch_layers:
+      for aid, layers in enumerate(arch_layers):
         f = self.backend.evaluate(cfgs, layers, network="coexplore")
-        f.extra["top1"] = np.full(len(f), float(acc))
-        f.extra["arch"] = np.asarray([arch] * len(f), dtype=object)
+        f.extra["top1"] = np.full(len(f), accs[aid])
+        f.extra["arch_id"] = np.full(len(f), aid, np.int64)
+        f.arch_lookup = tuple(archs)
         frames.append(f)
     return ResultFrame.concat(frames)

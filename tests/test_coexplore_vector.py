@@ -1,0 +1,396 @@
+"""Scalar <-> vector parity for the joint HW x NN co-exploration path.
+
+Covers the LayerStack packing, the JointTable cross-product
+representation, `characterize_joint`, backend `co_evaluate_table`
+(VectorOracleBackend exact / PolynomialBackend within float tolerance),
+chunk-size invariance, session-level `co_explore(vectorized=...)`
+routing, coded-arch ResultFrame mechanics (arch_id + arch_lookup,
+mixed-lookup concat remapping), and a property test pinning the
+3-objective `pareto_mask` to a brute-force O(n^2) reference on random
+joint frames.
+"""
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import oracle
+from repro.core.cnn import SEARCH_SPACE, ArchChoice
+from repro.core.dataflow import ConvLayer, LayerStack
+from repro.core.pe import PE_TYPES
+from repro.core.table import ConfigTable, JointTable
+from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                           PolynomialBackend, ResultFrame,
+                           VectorOracleBackend, pareto_mask)
+
+ALL_TYPES = tuple(PE_TYPES)
+
+
+def make_archs(n, seed=0):
+  """Deterministic Table-4 architectures without a jax dependency."""
+  rng = np.random.RandomState(seed)
+  return [ArchChoice(tuple((int(rng.choice(reps)), int(rng.choice(chs)))
+                           for reps, chs in SEARCH_SPACE))
+          for _ in range(n)]
+
+
+def arch_layer_lists(archs, image_size=16):
+  from repro.core.supernet import arch_to_layers
+  return [arch_to_layers(a, image_size=image_size) for a in archs]
+
+
+@pytest.fixture(scope="module")
+def archs():
+  return make_archs(3, seed=7)
+
+
+@pytest.fixture(scope="module")
+def layer_lists(archs):
+  return arch_layer_lists(archs)
+
+
+@pytest.fixture(scope="module")
+def stack(layer_lists):
+  return LayerStack.from_layer_lists(layer_lists)
+
+
+class TestLayerStack:
+  def test_round_trip(self, layer_lists, stack):
+    assert stack.n_archs == len(layer_lists)
+    assert stack.max_layers == max(len(ls) for ls in layer_lists)
+    assert stack.n_layers().tolist() == [len(ls) for ls in layer_lists]
+    for a, ls in enumerate(layer_lists):
+      got = stack.layers_of(a)
+      # names differ (stack synthesizes them); compare the feature fields
+      assert [l.features() for l in got] == [l.features() for l in ls]
+
+  def test_features_tensor(self, layer_lists, stack):
+    f = stack.features()
+    assert f.shape == (stack.n_archs, stack.max_layers, 8)
+    for a, ls in enumerate(layer_lists):
+      want = np.asarray([l.features() for l in ls])
+      assert np.array_equal(f[a, :len(ls)], want)
+
+  def test_derived_match_convlayer(self, layer_lists, stack):
+    for a, ls in enumerate(layer_lists):
+      for li, l in enumerate(ls):
+        feats = stack.feats_at(li)
+        assert feats["macs"][a, 0] == float(l.macs)
+        assert feats["E"][a, 0] == float(max(l.out_dim, 1))
+        assert feats["of_words"][a, 0] == float(l.ofmap_count)
+        assert feats["ifmap_words"][a, 0] == float(l.ifmap_count)
+        assert feats["weight_words"][a, 0] == float(l.weight_count)
+
+  def test_validation_and_fingerprint(self, stack):
+    with pytest.raises(ValueError, match="2-D"):
+      LayerStack(*[np.zeros(3)] * 8, valid=np.ones(3, bool))
+    other = LayerStack.from_layer_lists(
+        [[ConvLayer("x", A=8, C=3, F=16, K=3)]])
+    assert stack.fingerprint() != other.fingerprint()
+    assert stack.fingerprint() == stack.fingerprint()
+
+
+class TestJointTable:
+  def test_index_arithmetic(self):
+    hw = DesignSpace().sample_table(5, seed=1)  # 20 rows, 4 types
+    joint = hw.cross(3)
+    assert isinstance(joint, JointTable)
+    assert len(joint) == 3 * 20 and joint.n_hw == 20
+    assert joint.arch_ids().tolist() == [a for a in range(3)
+                                         for _ in range(20)]
+    assert joint.hw_indices().tolist() == list(range(20)) * 3
+    assert list(joint.pe_type_strings()) == \
+        list(hw.pe_type_strings()) * 3
+    aid, cfg = joint.pair_at(2 * 20 + 7)
+    assert aid == 2 and cfg == hw.config_at(7)
+    assert joint.config_at(41) == hw.config_at(1)
+    with pytest.raises(IndexError):
+      joint.pair_at(len(joint))
+
+  def test_select_and_materialize(self):
+    hw = DesignSpace().sample_type_table("INT16", 6, seed=2)
+    joint = hw.cross(2)
+    flat = joint.materialize()
+    assert isinstance(flat, ConfigTable) and len(flat) == 12
+    assert flat.to_configs() == hw.to_configs() * 2
+    idx = np.asarray([0, 6, 11])
+    sel = joint.select(idx)
+    assert sel.to_configs() == [joint.config_at(i) for i in idx]
+    mask = np.zeros(12, bool)
+    mask[[1, 7]] = True
+    assert joint.select(mask).to_configs() == \
+        [joint.config_at(1), joint.config_at(7)]
+    assert joint.select(slice(5, 8)).to_configs() == \
+        [joint.config_at(i) for i in (5, 6, 7)]
+
+
+class TestJointOracleParity:
+  @pytest.mark.parametrize("pe_type", ALL_TYPES)
+  def test_characterize_joint_per_type(self, pe_type, layer_lists, stack):
+    hw = DesignSpace(pe_types=(pe_type,)).sample_type_table(
+        pe_type, 8, seed=hash(pe_type) % 1000)
+    ch = oracle.characterize_joint(hw, stack)
+    for a, ls in enumerate(layer_lists):
+      for h in range(len(hw)):
+        sc = oracle.characterize(hw.config_at(h), ls)
+        assert ch.latency_s[a, h] == sc.latency_s
+        assert ch.energy_mj[a, h] == sc.energy_mj
+        assert ch.utilization[a, h] == sc.utilization
+        assert ch.power_mw[h] == sc.power_mw
+        assert ch.area_mm2[h] == sc.area_mm2
+
+  def test_joint_row_matches_network_batch(self, layer_lists, stack):
+    """Row a of the stack path == characterize_batch with arch a's
+    layers (mixed-PE-type table)."""
+    hw = DesignSpace().sample_table(4, seed=9)
+    ch = oracle.characterize_joint(hw, stack)
+    for a, ls in enumerate(layer_lists):
+      cb = oracle.characterize_batch(hw, ls)
+      assert np.array_equal(ch.latency_s[a], cb.latency_s)
+      assert np.array_equal(ch.energy_mj[a], cb.energy_mj)
+      assert np.array_equal(ch.utilization[a], cb.utilization)
+
+
+class TestVectorCoEvaluate:
+  def test_exact_vs_scalar_loop(self, archs, layer_lists):
+    hw = DesignSpace().sample_table(5, seed=4)  # 20 mixed-type rows
+    stack = LayerStack.from_layer_lists(layer_lists)
+    fj = VectorOracleBackend(chunk_size=32).co_evaluate_table(hw, stack)
+    assert len(fj) == len(archs) * len(hw)
+    ob = OracleBackend()
+    n_hw = len(hw)
+    for a, ls in enumerate(layer_lists):
+      fs = ob.evaluate(hw.to_configs(), ls, "coexplore")
+      rows = slice(a * n_hw, (a + 1) * n_hw)
+      for col in ("latency_s", "power_mw", "area_mm2"):
+        assert np.array_equal(getattr(fj, col)[rows],
+                              getattr(fs, col)), col
+      assert list(fj.pe_type[rows]) == list(fs.pe_type)
+
+  def test_chunk_size_invariance(self, stack):
+    hw = DesignSpace().sample_table(7, seed=5)
+    frames = [VectorOracleBackend(chunk_size=cs).co_evaluate_table(hw, stack)
+              for cs in (1, 2, 17, 100, 10_000_000)]
+    for f in frames[1:]:
+      for col in ("latency_s", "power_mw", "area_mm2"):
+        assert np.array_equal(getattr(f, col),
+                              getattr(frames[0], col)), col
+
+  def test_frame_carries_joint_table_and_arch_ids(self, stack):
+    hw = DesignSpace().sample_type_table("INT16", 4, seed=0)
+    f = VectorOracleBackend().co_evaluate_table(hw, stack)
+    assert isinstance(f.table, JointTable)
+    assert f.extra["arch_id"].dtype == np.int64
+    assert f.config_at(5) == hw.config_at(1)
+    top = f.top_k(3, by="perf_per_area")  # select() gathers a flat table
+    assert isinstance(top.table, ConfigTable) and len(top.table) == 3
+    pts = f.to_points()  # design-point protocol holds on joint frames
+    assert len(pts) == len(f)
+    assert pts[5].cfg == hw.config_at(1)
+    assert pts[-1].latency_s == f.latency_s[-1]
+
+  def test_jit_path_close(self, stack):
+    pytest.importorskip("jax")
+    hw = DesignSpace().sample_table(3, seed=1)
+    base = VectorOracleBackend().co_evaluate_table(hw, stack)
+    jit = VectorOracleBackend(chunk_size=64, jit=True).co_evaluate_table(
+        hw, stack)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      np.testing.assert_allclose(getattr(jit, col), getattr(base, col),
+                                 rtol=1e-3)
+
+
+class TestPolynomialCoEvaluate:
+  @pytest.fixture(scope="class")
+  def backend(self, layer_lists):
+    return PolynomialBackend.fit(pe_types=("INT16", "LightPE-1"), degree=3,
+                                 n_train=80, layers=layer_lists[0][:4],
+                                 seed=0)
+
+  def test_matches_scalar_loop(self, backend, archs, layer_lists):
+    space = DesignSpace(pe_types=("INT16", "LightPE-1"))
+    hw = space.sample_table(6, seed=3)
+    stack = LayerStack.from_layer_lists(layer_lists)
+    fj = backend.co_evaluate_table(hw, stack)
+    n_hw = len(hw)
+    for a, ls in enumerate(layer_lists):
+      fs = backend.evaluate(hw.to_configs(), ls, "coexplore")
+      rows = slice(a * n_hw, (a + 1) * n_hw)
+      for col in ("latency_s", "power_mw", "area_mm2"):
+        np.testing.assert_allclose(getattr(fj, col)[rows],
+                                   getattr(fs, col), rtol=1e-12,
+                                   err_msg=col)
+
+  def test_missing_type_raises(self, backend, stack):
+    hw = DesignSpace().sample_type_table("FP32", 2, seed=0)
+    with pytest.raises(KeyError, match="FP32"):
+      backend.co_evaluate_table(hw, stack)
+
+
+class TestSessionCoExplore:
+  @pytest.fixture(scope="class")
+  def arch_accs(self):
+    return [(a, 0.9 - 0.1 * i) for i, a in enumerate(make_archs(3, seed=7))]
+
+  def test_vectorized_matches_scalar_path(self, arch_accs):
+    """Stratified sampling enumerates the same HW sequence on both
+    paths, so the joint frames must agree bit for bit."""
+    space = DesignSpace(pe_types=("INT16", "LightPE-2"))
+    sess = ExplorationSession(VectorOracleBackend(chunk_size=16), space)
+    kw = dict(n_hw_per_type=5, image_size=16, method="stratified")
+    fv = sess.co_explore(arch_accs, vectorized=True, **kw)
+    fs = sess.co_explore(arch_accs, vectorized=False, **kw)
+    assert len(fv) == len(fs) == 2 * 3 * 5
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      assert np.array_equal(getattr(fv, col), getattr(fs, col)), col
+    assert np.array_equal(fv.extra["top1"], fs.extra["top1"])
+    assert np.array_equal(fv.extra["arch_id"], fs.extra["arch_id"])
+    assert list(fv.pe_type) == list(fs.pe_type)
+    assert fv.arch_lookup == fs.arch_lookup
+    assert fv.arch_at(0) == arch_accs[0][0]
+
+  def test_auto_routes_by_backend(self, arch_accs):
+    space = DesignSpace(pe_types=("INT16",))
+    joint = ExplorationSession(VectorOracleBackend(), space).co_explore(
+        arch_accs, n_hw_per_type=3, image_size=16)
+    assert joint.extra["arch_id"].dtype == np.int64
+    with pytest.raises(ValueError, match="co_evaluate_table"):
+      ExplorationSession(OracleBackend(), space).co_explore(
+          arch_accs, n_hw_per_type=2, image_size=16, vectorized=True)
+
+  def test_three_objective_front(self, arch_accs):
+    space = DesignSpace(pe_types=("INT16", "LightPE-1"))
+    sess = ExplorationSession(VectorOracleBackend(), space)
+    frame = sess.co_explore(arch_accs, n_hw_per_type=6, image_size=16)
+    front = frame.pareto(("top1_err", "energy_mj", "area_mm2"))
+    obj = np.stack([frame.column("top1_err"), frame.energy_mj,
+                    frame.area_mm2], axis=1)
+    ref = np.ones(len(frame), bool)
+    for i in range(len(frame)):
+      dom = np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1)
+      ref[i] = not dom.any()
+    assert np.array_equal(front, ref)
+    assert front.any()
+
+
+class TestCodedArchFrame:
+  def test_lookup_requires_arch_id(self):
+    with pytest.raises(ValueError, match="arch_id"):
+      ResultFrame(np.ones(2), np.ones(2), np.ones(2),
+                  np.asarray(["INT16"] * 2), arch_lookup=("a",))
+
+  def test_arch_id_out_of_range(self):
+    with pytest.raises(ValueError, match="out of range"):
+      ResultFrame(np.ones(2), np.ones(2), np.ones(2),
+                  np.asarray(["INT16"] * 2),
+                  extra={"arch_id": np.asarray([0, 5])},
+                  arch_lookup=("a",))
+
+  def test_mixed_lookup_concat_remaps(self):
+    def frame(lookup, ids):
+      n = len(ids)
+      return ResultFrame(np.ones(n), np.ones(n), np.ones(n),
+                         np.asarray(["INT16"] * n), network="coexplore",
+                         extra={"arch_id": np.asarray(ids, np.int64)},
+                         arch_lookup=lookup)
+    archs = make_archs(3, seed=1)
+    f1 = frame((archs[0], archs[1]), [0, 1, 1])
+    f2 = frame((archs[1], archs[2]), [0, 1])
+    both = ResultFrame.concat([f1, f2])
+    assert both.arch_lookup == (archs[0], archs[1], archs[2])
+    assert both.extra["arch_id"].tolist() == [0, 1, 1, 1, 2]
+    assert both.arch_at(3) == archs[1]
+    # identical lookups short-circuit without remapping
+    same = ResultFrame.concat([f1, f1])
+    assert same.arch_lookup == f1.arch_lookup
+    assert same.extra["arch_id"].tolist() == [0, 1, 1, 0, 1, 1]
+
+  def test_concat_rejects_uncoded_arch_frames(self):
+    archs = make_archs(1, seed=2)
+    coded = ResultFrame(np.ones(1), np.ones(1), np.ones(1),
+                        np.asarray(["INT16"]), network="coexplore",
+                        extra={"arch_id": np.zeros(1, np.int64)},
+                        arch_lookup=(archs[0],))
+    uncoded = ResultFrame(np.ones(1), np.ones(1), np.ones(1),
+                          np.asarray(["INT16"]), network="coexplore",
+                          extra={"arch_id": np.zeros(1, np.int64)})
+    with pytest.raises(ValueError, match="arch_lookup"):
+      ResultFrame.concat([coded, uncoded])
+
+  def test_select_preserves_lookup(self):
+    archs = make_archs(2, seed=3)
+    f = ResultFrame(np.arange(4.0), np.ones(4), np.ones(4),
+                    np.asarray(["INT16"] * 4), network="coexplore",
+                    extra={"arch_id": np.asarray([0, 0, 1, 1])},
+                    arch_lookup=tuple(archs))
+    sub = f.select(np.asarray([2, 3]))
+    assert sub.arch_lookup == tuple(archs)
+    assert sub.arch_at(0) == archs[1]
+
+
+class TestShimCompat:
+  def test_copoint_list_bit_compatible(self):
+    """The rerouted _to_frame keeps the CoPoint API unchanged."""
+    from repro.core import coexplore
+    from repro.core.workloads import get_network
+    layers = get_network("resnet20")[:4]
+    backend = PolynomialBackend.fit(pe_types=("INT16",), degree=3,
+                                    n_train=80, layers=layers, seed=0)
+    arch_accs = [(a, 0.8 - 0.1 * i)
+                 for i, a in enumerate(make_archs(2, seed=5))]
+    pts = coexplore.co_explore(backend.models, arch_accs, n_hw_per_type=4,
+                               image_size=16, pe_types=("INT16",))
+    assert len(pts) == 2 * 4
+    assert [p.arch for p in pts[:4]] == [arch_accs[0][0]] * 4
+    assert [p.arch for p in pts[4:]] == [arch_accs[1][0]] * 4
+    res = coexplore.normalize_and_front(pts)
+    assert res["front_energy"].shape == (8,)
+    assert res["err"].tolist() == [1.0 - p.top1 for p in pts]
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis optional — skip cleanly without it)
+# ---------------------------------------------------------------------------
+
+def brute_force_front(obj: np.ndarray) -> np.ndarray:
+  obj = np.asarray(obj, np.float64)
+  n = obj.shape[0]
+  mask = np.ones(n, bool)
+  for i in range(n):
+    dom = np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1)
+    mask[i] = not dom.any()
+  return mask
+
+
+class TestProperties:
+  @given(st.integers(0, 10_000), st.integers(1, 120), st.integers(1, 6))
+  @settings(max_examples=25, deadline=None)
+  def test_3d_pareto_matches_brute_force_on_joint_frames(self, seed, n,
+                                                         n_archs):
+    """Random joint frames (duplicated objective rows included, as real
+    arch-major frames produce) — the n-d sweep must equal the O(n^2)
+    dominance reference on (top1_err, energy, area)."""
+    rng = np.random.RandomState(seed)
+    err = rng.uniform(0.05, 0.6, size=n_archs)[
+        rng.randint(0, n_archs, size=n)]
+    energy = rng.lognormal(0.0, 1.0, size=n)
+    area = rng.lognormal(0.0, 0.5, size=n)
+    # inject exact duplicates (tied pairs across archs)
+    if n >= 4:
+      energy[: n // 4] = energy[n // 4: 2 * (n // 4)]
+      area[: n // 4] = area[n // 4: 2 * (n // 4)]
+    obj = np.stack([err, energy, area], axis=1)
+    assert np.array_equal(pareto_mask(obj), brute_force_front(obj))
+
+  @given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 10))
+  @settings(max_examples=10, deadline=None)
+  def test_joint_parity_random(self, seed, n_archs, n_hw):
+    rng = np.random.RandomState(seed)
+    archs = make_archs(n_archs, seed=seed)
+    lists = arch_layer_lists(archs, image_size=8)
+    stack = LayerStack.from_layer_lists(lists)
+    hw = DesignSpace().sample_table(max(n_hw // 4, 1), seed=seed)
+    ch = oracle.characterize_joint(hw, stack)
+    a = seed % n_archs
+    cb = oracle.characterize_batch(hw, lists[a])
+    assert np.array_equal(ch.latency_s[a], cb.latency_s)
+    assert np.array_equal(ch.energy_mj[a], cb.energy_mj)

@@ -201,6 +201,7 @@ class TestSupernetBridge:
     assert len(layers) == 13   # VGG-16's conv count
     assert layers[0].C == 3 and layers[-1].F == 512
 
+  @pytest.mark.slow
   def test_mask_equals_slice_semantics(self):
     """Masked supernet == manually sliced subnet (exactness property)."""
     from repro.core import cnn

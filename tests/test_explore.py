@@ -145,6 +145,7 @@ class TestParetoMask:
   def test_empty(self):
     assert pareto_mask(np.zeros((0, 2))).shape == (0,)
 
+  @pytest.mark.slow
   def test_50k_points_exact_and_10x_faster_than_legacy(self):
     """Acceptance: >=50k synthetic points, exact vs the brute-force loop,
     >=10x faster than the old dse.pareto_front implementation."""

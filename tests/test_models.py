@@ -40,6 +40,7 @@ class TestSmoke:
     assert bool(jnp.isfinite(loss))
     assert float(metrics["tokens"]) > 0
 
+  @pytest.mark.slow
   def test_gradients_finite(self, arch):
     cfg = reduce_for_smoke(get_config(arch))
     model = build_model(cfg)
@@ -80,6 +81,7 @@ def test_decode_matches_prefill_exact(arch):
 
 @pytest.mark.parametrize("arch", ["mixtral-8x22b", "qwen2-moe-a2.7b",
                                   "jamba-1.5-large"])
+@pytest.mark.slow
 def test_decode_matches_prefill_moe_no_drops(arch):
   """MoE archs match exactly when capacity dropping is disabled."""
   cfg = dataclasses.replace(reduce_for_smoke(get_config(arch)),
@@ -99,6 +101,7 @@ def test_decode_matches_prefill_moe_no_drops(arch):
   assert err < 1e-4, err
 
 
+@pytest.mark.slow
 def test_quantized_kv_decode_close():
   """int8 KV cache decode stays close to the fp cache decode."""
   cfg = reduce_for_smoke(get_config("qwen3-0.6b"))

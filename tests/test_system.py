@@ -53,6 +53,7 @@ class TestPaperPipeline:
 
 
 class TestTrainServeRoundtrip:
+  @pytest.mark.slow
   def test_train_then_serve(self, tmp_path):
     """Train a tiny model until loss drops, checkpoint, serve from the
     restored params — the full production loop at smoke scale."""

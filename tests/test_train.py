@@ -20,6 +20,7 @@ KEY = jax.random.PRNGKey(0)
 
 
 class TestAdamW:
+  @pytest.mark.slow
   def test_quadratic_convergence(self):
     cfg = opt_lib.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
                               schedule="constant", grad_clip=0.0)
@@ -82,6 +83,7 @@ class TestTrainStep:
     state = ts_lib.make_train_state(model, tcfg, KEY)
     return cfg, model, tcfg, state
 
+  @pytest.mark.slow
   def test_loss_decreases(self):
     cfg, model, tcfg, state = self._setup()
     stream = MarkovTokenStream(TokenStreamConfig(vocab_size=cfg.vocab_size,
@@ -95,6 +97,7 @@ class TestTrainStep:
       losses.append(float(m["loss"]))
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
 
+  @pytest.mark.slow
   def test_microbatch_equivalence(self):
     """grad accumulation over 2 microbatches ~ single big batch."""
     cfg, model, tcfg1, state1 = self._setup(microbatches=1)
@@ -107,6 +110,7 @@ class TestTrainStep:
     w2 = s2["params"]["embed"]
     assert float(jnp.max(jnp.abs(w1 - w2))) < 5e-3
 
+  @pytest.mark.slow
   def test_qat_policy_trains(self):
     cfg, model, tcfg, state = self._setup(
         quant=QuantPolicy(pe_type="LightPE-2"))
