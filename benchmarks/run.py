@@ -18,9 +18,11 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--suite", default="all",
                   choices=("paper", "accuracy", "framework", "coexplore",
-                           "all"),
+                           "streaming", "all"),
                   help="benchmark module to run (default: all); "
-                       "'coexplore' runs just the joint-sweep perf record")
+                       "'coexplore' runs just the joint-sweep perf record, "
+                       "'streaming' the constant-memory sweep-engine record "
+                       "(STREAMING_BENCH_SCALE=smoke shrinks it for CI)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -37,6 +39,7 @@ def main() -> None:
       "accuracy": accuracy_experiments.ALL,
       "framework": framework_perf.ALL,
       "coexplore": [framework_perf.coexplore_vector_perf],
+      "streaming": [framework_perf.streaming_perf],
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL

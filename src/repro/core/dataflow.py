@@ -563,6 +563,18 @@ class LayerStack:
                         for ls in lists], np.bool_)
     return cls(valid=valid, **cols)
 
+  def slice_archs(self, lo: int, hi: int) -> "LayerStack":
+    """Arch-range sub-stack (the streaming engine's unit of work).
+
+    Row ``a`` of the slice is bit-identical to row ``lo + a`` of the full
+    stack — padding columns are preserved, so per-slot accumulation order
+    (and therefore every latency/energy sum) is unchanged.
+    """
+    sl = slice(lo, hi)
+    return LayerStack(valid=self.valid[sl],
+                      **{name: getattr(self, name)[sl]
+                         for name in _STACK_FIELDS})
+
   def layers_of(self, arch_id: int) -> List[ConvLayer]:
     """Materialize one architecture's ConvLayer list (scalar escape)."""
     out = []

@@ -287,6 +287,33 @@ class JointTable:
       idx = np.flatnonzero(idx)
     return self.hw.select(idx % max(self.n_hw, 1))
 
+  def block_slices(self, chunk_size: int
+                   ) -> Iterator[Tuple[slice, slice]]:
+    """Tile the arch x HW cross product into (arch_slice, hw_slice)
+    blocks of <= chunk_size joint rows — the streaming engine's unit of
+    work.  HW chunks span as many rows as fit; the arch axis splits into
+    blocks of ``chunk_size // hw_chunk`` so a 100M-pair sweep is visited
+    as a few hundred bounded blocks, never materialized."""
+    if chunk_size <= 0:
+      raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    n_hw = self.n_hw
+    if not n_hw or not self.n_archs:
+      return
+    hw_chunk = min(n_hw, chunk_size)
+    arch_block = max(1, chunk_size // hw_chunk)
+    for a_lo in range(0, self.n_archs, arch_block):
+      a_sl = slice(a_lo, min(a_lo + arch_block, self.n_archs))
+      for h_lo in range(0, n_hw, hw_chunk):
+        yield a_sl, slice(h_lo, min(h_lo + hw_chunk, n_hw))
+
+  def block_indices(self, arch_slice: slice, hw_slice: slice) -> np.ndarray:
+    """Joint row ids of one block, flattened arch-major — i.e. in the
+    exact row order :meth:`~repro.explore.backend.VectorOracleBackend.\
+co_evaluate_table` emits for the block's sub-table/sub-stack."""
+    a = np.arange(arch_slice.start, arch_slice.stop, dtype=np.int64)
+    h = np.arange(hw_slice.start, hw_slice.stop, dtype=np.int64)
+    return (a[:, None] * self.n_hw + h[None, :]).reshape(-1)
+
   def materialize(self) -> ConfigTable:
     """Flat ``n_archs * n_hw``-row ConfigTable (numpy tiling, no Python
     per-pair objects) — the escape hatch for consumers of plain tables."""

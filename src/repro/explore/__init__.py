@@ -26,6 +26,14 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        .pareto(), .normalize(), .stats(), .top_k() [frame]
   ExplorationSession   facade driving plain DSE and co-exploration over
                        the same backend + space                 [session]
+  streaming engine     constant-memory, parallel sweeps with online
+                       reduction: ParetoAccumulator, TopKAccumulator,
+                       StatsAccumulator, HistogramAccumulator fold lazy
+                       chunks (``DesignSpace.iter_tables`` /
+                       ``JointTable.block_slices``) into survivors-only
+                       results — ``session.explore(stream=True,
+                       reducers=...)`` / ``co_explore(stream=True)``
+                                                              [streaming]
 
 Quickstart::
 
@@ -58,16 +66,26 @@ from repro.explore.backend import (EvaluationBackend, OracleBackend,
                                    PolynomialBackend, VectorOracleBackend,
                                    gbuf_overheads, gbuf_overheads_table)
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
-                                 pareto_mask, summary_stats)
+                                 pareto_mask, stable_topk_indices,
+                                 summary_stats)
 from repro.explore.session import ExplorationSession
 from repro.explore.space import (AXIS_ORDER, Axis, DesignSpace,
                                  VectorConstraint, vector_constraint)
+from repro.explore.streaming import (STREAM_AUTO_MIN_ROWS,
+                                     CollectAccumulator,
+                                     HistogramAccumulator, ParetoAccumulator,
+                                     Reducer, StatsAccumulator, StreamResult,
+                                     TopKAccumulator, stream_co_explore,
+                                     stream_explore)
 
 __all__ = [
-    "AXIS_ORDER", "Axis", "ConfigTable", "DesignPoint", "DesignSpace",
-    "EvaluationBackend", "ExplorationSession", "JointTable", "LayerStack",
-    "Normalized", "OracleBackend", "PolynomialBackend", "ResultFrame",
-    "VectorConstraint", "VectorOracleBackend", "gbuf_overheads",
-    "gbuf_overheads_table", "pareto_mask", "summary_stats",
-    "vector_constraint",
+    "AXIS_ORDER", "Axis", "CollectAccumulator", "ConfigTable", "DesignPoint",
+    "DesignSpace", "EvaluationBackend", "ExplorationSession",
+    "HistogramAccumulator", "JointTable", "LayerStack", "Normalized",
+    "OracleBackend", "ParetoAccumulator", "PolynomialBackend", "Reducer",
+    "ResultFrame", "STREAM_AUTO_MIN_ROWS", "StatsAccumulator",
+    "StreamResult", "TopKAccumulator", "VectorConstraint",
+    "VectorOracleBackend", "gbuf_overheads", "gbuf_overheads_table",
+    "pareto_mask", "stable_topk_indices", "stream_co_explore",
+    "stream_explore", "summary_stats", "vector_constraint",
 ]

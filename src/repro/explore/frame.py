@@ -93,21 +93,89 @@ def _pareto_mask_2d(obj: np.ndarray) -> np.ndarray:
   return mask
 
 
-def _pareto_mask_nd(obj: np.ndarray) -> np.ndarray:
-  """General-dimension front: visit candidates in ascending objective-sum
-  order (a point alive when visited is provably non-dominated), kill its
-  dominated set vectorized.  O(front_size) full-array passes."""
+def _pareto_elim_nd(obj: np.ndarray) -> np.ndarray:
+  """General-dimension front by elimination: visit candidates in ascending
+  objective-sum order — the smallest-sum survivor is provably
+  non-dominated — then kill its dominated set vectorized, *compacting*
+  the survivor arrays each step.  The Python loop runs front_size times
+  over an ever-shrinking alive set (not n times over the full array)."""
   n = obj.shape[0]
-  alive = np.ones(n, np.bool_)
+  order = np.argsort(obj.sum(axis=1), kind="stable")
+  o = obj[order]
+  pos = np.arange(n)
   front = np.zeros(n, np.bool_)
-  for i in np.argsort(obj.sum(axis=1), kind="stable"):
-    if not alive[i]:
-      continue
-    front[i] = True
-    dominated = (np.all(obj >= obj[i], axis=1)
-                 & np.any(obj > obj[i], axis=1))
-    alive &= ~dominated
+  while pos.size:
+    head = pos[0]
+    front[order[head]] = True
+    rest = pos[1:]
+    sub = o[rest]
+    x = o[head]
+    dominated = np.all(sub >= x, axis=1) & np.any(sub > x, axis=1)
+    pos = rest[~dominated]
   return front
+
+
+# block size for the divide-and-conquer N-D front (crossover tuned on the
+# 1M x 3 BENCH_coexplore front; correctness is block-size independent)
+_ND_BLOCK = 4096
+
+
+def _pareto_mask_nd(obj: np.ndarray) -> np.ndarray:
+  """Block-decomposed general-dimension front.
+
+  Per-block elimination first (every global-front point survives its own
+  block; every dominated point is dominated by some front point, which
+  survives *its* block), then recursive elimination over the surviving
+  candidates only.  Full-array passes touch at most ``_ND_BLOCK``-row
+  blocks, so million-point fronts cost block sweeps + a small candidate
+  merge instead of O(front_size) million-row passes.  This is the same
+  front-vs-front merge kernel ParetoAccumulator folds streaming chunks
+  with (see repro.explore.streaming).
+  """
+  n = obj.shape[0]
+  if n <= _ND_BLOCK:
+    return _pareto_elim_nd(obj)
+  cand = np.concatenate([
+      lo + np.flatnonzero(_pareto_elim_nd(obj[lo:lo + _ND_BLOCK]))
+      for lo in range(0, n, _ND_BLOCK)])
+  if cand.size == n:  # degenerate: every block all-front; no progress
+    return _pareto_elim_nd(obj)
+  mask = np.zeros(n, np.bool_)
+  mask[cand[_pareto_mask_nd(obj[cand])]] = True
+  return mask
+
+
+def stable_topk_indices(key: np.ndarray, k: int,
+                        tie: Optional[np.ndarray] = None) -> np.ndarray:
+  """Indices of the k smallest ``key`` values in stable-sort order
+  (ascending key, ties by ascending ``tie`` — default the index itself),
+  via argpartition + sort-of-k: O(n + k log k) instead of a full argsort.
+
+  Exactly equivalent to ``np.argsort(key, kind="stable")[:k]`` (with
+  ``tie=None``); the streaming TopKAccumulator passes global row ids as
+  ``tie`` so folds over shuffled chunk partitions stay bit-identical to
+  the one-shot path.
+  """
+  key = np.asarray(key)
+  n = key.shape[0]
+  k = max(int(k), 0)
+  if k == 0:
+    return np.zeros(0, np.int64)
+  tie_of = np.arange(n) if tie is None else np.asarray(tie)
+  if k >= n:
+    sel = np.arange(n)
+    return sel[np.lexsort((tie_of, key))]
+  part = np.argpartition(key, k - 1)[:k]
+  if np.isnan(key[part]).any():  # NaN partitions unreliably; full sort
+    return np.lexsort((tie_of, key))[:k]
+  thresh = key[part].max()
+  strict = np.flatnonzero(key < thresh)
+  ties = np.flatnonzero(key == thresh)
+  need = k - strict.size
+  # boundary ties resolve exactly like the stable sort: smallest tie wins
+  ties = ties[np.argsort(tie_of[ties], kind="stable")[:need]]
+  sel = np.concatenate([strict, ties])
+  return sel[np.lexsort((tie_of[sel], key[sel]))]
 
 
 def pareto_mask(objectives: np.ndarray) -> np.ndarray:
@@ -125,8 +193,15 @@ def pareto_mask(objectives: np.ndarray) -> np.ndarray:
 
 
 def summary_stats(values: np.ndarray) -> Dict[str, float]:
-  """Fig. 9 violin summary: min / q1 / median / q3 / max / mean."""
+  """Fig. 9 violin summary: min / q1 / median / q3 / max / mean.
+
+  Empty input (e.g. a ``frame.stats(col, mask)`` whose mask selects zero
+  rows) returns NaN for every statistic instead of the opaque ``np.min``
+  ValueError."""
   v = np.asarray(values, np.float64)
+  if v.size == 0:
+    return {k: float("nan")
+            for k in ("min", "q1", "median", "q3", "max", "mean")}
   return {
       "min": float(v.min()), "q1": float(np.percentile(v, 25)),
       "median": float(np.median(v)), "q3": float(np.percentile(v, 75)),
@@ -419,5 +494,4 @@ class ResultFrame:
     if maximize is None:
       maximize = by in _MAXIMIZE_COLUMNS
     vals = self.column(by)
-    order = np.argsort(-vals if maximize else vals, kind="stable")
-    return self.select(order[:k])
+    return self.select(stable_topk_indices(-vals if maximize else vals, k))

@@ -15,11 +15,19 @@ per-point config list, and the columnar :class:`ConfigTable` path for
 backends that prefer it (``prefers_table = True``, e.g.
 :class:`~repro.explore.VectorOracleBackend`) — million-point sweeps then
 stay struct-of-arrays from sampling through evaluation to the frame.
+
+Both methods also route into the streaming engine
+(:mod:`repro.explore.streaming`): explicitly with ``stream=True`` +
+``reducers`` (constant memory, survivors-only :class:`StreamResult`
+out), or implicitly when ``vectorized="auto"`` sees a sweep of
+``STREAM_AUTO_MIN_ROWS``+ rows on a table-capable backend — the engine
+then evaluates chunks on a thread pool and reassembles the identical
+full frame (parallel throughput, one-shot semantics).
 """
 from __future__ import annotations
 
 import time
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -27,6 +35,10 @@ from repro.core.dataflow import AcceleratorConfig, ConvLayer
 from repro.explore.backend import EvaluationBackend, OracleBackend
 from repro.explore.frame import ResultFrame
 from repro.explore.space import DesignSpace
+from repro.explore.streaming import (STREAM_AUTO_MIN_ROWS,
+                                     CollectAccumulator, Reducer,
+                                     StreamResult, stream_co_explore,
+                                     stream_explore)
 
 
 class ExplorationSession:
@@ -49,7 +61,10 @@ class ExplorationSession:
   def explore(self, layers: Sequence[ConvLayer], network: str,
               n_per_type: int = 200, seed: int = 17,
               method: str = "random", measure_oracle: int = 0,
-              vectorized: Union[bool, str] = "auto") -> ResultFrame:
+              vectorized: Union[bool, str] = "auto", stream: bool = False,
+              reducers: Optional[Dict[str, Reducer]] = None,
+              chunk_size: int = 65536, workers: Optional[int] = None
+              ) -> Union[ResultFrame, StreamResult]:
     """Sample the space, evaluate `network`; optionally time the oracle on
     the first `measure_oracle` configs for the paper's speedup claim.
 
@@ -58,9 +73,29 @@ class ExplorationSession:
     any backend with ``evaluate_table``; False keeps the legacy per-point
     config list (bit-compatible with the pre-table sampler sequences).
 
+    stream=True runs the constant-memory streaming engine instead and
+    returns a :class:`StreamResult` of reducer outputs (default: one
+    ParetoAccumulator) — survivors bit-identical to the one-shot frame's
+    ``pareto``/``top_k`` on the numpy path.  With ``vectorized="auto"``
+    and no explicit ``stream``, sweeps of ``STREAM_AUTO_MIN_ROWS``+ rows
+    still go through the engine with a CollectAccumulator: parallel
+    chunked evaluation, identical full ResultFrame out (meta carries
+    ``streamed``/``workers``).
+
     frame.meta carries: eval_seconds, eval_us_per_design, and (when
     measured) oracle_seconds_per_design + speedup.
     """
+    if reducers is not None and not stream:
+      raise ValueError("reducers only apply to the streaming engine; "
+                       "pass stream=True")
+    if stream:
+      if measure_oracle:
+        raise ValueError("measure_oracle is a one-shot feature; "
+                         "pass stream=False")
+      return stream_explore(self.backend, self.space, layers, network,
+                            n_per_type=n_per_type, seed=seed, method=method,
+                            reducers=reducers, chunk_size=chunk_size,
+                            workers=workers)
     if vectorized == "auto":
       use_table = bool(getattr(self.backend, "prefers_table", False))
     else:
@@ -68,6 +103,10 @@ class ExplorationSession:
     if use_table and not hasattr(self.backend, "evaluate_table"):
       raise ValueError(f"backend {self.backend.name!r} has no "
                        "evaluate_table; pass vectorized=False")
+    if (use_table and vectorized == "auto" and not measure_oracle
+        and n_per_type * len(self.space.pe_types) >= STREAM_AUTO_MIN_ROWS):
+      return self._explore_streamed_frame(layers, network, n_per_type, seed,
+                                          method, chunk_size, workers)
     if use_table:
       cfgs = self.space.sample_table(n_per_type, seed=seed, method=method)
     else:
@@ -89,10 +128,35 @@ class ExplorationSession:
       frame.meta["speedup"] = per_design / max(t_eval / n, 1e-12)
     return frame
 
+  @staticmethod
+  def _collected_frame(res: StreamResult) -> ResultFrame:
+    """Unwrap a CollectAccumulator run: the identical full frame, tagged
+    with how it was produced."""
+    frame = res["frame"]
+    frame.meta["streamed"] = 1.0
+    frame.meta["workers"] = res.meta["workers"]
+    return frame
+
+  def _explore_streamed_frame(self, layers, network, n_per_type, seed,
+                              method, chunk_size, workers) -> ResultFrame:
+    """The auto above-threshold path: parallel chunked evaluation through
+    the engine, identical full frame out (CollectAccumulator)."""
+    res = stream_explore(self.backend, self.space, layers, network,
+                         n_per_type=n_per_type, seed=seed, method=method,
+                         reducers={"frame": CollectAccumulator()},
+                         chunk_size=chunk_size, workers=workers)
+    frame = self._collected_frame(res)
+    frame.meta["eval_seconds"] = res.seconds
+    frame.meta["eval_us_per_design"] = res.seconds / max(len(frame), 1) * 1e6
+    return frame
+
   def co_explore(self, arch_accs: Sequence[Tuple[object, float]],
                  n_hw_per_type: int = 20, seed: int = 3,
                  image_size: int = 32, method: str = "random",
-                 vectorized: Union[bool, str] = "auto") -> ResultFrame:
+                 vectorized: Union[bool, str] = "auto", stream: bool = False,
+                 reducers: Optional[Dict[str, Reducer]] = None,
+                 chunk_size: int = 65536, workers: Optional[int] = None
+                 ) -> Union[ResultFrame, StreamResult]:
     """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
 
     Rows carry a ``top1`` float column and an integer ``arch_id`` column
@@ -113,8 +177,27 @@ class ExplorationSession:
     ``method="random"`` samples different (each deterministic) HW
     sequences per path, exactly like :meth:`explore` — use
     ``grid``/``stratified`` when comparing paths point for point.
+
+    stream=True runs the constant-memory streaming engine over lazy
+    JointTable blocks and returns a :class:`StreamResult` (default
+    reducer: the 3-objective joint-front ParetoAccumulator).  Like
+    :meth:`explore`, ``vectorized="auto"`` sends
+    ``STREAM_AUTO_MIN_ROWS``+-pair sweeps through the engine with a
+    CollectAccumulator — parallel evaluation, identical joint frame out.
     """
     from repro.core.dataflow import LayerStack  # local: keep header lean
+    if reducers is not None and not stream:
+      raise ValueError("reducers only apply to the streaming engine; "
+                       "pass stream=True")
+    if stream:
+      if not hasattr(self.backend, "co_evaluate_table"):
+        raise ValueError(f"backend {self.backend.name!r} has no "
+                         "co_evaluate_table; streaming needs the joint path")
+      return stream_co_explore(self.backend, self.space, arch_accs,
+                               n_hw_per_type=n_hw_per_type, seed=seed,
+                               image_size=image_size, method=method,
+                               reducers=reducers, chunk_size=chunk_size,
+                               workers=workers)
     from repro.core.supernet import arch_to_layers  # deferred: pulls jax
     if vectorized == "auto":
       use_joint = bool(getattr(self.backend, "prefers_table", False)) \
@@ -124,6 +207,15 @@ class ExplorationSession:
     if use_joint and not hasattr(self.backend, "co_evaluate_table"):
       raise ValueError(f"backend {self.backend.name!r} has no "
                        "co_evaluate_table; pass vectorized=False")
+    n_pairs_est = len(arch_accs) * n_hw_per_type * len(self.space.pe_types)
+    if (use_joint and vectorized == "auto"
+        and n_pairs_est >= STREAM_AUTO_MIN_ROWS):
+      res = stream_co_explore(self.backend, self.space, arch_accs,
+                              n_hw_per_type=n_hw_per_type, seed=seed,
+                              image_size=image_size, method=method,
+                              reducers={"frame": CollectAccumulator()},
+                              chunk_size=chunk_size, workers=workers)
+      return self._collected_frame(res)
     archs = [arch for arch, _ in arch_accs]
     accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
     arch_layers = [arch_to_layers(arch, image_size=image_size)

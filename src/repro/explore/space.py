@@ -18,16 +18,30 @@ Every flavour also has a columnar twin (:meth:`DesignSpace.sample_table` /
 :class:`~repro.core.table.ConfigTable` directly — million-point sweeps
 never instantiate per-point dataclasses.  ``grid`` and ``stratified``
 tables enumerate the exact same design-point sequence as their list twins;
-``random`` tables draw column-major (one RNG call per axis) and therefore
-have their own deterministic sequence.  Constraints apply to tables too:
-plain per-config predicates are evaluated row-by-row (slow, correct),
-while :func:`vector_constraint`-wrapped predicates filter whole columns.
+``random`` tables draw column-major (one independent seeded RNG stream
+per axis) and therefore have their own deterministic sequence.
+Constraints apply to tables too: plain per-config predicates are
+evaluated row-by-row (slow, correct), while
+:func:`vector_constraint`-wrapped predicates filter whole columns.
+
+On top of the one-shot twins sits the *lazy* flavour the streaming sweep
+engine (:mod:`repro.explore.streaming`) consumes:
+:meth:`DesignSpace.iter_type_tables` / :meth:`DesignSpace.iter_tables`
+yield bounded-size ConfigTable chunks whose concatenation is bit-identical
+to the corresponding ``sample_*_table`` call — for any chunk size — so a
+100M-point sweep never materializes its full table.  ``random`` chunks are
+truly constant-memory (the per-axis RNG streams are drawn incrementally;
+legacy ``RandomState`` bounded ints are generated element-sequentially, so
+chunked draws concatenate exactly); ``grid`` chunks are computed from
+index arithmetic; ``stratified`` needs its per-axis permutations up front
+and therefore holds O(n) *index* arrays (still no full value table).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -253,62 +267,164 @@ class DesignSpace:
                                method=method)
         for i, t in enumerate(self.pe_types)])
 
+  def _empty_table(self, pe_type: str) -> ConfigTable:
+    return self._make_table(
+        pe_type, {a.name: np.asarray(a.values)[:0] for a in self.axes})
+
+  def _axis_rngs(self, seed: int) -> List[np.random.RandomState]:
+    """One independent RandomState per axis, derived from (seed, axis
+    index).  Per-axis streams are the determinism contract that makes
+    chunked random sampling bit-identical to one-shot sampling: legacy
+    RandomState bounded ints are drawn element-sequentially, so the i-th
+    value of axis ``a`` is the same for every draw batching."""
+    return [np.random.RandomState(
+        np.asarray([seed % (2 ** 32), 0x9E3779B9 ^ ai], np.uint32))
+            for ai in range(len(self.axes))]
+
   def _sample_random_table(self, pe_type: str, n: int, seed: int
                            ) -> ConfigTable:
-    rng = np.random.RandomState(seed)
+    parts = list(self._iter_random_table(pe_type, n, seed,
+                                         chunk_size=max(n, 1024)))
+    return ConfigTable.concat(parts) if parts else self._empty_table(pe_type)
+
+  def _iter_random_table(self, pe_type: str, n: int, seed: int,
+                         chunk_size: int) -> Iterator[ConfigTable]:
+    """Candidate stream: fixed per-axis RNG sequences, filtered row-local
+    by constraints, truncated to the first n passing rows.  The kept
+    prefix is independent of ``chunk_size`` by construction."""
     if n <= 0:
-      return self._make_table(
-          pe_type, {a.name: np.asarray(a.values)[:0] for a in self.axes})
-    kept: List[ConfigTable] = []
+      return
+    rngs = self._axis_rngs(seed)
     have = 0
     drawn = 0
     max_draws = max(1000 * n, 1000)
     while have < n:
-      batch = min(max(n - have, 1024), max_draws - drawn)
+      batch = min(chunk_size, max_draws - drawn)
       if batch <= 0:
         raise ValueError(
             f"constraints rejected all but {have}/{n} of {drawn} draws; the "
             f"constrained space is (nearly) empty for {pe_type}")
-      # column-major draws: one rng.choice per axis, in AXIS_ORDER
       cols = {a.name: np.asarray(a.values)[
-          rng.randint(0, len(a.values), size=batch)] for a in self.axes}
+          rng.randint(0, len(a.values), size=batch)]
+          for a, rng in zip(self.axes, rngs)}
       drawn += batch
       cand = self._make_table(pe_type, cols)
       mask = self._table_mask(cand)
-      if mask.all() and not kept:
-        kept, have = [cand], len(cand)
-      else:
-        sub = cand.select(mask)
-        kept.append(sub)
-        have += len(sub)
-    table = kept[0] if len(kept) == 1 else ConfigTable.concat(kept)
-    return table.select(slice(0, n))
+      kept = cand if mask.all() else cand.select(mask)
+      if len(kept) > n - have:
+        kept = kept.select(slice(0, n - have))
+      have += len(kept)
+      if len(kept):
+        yield kept
+
+  # -- lazy chunked sampling (the streaming engine's input side) -------------
+
+  def iter_type_tables(self, pe_type: str, n: int, seed: int = 0,
+                       method: str = "random", chunk_size: int = 65536
+                       ) -> Iterator[ConfigTable]:
+    """Lazy twin of :meth:`sample_type_table`: yields ConfigTable chunks
+    of <= chunk_size rows whose concatenation is bit-identical to the
+    one-shot table, for any chunk size — the full table is never
+    materialized (``stratified`` holds O(n) per-axis index arrays; see
+    the module docstring)."""
+    if pe_type not in self.pe_types:
+      raise ValueError(f"{pe_type!r} not in this space's {self.pe_types}")
+    if chunk_size <= 0:
+      raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    if method == "random":
+      return self._iter_random_table(pe_type, n, seed, chunk_size)
+    if method == "grid":
+      return self._iter_grid_table(pe_type, n, chunk_size)
+    if method == "stratified":
+      return self._iter_stratified_table(pe_type, n, seed, chunk_size)
+    raise ValueError(f"unknown sampling method {method!r}; "
+                     "one of ('random', 'grid', 'stratified')")
+
+  def iter_tables(self, n_per_type: int, seed: int = 0,
+                  method: str = "random", chunk_size: int = 65536
+                  ) -> Iterator[ConfigTable]:
+    """Lazy twin of :meth:`sample_table` (same per-type seed offsets);
+    chunks arrive per PE type, in type order."""
+    for i, t in enumerate(self.pe_types):
+      yield from self.iter_type_tables(t, n_per_type, seed=seed + 100 * i,
+                                       method=method, chunk_size=chunk_size)
+
+  def _grid_flat_indices(self, n: int, total: int, lo: int, hi: int,
+                         prev_last: int) -> np.ndarray:
+    """Flat grid indices for linspace positions [lo, hi), deduplicated
+    against truncation collisions exactly like the one-shot
+    ``np.unique(np.linspace(...))`` (values are monotone, so global
+    unique == drop-adjacent-equal with ``prev_last`` carried across
+    chunk boundaries)."""
+    if n >= total:
+      return np.arange(lo, hi, dtype=np.int64)
+    pos = np.arange(lo, hi, dtype=np.int64)
+    if n == 1:
+      flat = np.zeros(pos.shape, np.int64)
+    else:
+      # mirror np.linspace(0, total-1, n): arange * step, endpoint pinned
+      flat = (pos * ((total - 1) / (n - 1))).astype(np.int64)
+      flat[pos == n - 1] = total - 1
+    keep = np.empty(flat.shape, np.bool_)
+    if flat.size:
+      keep[0] = flat[0] != prev_last
+      keep[1:] = flat[1:] != flat[:-1]
+    return flat[keep]
+
+  def _iter_grid_table(self, pe_type: str, n: int, chunk_size: int
+                       ) -> Iterator[ConfigTable]:
+    sizes = [len(a.values) for a in self.axes]
+    total = math.prod(sizes)
+    n_pos = total if n >= total else max(n, 0)
+    prev_last = -1
+    for lo in range(0, n_pos, chunk_size):
+      flat = self._grid_flat_indices(n, total, lo,
+                                     min(lo + chunk_size, n_pos), prev_last)
+      if not flat.size:
+        continue
+      prev_last = int(flat[-1])
+      idx = flat.copy()
+      cols: Dict[str, np.ndarray] = {}
+      for a, size in zip(reversed(self.axes), reversed(sizes)):
+        cols[a.name] = np.asarray(a.values)[idx % size]
+        idx //= size
+      table = self._make_table(pe_type, cols)
+      table = table.select(self._table_mask(table))
+      if len(table):
+        yield table
+
+  def _iter_stratified_table(self, pe_type: str, n: int, seed: int,
+                             chunk_size: int) -> Iterator[ConfigTable]:
+    rng = np.random.RandomState(seed)
+    # per-axis *index* arrays only (uint16: axis cardinalities are tiny) —
+    # values gather per chunk, so the retained state is ~2 bytes/row/axis,
+    # not the full float64/int64 value table.  values[bins][perm] ==
+    # values[bins[perm]], keeping the one-shot RNG consumption + sequence.
+    idx_cols: Dict[str, np.ndarray] = {}
+    for a in self.axes:  # AXIS_ORDER: fixed RNG consumption order
+      bins = (np.arange(n) * len(a.values)) // n
+      idx_cols[a.name] = bins[rng.permutation(n)].astype(np.uint16)
+    for lo in range(0, n, chunk_size):
+      sl = slice(lo, lo + chunk_size)
+      table = self._make_table(
+          pe_type, {a.name: np.asarray(a.values)[idx_cols[a.name][sl]]
+                    for a in self.axes})
+      table = table.select(self._table_mask(table))
+      if len(table):
+        yield table
 
   def _sample_grid_table(self, pe_type: str, n: int) -> ConfigTable:
     """Same evenly-strided flat indices (and therefore the exact same
-    design-point sequence) as :meth:`_sample_grid`, unraveled columnwise."""
-    sizes = [len(a.values) for a in self.axes]
-    total = math.prod(sizes)
-    if n >= total:
-      flat = np.arange(total, dtype=np.int64)
-    else:
-      flat = np.unique(np.linspace(0, total - 1, n).astype(np.int64))
-    idx = flat.copy()
-    cols: Dict[str, np.ndarray] = {}
-    for a, size in zip(reversed(self.axes), reversed(sizes)):
-      cols[a.name] = np.asarray(a.values)[idx % size]
-      idx //= size
-    table = self._make_table(pe_type, cols)
-    return table.select(self._table_mask(table))
+    design-point sequence) as :meth:`_sample_grid`, unraveled columnwise
+    (single-chunk drain of :meth:`_iter_grid_table`)."""
+    parts = list(self._iter_grid_table(pe_type, n, chunk_size=max(n, 1)))
+    return ConfigTable.concat(parts) if parts else self._empty_table(pe_type)
 
   def _sample_stratified_table(self, pe_type: str, n: int, seed: int
                                ) -> ConfigTable:
     """Identical column construction + RNG consumption to
-    :meth:`_sample_stratified`, so both paths yield the same sequence."""
-    rng = np.random.RandomState(seed)
-    cols: Dict[str, np.ndarray] = {}
-    for a in self.axes:  # AXIS_ORDER: fixed RNG consumption order
-      bins = (np.arange(n) * len(a.values)) // n
-      cols[a.name] = np.asarray(a.values)[bins][rng.permutation(n)]
-    table = self._make_table(pe_type, cols)
-    return table.select(self._table_mask(table))
+    :meth:`_sample_stratified`, so both paths yield the same sequence
+    (single-chunk drain of :meth:`_iter_stratified_table`)."""
+    parts = list(self._iter_stratified_table(pe_type, n, seed,
+                                             chunk_size=max(n, 1)))
+    return ConfigTable.concat(parts) if parts else self._empty_table(pe_type)

@@ -1,0 +1,462 @@
+"""Streaming sweep engine: constant-memory, parallel exploration with
+online Pareto / top-k / stats reduction.
+
+QUIDAM's pre-characterized models make evaluating a design point cheap
+(Sec. 4.1), so the binding constraint on sweep size becomes *memory*: the
+one-shot paths materialize the full ConfigTable/JointTable plus a full
+ResultFrame of every evaluated point, even though the paper only ever
+consumes fronts, top-k lists, and distribution stats.  This module fuses
+sampling -> evaluation -> reduction into a bounded-memory pipeline:
+
+  chunks      lazy sampling (``DesignSpace.iter_tables``) or lazy
+              JointTable block slices (``JointTable.block_slices``) —
+              the full sweep never exists as one array
+  evaluation  each chunk goes through the backend's ``evaluate_table`` /
+              ``co_evaluate_table`` exactly as the one-shot path would,
+              optionally on a thread pool (the numpy formulas release
+              the GIL; the jax ``jit=True`` path keeps one submitting
+              thread — each chunk already spans all devices via
+              shard_map)
+  reduction   online accumulators fold ``(chunk frame, global row ids)``
+              blocks and keep only the survivors
+
+Every accumulator is **chunk-order invariant** and emits survivors in
+global row order, so streaming results are bit-identical (numpy path) to
+the one-shot frame's ``pareto``/``top_k`` on the same sweep — for any
+chunk size, any partition, any fold order (enforced by
+``tests/test_streaming.py`` property tests).
+
+  ParetoAccumulator     block-decomposed front merge: per-chunk
+                        ``pareto_mask``, then front-vs-front elimination
+                        (every dominated point is dominated by a front
+                        point, so merging fronts is exact)
+  TopKAccumulator       argpartition-based k-best under one column, ties
+                        broken by global row id (== the one-shot stable
+                        sort)
+  StatsAccumulator      streaming count/mean/std/min/max (Chan's
+                        parallel-Welford merge)
+  HistogramAccumulator  fixed-range bin counts + approximate quantiles
+  CollectAccumulator    keeps everything (the ``vectorized="auto"``
+                        above-threshold path: parallel chunk evaluation,
+                        full frame out)
+
+Entry points: ``ExplorationSession.explore(..., stream=True,
+reducers=...)`` / ``co_explore(..., stream=True)``, or the
+``stream_explore`` / ``stream_co_explore`` drivers below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from typing import (Callable, Dict, Iterable, Iterator, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.explore.frame import (_MAXIMIZE_COLUMNS, ResultFrame, pareto_mask,
+                                 stable_topk_indices)
+from repro.explore.space import DesignSpace
+
+# explore/co_explore(vectorized="auto") switch to the parallel streaming
+# engine (CollectAccumulator: identical full frame out) at this many rows
+STREAM_AUTO_MIN_ROWS = 1_000_000
+
+# a (frame, global row ids) producer — the engine's unit of work
+Task = Callable[[], Tuple[ResultFrame, np.ndarray]]
+
+
+def default_workers(backend=None) -> int:
+  """Thread-pool width: one per core up to 8 for the numpy formulas
+  (they release the GIL); 1 for a ``jit=True`` backend, whose chunks
+  already span every visible device via shard_map."""
+  if backend is not None and getattr(backend, "jit", False):
+    return 1
+  return max(1, min(8, os.cpu_count() or 1))
+
+
+def _empty_frame() -> ResultFrame:
+  z = np.zeros(0)
+  return ResultFrame(z, z, z, np.zeros(0, dtype="<U1"))
+
+
+# ---------------------------------------------------------------------------
+# reducers
+# ---------------------------------------------------------------------------
+
+class Reducer:
+  """Online reduction over evaluated chunks.
+
+  ``fold(frame, indices)`` consumes one chunk (``indices`` are the
+  chunk's global row ids in the equivalent one-shot frame);
+  ``result()`` emits the reduction.  Implementations must be
+  chunk-order invariant: folding any partition of the sweep in any
+  order yields the same result.
+  """
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    raise NotImplementedError
+
+  def result(self):
+    raise NotImplementedError
+
+
+class ParetoAccumulator(Reducer):
+  """Online non-dominated front over the given columns.
+
+  Per chunk: local ``pareto_mask``, then a front-vs-front merge with the
+  running front (exact — any point dominated by a non-front point is
+  also dominated by a front point, so eliminating within the union of
+  fronts loses nothing).  ``result()`` is a survivors-only ResultFrame
+  in global row order: bit-identical rows to
+  ``frame.select(frame.pareto(cols))`` on the one-shot path.
+  """
+
+  def __init__(self, cols: Sequence[str] = ("perf_per_area", "energy_mj"),
+               maximize: Optional[Sequence[str]] = None):
+    self.cols = tuple(cols)
+    self._mx = _MAXIMIZE_COLUMNS if maximize is None else frozenset(maximize)
+    self._obj: Optional[np.ndarray] = None
+    self._idx = np.zeros(0, np.int64)
+    self._frame: Optional[ResultFrame] = None
+
+  def _objectives(self, frame: ResultFrame) -> np.ndarray:
+    return np.stack([-frame.column(c) if c in self._mx else frame.column(c)
+                     for c in self.cols], axis=1).astype(np.float64)
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    if not len(frame):
+      return
+    obj = self._objectives(frame)
+    keep = np.flatnonzero(pareto_mask(obj))
+    cand_obj = obj[keep]
+    cand_idx = np.asarray(indices, np.int64)[keep]
+    cand_frame = frame.select(keep)
+    if self._frame is not None:
+      cand_obj = np.concatenate([self._obj, cand_obj])
+      cand_idx = np.concatenate([self._idx, cand_idx])
+      cand_frame = ResultFrame.concat([self._frame, cand_frame])
+    sel = np.flatnonzero(pareto_mask(cand_obj))
+    self._obj = cand_obj[sel]
+    self._idx = cand_idx[sel]
+    self._frame = cand_frame.select(sel)
+
+  @property
+  def indices(self) -> np.ndarray:
+    """Global row ids of the current front, ascending."""
+    return np.sort(self._idx)
+
+  def result(self) -> ResultFrame:
+    if self._frame is None:
+      return _empty_frame()
+    return self._frame.select(np.argsort(self._idx, kind="stable"))
+
+
+class TopKAccumulator(Reducer):
+  """Online k-best rows under one column (argpartition-based, ties broken
+  by global row id).  ``result()`` is a best-first ResultFrame,
+  bit-identical to the one-shot ``frame.top_k(k, by)``."""
+
+  def __init__(self, k: int, by: str = "perf_per_area",
+               maximize: Optional[bool] = None):
+    if k <= 0:
+      raise ValueError(f"k must be positive, got {k}")
+    self.k = int(k)
+    self.by = by
+    self.maximize = by in _MAXIMIZE_COLUMNS if maximize is None else maximize
+    self._key = np.zeros(0, np.float64)
+    self._idx = np.zeros(0, np.int64)
+    self._frame: Optional[ResultFrame] = None
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    if not len(frame):
+      return
+    vals = np.asarray(frame.column(self.by), np.float64)
+    key = -vals if self.maximize else vals
+    idx = np.asarray(indices, np.int64)
+    loc = stable_topk_indices(key, self.k, tie=idx)
+    cand_key = np.concatenate([self._key, key[loc]])
+    cand_idx = np.concatenate([self._idx, idx[loc]])
+    sub = frame.select(loc)
+    cand_frame = sub if self._frame is None \
+        else ResultFrame.concat([self._frame, sub])
+    sel = stable_topk_indices(cand_key, self.k, tie=cand_idx)
+    self._key = cand_key[sel]
+    self._idx = cand_idx[sel]
+    self._frame = cand_frame.select(sel)
+
+  @property
+  def indices(self) -> np.ndarray:
+    """Global row ids of the current k-best, best-first."""
+    return self._idx.copy()
+
+  def result(self) -> ResultFrame:
+    # state is already (key, global id)-ordered best-first
+    return self._frame if self._frame is not None else _empty_frame()
+
+
+class StatsAccumulator(Reducer):
+  """Streaming count/mean/std/min/max of one column (Chan's parallel
+  Welford merge — exact min/max/count, float-associativity-level mean and
+  std).  Quantiles need the data: see HistogramAccumulator."""
+
+  def __init__(self, col: str):
+    self.col = col
+    self.n = 0
+    self._mean = 0.0
+    self._m2 = 0.0
+    self._min = np.inf
+    self._max = -np.inf
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    v = np.asarray(frame.column(self.col), np.float64)
+    if not v.size:
+      return
+    mean_b = float(v.mean())
+    m2_b = float(((v - mean_b) ** 2).sum())
+    delta = mean_b - self._mean
+    total = self.n + v.size
+    self._m2 += m2_b + delta * delta * self.n * v.size / total
+    self._mean += delta * v.size / total
+    self.n = total
+    self._min = min(self._min, float(v.min()))
+    self._max = max(self._max, float(v.max()))
+
+  def result(self) -> Dict[str, float]:
+    if not self.n:
+      return {k: float("nan")
+              for k in ("count", "mean", "std", "min", "max")}
+    return {"count": float(self.n), "mean": self._mean,
+            "std": float(np.sqrt(self._m2 / self.n)),
+            "min": self._min, "max": self._max}
+
+
+class HistogramAccumulator(Reducer):
+  """Streaming fixed-range histogram of one column.
+
+  The bin range must be declared up front (streaming cannot rescale);
+  values outside ``(lo, hi)`` are clipped into the edge bins.
+  ``result()`` returns ``{"counts", "edges"}``; :meth:`quantile` linearly
+  interpolates within bins (approximate — error bounded by bin width).
+  """
+
+  def __init__(self, col: str, lo: float, hi: float, bins: int = 64):
+    if not hi > lo:
+      raise ValueError(f"need hi > lo, got ({lo}, {hi})")
+    if bins <= 0:
+      raise ValueError(f"bins must be positive, got {bins}")
+    self.col = col
+    self.edges = np.linspace(float(lo), float(hi), int(bins) + 1)
+    self.counts = np.zeros(int(bins), np.int64)
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    v = np.asarray(frame.column(self.col), np.float64)
+    if not v.size:
+      return
+    v = np.clip(v, self.edges[0], self.edges[-1])
+    self.counts += np.histogram(v, bins=self.edges)[0]
+
+  def quantile(self, q: float) -> float:
+    """Approximate q-quantile from the bin counts (linear within bins)."""
+    total = int(self.counts.sum())
+    if not total:
+      return float("nan")
+    target = np.clip(q, 0.0, 1.0) * total
+    cum = np.cumsum(self.counts)
+    b = int(np.searchsorted(cum, target, side="left"))
+    b = min(b, len(self.counts) - 1)
+    below = cum[b] - self.counts[b]
+    frac = (target - below) / max(self.counts[b], 1)
+    return float(self.edges[b]
+                 + np.clip(frac, 0.0, 1.0) * (self.edges[b + 1]
+                                              - self.edges[b]))
+
+  def result(self) -> Dict[str, np.ndarray]:
+    return {"counts": self.counts.copy(), "edges": self.edges.copy()}
+
+
+class CollectAccumulator(Reducer):
+  """Keeps every chunk and reassembles the full frame in global row
+  order — NOT constant-memory.  This is how ``vectorized="auto"`` runs
+  big sweeps through the parallel engine while preserving the one-shot
+  return type bit-exactly."""
+
+  def __init__(self):
+    self._frames = []
+    self._idx = []
+
+  def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
+    if not len(frame):
+      return
+    self._frames.append(frame)
+    self._idx.append(np.asarray(indices, np.int64))
+
+  def result(self) -> ResultFrame:
+    if not self._frames:
+      return _empty_frame()
+    big = self._frames[0] if len(self._frames) == 1 \
+        else ResultFrame.concat(self._frames)
+    idx = np.concatenate(self._idx)
+    return big.select(np.argsort(idx, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamResult:
+  """Outcome of a streaming sweep: one entry per reducer (by name) plus
+  run stats.  ``res["pareto"]`` etc. index into ``results``."""
+  results: Dict[str, object]
+  n_rows: int
+  seconds: float
+  meta: Dict[str, float]
+
+  def __getitem__(self, name: str):
+    return self.results[name]
+
+
+def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
+               workers: int = 1) -> StreamResult:
+  """Drain ``tasks`` (each producing one evaluated chunk), folding every
+  reducer as chunks complete.
+
+  ``workers > 1`` evaluates chunks on a thread pool with a bounded
+  in-flight window (2x workers), so peak memory stays O(window x chunk);
+  folds happen on the submitting thread only.  Completion order is
+  nondeterministic — reducers are chunk-order invariant, so results are
+  not.
+  """
+  workers = max(1, int(workers))
+  t0 = time.perf_counter()
+  n_rows = 0
+  n_chunks = 0
+
+  def fold(frame: ResultFrame, indices: np.ndarray) -> None:
+    nonlocal n_rows, n_chunks
+    n_rows += len(frame)
+    n_chunks += 1
+    for r in reducers.values():
+      r.fold(frame, indices)
+
+  if workers == 1:
+    for task in tasks:
+      fold(*task())
+  else:
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+      pending = set()
+      for task in tasks:
+        pending.add(pool.submit(task))
+        if len(pending) >= 2 * workers:
+          done, pending = wait(pending, return_when=FIRST_COMPLETED)
+          for fut in done:
+            fold(*fut.result())
+      while pending:
+        done, pending = wait(pending, return_when=FIRST_COMPLETED)
+        for fut in done:
+          fold(*fut.result())
+  seconds = time.perf_counter() - t0
+  return StreamResult(
+      results={name: r.result() for name, r in reducers.items()},
+      n_rows=n_rows, seconds=seconds,
+      meta={"seconds": seconds, "workers": float(workers),
+            "n_chunks": float(n_chunks),
+            "rows_per_sec": n_rows / max(seconds, 1e-12)})
+
+
+# ---------------------------------------------------------------------------
+# drivers: plain DSE + joint co-exploration
+# ---------------------------------------------------------------------------
+
+def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
+                   n_per_type: int = 200, seed: int = 17,
+                   method: str = "random",
+                   reducers: Optional[Dict[str, Reducer]] = None,
+                   chunk_size: int = 65536,
+                   workers: Optional[int] = None) -> StreamResult:
+  """Sample -> evaluate -> reduce a plain HW sweep in bounded memory.
+
+  Chunks come from ``space.iter_tables`` (bit-identical concatenation to
+  ``sample_table``), evaluate through ``backend.evaluate_table``, and
+  fold into ``reducers`` (default: one ParetoAccumulator on the paper's
+  (perf_per_area, energy) axes).  Global row ids follow the one-shot
+  sample order, so survivors match the one-shot frame row for row.
+  """
+  if not hasattr(backend, "evaluate_table"):
+    raise ValueError(f"backend {backend.name!r} has no evaluate_table; "
+                     "streaming requires the columnar path")
+  if reducers is None:
+    reducers = {"pareto": ParetoAccumulator()}
+
+  def make_task(chunk, idx) -> Task:
+    return lambda: (backend.evaluate_table(chunk, layers, network), idx)
+
+  def tasks() -> Iterator[Task]:
+    offset = 0
+    for chunk in space.iter_tables(n_per_type, seed=seed, method=method,
+                                   chunk_size=chunk_size):
+      idx = np.arange(offset, offset + len(chunk), dtype=np.int64)
+      offset += len(chunk)
+      yield make_task(chunk, idx)
+
+  return run_stream(tasks(), reducers,
+                    workers=default_workers(backend) if workers is None
+                    else workers)
+
+
+def stream_co_explore(backend, space: DesignSpace, arch_accs,
+                      n_hw_per_type: int = 20, seed: int = 3,
+                      image_size: int = 32, method: str = "random",
+                      reducers: Optional[Dict[str, Reducer]] = None,
+                      chunk_size: int = 65536,
+                      workers: Optional[int] = None) -> StreamResult:
+  """Joint HW x NN co-exploration in bounded memory: the arch x HW cross
+  product is visited as ``JointTable.block_slices`` blocks (HW sampled
+  once per PE type — the small input side; the 100M-pair product never
+  materializes), each block evaluated via ``backend.co_evaluate_table``
+  on an arch-sliced LayerStack.  Chunk frames carry the same ``top1`` /
+  ``arch_id`` / ``arch_lookup`` columns as the one-shot joint frame, and
+  global row ids replicate its (pe_type, arch, hw) order exactly.
+  Default reducers: a ParetoAccumulator on the paper's 3-objective
+  (top1_err, energy_mj, area_mm2) joint front.
+  """
+  from repro.core.dataflow import LayerStack  # deferred: keep header lean
+  from repro.core.supernet import arch_to_layers  # deferred: pulls jax
+  if not hasattr(backend, "co_evaluate_table"):
+    raise ValueError(f"backend {backend.name!r} has no co_evaluate_table; "
+                     "streaming requires the joint columnar path")
+  if reducers is None:
+    reducers = {"pareto": ParetoAccumulator(("top1_err", "energy_mj",
+                                             "area_mm2"))}
+  archs = tuple(arch for arch, _ in arch_accs)
+  accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
+  stack = LayerStack.from_layer_lists(
+      [arch_to_layers(a, image_size=image_size) for a in archs])
+
+  def make_task(hw_sub, sub_stack, a_lo, idx) -> Task:
+    def run():
+      f = backend.co_evaluate_table(hw_sub, sub_stack, network="coexplore")
+      f.extra["arch_id"] = f.extra["arch_id"] + a_lo
+      f.extra["top1"] = accs[f.extra["arch_id"]]
+      f.arch_lookup = archs
+      return f, idx
+    return run
+
+  def tasks() -> Iterator[Task]:
+    offset = 0
+    for ti, pe_type in enumerate(space.pe_types):
+      hw = space.sample_type_table(pe_type, n_hw_per_type,
+                                   seed=seed + 17 * ti, method=method)
+      joint = hw.cross(stack.n_archs)
+      for a_sl, h_sl in joint.block_slices(chunk_size):
+        idx = offset + joint.block_indices(a_sl, h_sl)
+        yield make_task(hw.select(h_sl),
+                        stack.slice_archs(a_sl.start, a_sl.stop),
+                        a_sl.start, idx)
+      offset += len(joint)
+
+  return run_stream(tasks(), reducers,
+                    workers=default_workers(backend) if workers is None
+                    else workers)
