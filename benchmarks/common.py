@@ -27,10 +27,45 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
   print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def bench_provenance() -> Dict[str, object]:
+  """Reproducibility stamp shared by every BENCH_*.json record: commit,
+  UTC timestamp, library versions, core count, and the jax device kind
+  the numbers were measured on."""
+  import datetime
+  import subprocess
+
+  import numpy as np
+  try:
+    commit = subprocess.run(
+        ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+        text=True, timeout=10,
+        cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+  except Exception:  # noqa: BLE001 - provenance must never fail a bench
+    commit = ""
+  prov: Dict[str, object] = {
+      "git_commit": commit or "unknown",
+      "timestamp_utc": datetime.datetime.now(datetime.timezone.utc)
+      .strftime("%Y-%m-%dT%H:%M:%SZ"),
+      "numpy_version": np.__version__,
+      "cpu_count": int(os.cpu_count() or 1),
+  }
+  try:
+    import jax
+    prov["jax_version"] = jax.__version__
+    prov["jax_device_kind"] = jax.devices()[0].device_kind
+  except Exception:  # noqa: BLE001 - jax is optional for numpy-only runs
+    prov["jax_version"] = "unavailable"
+    prov["jax_device_kind"] = "none"
+  return prov
+
+
 def write_bench_json(name: str, record: Dict) -> str:
-  """Write ``results/BENCH_<name>.json`` (pretty, stable key order)."""
+  """Write ``results/BENCH_<name>.json`` (pretty, stable key order),
+  stamped with :func:`bench_provenance`."""
   os.makedirs(JSON_DIR, exist_ok=True)
   path = os.path.join(JSON_DIR, f"BENCH_{name}.json")
+  record = dict(record)
+  record.setdefault("provenance", bench_provenance())
   with open(path, "w") as f:
     json.dump(record, f, indent=2, sort_keys=True)
     f.write("\n")

@@ -288,11 +288,18 @@ def streaming_perf() -> None:
   10k HW configs) evaluated in constant memory through the streaming
   engine — online Pareto/top-k reducers keep only survivors, peak RSS
   stays bounded (one-shot materialization would need the full 10M-row
-  JointTable + ResultFrame) — plus parallel-vs-serial chunk throughput,
-  streaming <-> one-shot bit-identity on a smaller sweep, and the
-  block-decomposed N-D pareto_mask kernel time.  Records
-  results/BENCH_streaming.json.  Set STREAMING_BENCH_SCALE=smoke (CI) to
-  shrink every phase while still exercising the parallel path."""
+  JointTable + ResultFrame) — plus the device-resident fused pipeline
+  (exact x64 ``jax.jit`` evaluation + on-device reduction, O(survivors)
+  device->host transfer, bit-identical survivors), parallel-vs-serial
+  numpy chunk throughput, streaming <-> one-shot bit-identity on a
+  smaller sweep, and the block-decomposed N-D pareto_mask kernel time.
+  Records results/BENCH_streaming.json.  Set STREAMING_BENCH_SCALE=smoke
+  (CI) to shrink every phase while still exercising both paths.
+
+  Comparability note: the phase-1/1b stream rates are single-shot runs of
+  the full sweep (cold pages, Pareto+top-k reducers), while the phase-2
+  serial/parallel rates are best-of-3 on a Pareto-only sub-sweep — the
+  two pairs are each internally comparable, but not with one another."""
   import os
   import resource
 
@@ -343,6 +350,39 @@ def streaming_perf() -> None:
   n_pairs = res.n_rows
   front = res["pareto"]
   top = res["top"]
+
+  # phase 1b: the device-resident fused pipeline on the same sweep —
+  # exact x64 jit evaluation fused with on-device Pareto/top-k reduction;
+  # survivors must be bit-identical to the numpy streaming run above
+  dev_session = ExplorationSession(
+      VectorOracleBackend(chunk_size=chunk_size, jit=True), space)
+  dev_reducers = {"pareto": ParetoAccumulator(cols),
+                  "top": TopKAccumulator(100, by="energy_mj")}
+  t0 = time.perf_counter()
+  dres = dev_session.co_explore(arch_accs, n_hw_per_type=n_hw_per_type,
+                                seed=3, image_size=16, stream=True,
+                                reducers=dev_reducers,
+                                chunk_size=chunk_size)
+  device_s = time.perf_counter() - t0
+  metric_cols = ("latency_s", "power_mw", "area_mm2")
+  dev_identical = all(
+      np.array_equal(getattr(dres["pareto"], c), getattr(front, c))
+      and np.array_equal(getattr(dres["top"], c), getattr(top, c))
+      for c in metric_cols)
+  transfer_rows = int(dres.meta["rows_transferred"])
+
+  # device parity on a one-shot sub-block: exact x64 means identically 0
+  sub_hw = space.sample_type_table(space.pe_types[0],
+                                   min(n_hw_per_type, 200), seed=3)
+  from repro.core.dataflow import LayerStack
+  from repro.core.supernet import arch_to_layers
+  par_stack = LayerStack.from_layer_lists(
+      [arch_to_layers(a, image_size=16) for a in archs[:8]])
+  f_np = VectorOracleBackend().co_evaluate_table(sub_hw, par_stack)
+  f_dev = VectorOracleBackend(chunk_size=chunk_size,
+                              jit=True).co_evaluate_table(sub_hw, par_stack)
+  parity = max(float(np.max(np.abs(getattr(f_dev, c) / getattr(f_np, c)
+                                   - 1.0))) for c in metric_cols)
 
   # phase 2: parallel vs serial chunk loop on a sub-sweep (best of 3
   # interleaved runs per mode — this box's wall clock is noisy; speedup
@@ -401,6 +441,14 @@ def streaming_perf() -> None:
       "cpu_count": int(os.cpu_count() or 1),
       "stream_seconds": round(stream_s, 4),
       "stream_pairs_per_sec": round(n_pairs / stream_s, 1),
+      "device_stream_seconds": round(device_s, 4),
+      "device_stream_pairs_per_sec": round(n_pairs / device_s, 1),
+      "device_speedup_vs_numpy_stream": round(stream_s / device_s, 2),
+      "device_precision": "x64",
+      "device_parity_max_rel_err": parity,
+      "device_survivors_bit_identical": bool(dev_identical),
+      "device_transfer_rows": transfer_rows,
+      "device_transfer_fraction": round(transfer_rows / max(n_pairs, 1), 6),
       "rss_before_mb": round(rss_before, 1),
       "rss_peak_mb": round(rss_peak, 1),
       "pareto_axes": list(cols),
@@ -423,11 +471,20 @@ def streaming_perf() -> None:
                           record)
   emit("streaming_perf", stream_s / max(n_pairs, 1) * 1e6,
        f"pairs={n_pairs};stream_pairs_per_s={n_pairs / stream_s:.0f};"
+       f"device_pairs_per_s={n_pairs / device_s:.0f};"
+       f"device_speedup={stream_s / device_s:.2f}x;"
+       f"device_parity={parity:.1e};"
+       f"device_transfer_frac={transfer_rows / max(n_pairs, 1):.5f};"
        f"rss_peak_mb={rss_peak:.0f};parallel_speedup="
        f"{serial_s / par_s:.2f}x;front={len(front)};top_identical={top_ok};"
        f"front_identical={front_ok};pareto3d_s={nd_s:.3f};json={path}")
   if not (front_ok and top_ok):
     raise AssertionError("streaming survivors diverged from one-shot path")
+  if not dev_identical:
+    raise AssertionError("device fused survivors diverged from numpy "
+                         "streaming path")
+  if parity != 0.0:
+    raise AssertionError(f"x64 device parity broken: {parity}")
 
 
 ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput,

@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; benchmarks that track the
 perf trajectory additionally write ``BENCH_*.json`` records (default
-under ``results/``, see --json-dir) — e.g. ``BENCH_explore.json`` with
-scalar-vs-vector sweep points/sec and the Pareto-front time.
+under ``results/``, see --json-dir), each stamped with provenance
+(git commit, UTC timestamp, numpy/jax versions, cpu count, jax device
+kind — see ``benchmarks.common.bench_provenance``) — e.g.
+``BENCH_explore.json`` with scalar-vs-vector sweep points/sec and the
+Pareto-front time.
 Usage: PYTHONPATH=src python -m benchmarks.run [--suite name]
        [--only substr] [--json-dir DIR]
 """
@@ -12,6 +15,13 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+
+# suites that run streaming_perf's device-resident phase and therefore
+# need the XLA exactness flags set before this process's first jax
+# compilation (see repro.explore.device.ensure_exact_cpu_codegen); the
+# flags pessimize unrelated jax codegen slightly, so suites without a
+# device phase are left untouched to keep their perf records comparable
+_DEVICE_SUITES = ("streaming", "framework", "all")
 
 
 def main() -> None:
@@ -29,6 +39,9 @@ def main() -> None:
                   help="directory for BENCH_*.json perf records "
                        "(default: results/)")
   args = ap.parse_args()
+  if args.suite in _DEVICE_SUITES:
+    from repro.explore.device import ensure_exact_cpu_codegen
+    ensure_exact_cpu_codegen()
   if args.json_dir:
     from benchmarks import common
     common.JSON_DIR = args.json_dir

@@ -615,9 +615,86 @@ class LayerStack:
       h.update(np.ascontiguousarray(getattr(self, name)).tobytes())
     return h.hexdigest()[:16]
 
+  def dedup_slots(self) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Distinct-layer factorization: ``(unique_cols, slot_ids)``.
+
+    Architectures drawn from one search space share most of their layers,
+    so the ``n_archs x max_layers`` slot grid typically references only a
+    few dozen *distinct* layer shapes.  ``unique_cols`` holds one
+    ``(n_distinct, 1)`` float64 column per ConvLayer field (broadcastable
+    against ``(n_hw,)`` HW columns exactly like :meth:`feats_at` rows);
+    ``slot_ids[a, li]`` maps each slot to its distinct row.  The device
+    path simulates each distinct layer once per HW chunk and *gathers*
+    per slot — per-slot accumulation order is unchanged, so results stay
+    bit-identical to the slot-by-slot evaluation (see
+    :func:`simulate_network_stack_dedup`).
+    """
+    feats = np.stack([getattr(self, n).reshape(-1) for n in _STACK_FIELDS],
+                     axis=1)
+    uniq, inv = np.unique(feats, axis=0, return_inverse=True)
+    slot_ids = inv.reshape(self.A.shape).astype(np.int32)
+    cols = {n: uniq[:, i:i + 1].astype(np.float64)
+            for i, n in enumerate(_STACK_FIELDS)}
+    return cols, slot_ids
+
   def __repr__(self) -> str:
     return (f"LayerStack({self.n_archs} archs x <= {self.max_layers} "
             f"layers)")
+
+
+def unique_layer_feats(cols: Dict[str, "np.ndarray"], xp=np
+                       ) -> Dict[str, "np.ndarray"]:
+  """Derived feature columns for :meth:`LayerStack.dedup_slots` rows —
+  the same expressions LayerStack precomputes in ``__post_init__`` (and
+  therefore bit-identical to :meth:`LayerStack.feats_at` values), written
+  against ``xp`` so the device path can trace through them."""
+  a, c, f, k = cols["A"], cols["C"], cols["F"], cols["K"]
+  s, p = cols["S"], cols["P"]
+  out = xp.floor((a + 2.0 * p - k) / xp.maximum(s, 1.0)) + 1.0
+  return {"E": xp.maximum(out, 1.0), "K": k, "C": c, "F": f,
+          "macs": out * out * k * k * c * f,
+          "ifmap_words": a * a * c,
+          "weight_words": k * k * c * f,
+          "of_words": out * out * f}
+
+
+def simulate_network_stack_dedup(table, unique_cols, slot_ids, valid,
+                                 clock_mhz, leakage_mw, xp=np):
+  """Distinct-layer twin of :func:`simulate_network_stack`.
+
+  Evaluates the dataflow/energy formulas once per *distinct* layer
+  (``(n_distinct, n_hw)`` grids) and accumulates per ``(arch, slot)`` by
+  gathering the distinct rows — the hot restructure behind the exact
+  device path: formula work drops from ``n_archs * max_layers`` slot
+  evaluations to ``n_distinct`` (often 10-50x fewer), while the per-slot
+  accumulation order (and thus every latency/energy/utilization bit on
+  the numpy path) is exactly that of :func:`simulate_network_stack`'s
+  masked branch — gathering reorders no additions.
+
+  ``unique_cols``/``slot_ids`` come from :meth:`LayerStack.dedup_slots`;
+  ``valid`` is the stack's validity mask.  Returns
+  ``(latency_s, energy_mj, utilization)`` shaped ``(n_archs, n_hw)``.
+  """
+  c = _cols_of(table)
+  f = unique_layer_feats(unique_cols, xp)
+  st = _simulate_layer_feats(c, f, clock_mhz, xp)
+  e_pj = _layer_energy_feats(c, f, st, clock_mhz, leakage_mw, xp)
+  cyc = st.cycles
+  util_cyc = st.utilization * cyc
+  take = (lambda arr, ids: arr[ids]) if xp is np \
+      else (lambda arr, ids: xp.take(arr, ids, axis=0))
+  total_cycles = 0.0
+  total_energy_pj = 0.0
+  util_weighted = 0.0
+  for li in range(slot_ids.shape[1]):
+    ids = slot_ids[:, li]
+    v = valid[:, li:li + 1]
+    total_cycles = total_cycles + xp.where(v, take(cyc, ids), 0.0)
+    total_energy_pj = total_energy_pj + xp.where(v, take(e_pj, ids), 0.0)
+    util_weighted = util_weighted + xp.where(v, take(util_cyc, ids), 0.0)
+  latency_s = total_cycles / (clock_mhz * 1e6)
+  utilization = util_weighted / xp.maximum(total_cycles, 1e-12)
+  return latency_s, total_energy_pj * 1e-9, utilization  # pJ -> mJ
 
 
 def simulate_network_stack(table, stack: LayerStack, clock_mhz, leakage_mw,

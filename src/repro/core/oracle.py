@@ -32,6 +32,7 @@ import numpy as np
 from repro.core import pe as pe_lib
 from repro.core.dataflow import (AcceleratorConfig, ConvLayer, LayerStats,
                                  simulate_network)
+from repro.core.table import scratch_buf as _scratch_buf
 
 # Characterization-model version: bump whenever oracle outputs change for
 # the same config (invalidates on-disk polynomial-model caches fitted
@@ -297,36 +298,78 @@ def characterize_layer_latency(cfg: AcceleratorConfig, layer: ConvLayer
 # (jax traces treat it as an input), because the mixer needs uint64.
 
 
-def _mix64_batch(z: np.ndarray) -> np.ndarray:
+def _mix64_batch(z: np.ndarray, out: Optional[np.ndarray] = None
+                 ) -> np.ndarray:
   """splitmix64 finalizer across a uint64 column (wraps mod 2^64)."""
-  z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-  z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-  return z ^ (z >> np.uint64(31))
+  z = np.multiply(z ^ (z >> np.uint64(30)), np.uint64(0xBF58476D1CE4E5B9),
+                  out=out)
+  z = np.multiply(z ^ (z >> np.uint64(27)), np.uint64(0x94D049BB133111EB),
+                  out=out)
+  return np.bitwise_xor(z, z >> np.uint64(31), out=out)
 
 
-def _variation_batch(table, salt: str, pct: float) -> np.ndarray:
+def _variation_batch(table, salt: str, pct: float,
+                     scratch: Optional[Dict] = None) -> np.ndarray:
   """Vectorized :func:`_variation`: one multiplier per table row."""
+  n = len(table)
   type64 = np.asarray([_name_const(t) for t in table.pe_type_names],
                       np.uint64)[table.pe_code]
-  h = np.full(len(table), _name_const(salt), np.uint64)
+  h = _scratch_buf(scratch, f"var64_{salt}", n, np.uint64)
+  if h is None:
+    h = np.empty(n, np.uint64)
+  h[...] = _name_const(salt)
   cols = (type64,
           table.pe_rows.astype(np.uint64), table.pe_cols.astype(np.uint64),
           table.sp_if.astype(np.uint64), table.sp_fw.astype(np.uint64),
           table.sp_ps.astype(np.uint64), table.gbuf_kb.astype(np.uint64),
           table.bandwidth_gbps.astype(np.float64).view(np.uint64))
   for v in cols:
-    h = _mix64_batch(h ^ v)
-  u = h.astype(np.float64) / 2**64 * 2.0 - 1.0
-  return 1.0 + pct * u
+    np.bitwise_xor(h, v, out=h)
+    _mix64_batch(h, out=h)
+  u = _scratch_buf(scratch, f"var_{salt}", n, np.float64)
+  if u is None:
+    u = np.empty(n, np.float64)
+  # same IEEE op sequence as the expression form: /2^64, *2, -1, *pct, +1
+  np.true_divide(h, 2.0**64, out=u)
+  np.multiply(u, 2.0, out=u)
+  np.subtract(u, 1.0, out=u)
+  np.multiply(u, pct, out=u)
+  np.add(u, 1.0, out=u)
+  return u
 
 
-def batch_inputs(table) -> Dict[str, np.ndarray]:
+def batch_inputs(table, scratch: Optional[Dict] = None
+                 ) -> Dict[str, np.ndarray]:
   """The array bundle all batch formulas consume: numeric columns +
-  per-row PE constants + the three precomputed variation columns."""
-  cols = table.numeric_columns()
-  cols["var_clk"] = _variation_batch(table, "clk", 0.004)
-  cols["var_area"] = _variation_batch(table, "area", 0.005)
-  cols["var_pwr"] = _variation_batch(table, "pwr", 0.005)
+  per-row PE constants + the three precomputed variation columns + the
+  transcendental terms (log2 / pow) of the area/clock formulas.
+
+  The transcendentals are precomputed with host numpy for the same reason
+  the variation columns are: they are pure functions of the config
+  columns, and libm (numpy) and XLA disagree by 1 ulp on ``log2``/``pow``
+  — precomputing them makes the ``jax.jit`` x64 device path bit-identical
+  to the numpy path by construction (basic arithmetic, ``sqrt``, ``ceil``
+  and floor-division are IEEE-exact in both).
+
+  ``scratch`` (a plain dict owned by the caller, one per worker thread)
+  lets repeated chunked calls reuse the feature temporaries instead of
+  allocating ~20 fresh arrays per chunk; the returned dict then aliases
+  the scratch buffers, so the caller must consume it before the next
+  call with the same scratch.
+  """
+  cols = table.numeric_columns(scratch=scratch)
+  cols["var_clk"] = _variation_batch(table, "clk", 0.004, scratch)
+  cols["var_area"] = _variation_batch(table, "area", 0.005, scratch)
+  cols["var_pwr"] = _variation_batch(table, "pwr", 0.005, scratch)
+  n = len(table)
+  l2pe = _scratch_buf(scratch, "log2_n_pe", n, np.float64)
+  cols["log2_n_pe"] = np.log2(np.maximum(cols["n_pe"], 2.0), out=l2pe)
+  sp = cols["sp_fw"] + cols["sp_if"] + cols["sp_ps"]
+  l2sp = _scratch_buf(scratch, "log2_sp_words", n, np.float64)
+  cols["log2_sp_words"] = np.log2(np.maximum(sp, 2.0, out=sp), out=l2sp)
+  cg = _scratch_buf(scratch, "congestion", n, np.float64)
+  cols["congestion"] = np.multiply(
+      0.30, np.power(cols["n_pe"] / 1024.0, 0.7, out=cg), out=cg)
   return cols
 
 
@@ -348,8 +391,14 @@ def _sram_area_um2_arr(bits, words, xp):
 
 
 def _clock_cols(c, xp):
-  ctrl_ns = 0.028 * xp.log2(xp.maximum(c["n_pe"], 2.0)) \
-      + 0.006 * xp.log2(xp.maximum(c["sp_fw"] + c["sp_if"] + c["sp_ps"], 2.0))
+  # log2 terms come precomputed from batch_inputs when available (host
+  # numpy: keeps the jitted x64 path bit-identical — XLA's log2 is 1 ulp
+  # off libm); bare numeric_columns() dicts compute them inline
+  l2_pe = c["log2_n_pe"] if "log2_n_pe" in c \
+      else xp.log2(xp.maximum(c["n_pe"], 2.0))
+  l2_sp = c["log2_sp_words"] if "log2_sp_words" in c \
+      else xp.log2(xp.maximum(c["sp_fw"] + c["sp_if"] + c["sp_ps"], 2.0))
+  ctrl_ns = 0.028 * l2_pe + 0.006 * l2_sp
   period_ns = (c["critical_path_ns"] + ctrl_ns) * c["var_clk"]
   return 1000.0 / period_ns
 
@@ -371,7 +420,9 @@ def _array_area_cols(c, xp):
   word = (c["act_bits"] + c["weight_bits"] + c["psum_bits"]) / 3.0
   noc = NOC_GATES_PER_PE * (word / 21.0) * c["n_pe"] * pe_lib.GATE_AREA_UM2
   top = ARRAY_CTRL_GATES * pe_lib.GATE_AREA_UM2
-  congestion = 0.30 * (c["n_pe"] / 1024.0) ** 0.7
+  # pow is precomputed on host like the log2 terms (see _clock_cols)
+  congestion = c["congestion"] if "congestion" in c \
+      else 0.30 * (c["n_pe"] / 1024.0) ** 0.7
   route = 1.0 / (1.0 - xp.minimum(congestion, 0.45))
   um2 = (pe_area + noc + top) * route * c["var_area"]
   return um2 * 1e-6
@@ -524,6 +575,20 @@ class BatchCharacterization:
     return int(self.clock_mhz.shape[0])
 
 
+def hw_batch_targets(c, xp=np) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                        np.ndarray]:
+  """(clock_mhz, power_mw, area_mm2, leakage_mw) from an inputs bundle —
+  the shared workload-independent half of :func:`characterize_batch` /
+  :func:`characterize_joint` (and of the fused device programs)."""
+  clock = _clock_cols(c, xp)
+  array_area = _array_area_cols(c, xp)
+  area = array_area + _gbuf_area_cols(c, xp)
+  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
+      + _gbuf_power_cols(c, xp, clock=clock)
+  leak = _leakage_cols(c, xp)
+  return clock, power, area, leak
+
+
 def characterize_batch(table, layers: Sequence[ConvLayer], xp=np,
                        inputs: Optional[Dict] = None
                        ) -> BatchCharacterization:
@@ -532,12 +597,7 @@ def characterize_batch(table, layers: Sequence[ConvLayer], xp=np,
   """
   from repro.core.dataflow import simulate_network_batch
   c = inputs if inputs is not None else batch_inputs(table)
-  clock = _clock_cols(c, xp)
-  array_area = _array_area_cols(c, xp)
-  area = array_area + _gbuf_area_cols(c, xp)
-  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
-      + _gbuf_power_cols(c, xp, clock=clock)
-  leak = _leakage_cols(c, xp)
+  clock, power, area, leak = hw_batch_targets(c, xp)
   latency_s, energy_mj, utilization = simulate_network_batch(
       c, layers, clock, leak, xp=xp)
   return BatchCharacterization(
@@ -596,14 +656,29 @@ def characterize_joint(table, stack, xp=np, inputs: Optional[Dict] = None
   """
   from repro.core.dataflow import simulate_network_stack
   c = inputs if inputs is not None else batch_inputs(table)
-  clock = _clock_cols(c, xp)
-  array_area = _array_area_cols(c, xp)
-  area = array_area + _gbuf_area_cols(c, xp)
-  power = _array_power_cols(c, xp, clock=clock, array_area=array_area) \
-      + _gbuf_power_cols(c, xp, clock=clock)
-  leak = _leakage_cols(c, xp)
+  clock, power, area, leak = hw_batch_targets(c, xp)
   latency_s, energy_mj, utilization = simulate_network_stack(
       c, stack, clock, leak, xp=xp)
+  return JointCharacterization(
+      clock_mhz=clock, area_mm2=area, power_mw=power,
+      latency_s=latency_s, energy_mj=energy_mj, utilization=utilization)
+
+
+def characterize_joint_dedup(table, unique_cols, slot_ids, valid, xp=np,
+                             inputs: Optional[Dict] = None
+                             ) -> JointCharacterization:
+  """Distinct-layer twin of :func:`characterize_joint` — same outputs,
+  bit-identical on the numpy path, with the dataflow formulas evaluated
+  once per distinct layer shape instead of once per (arch, slot) (see
+  :func:`repro.core.dataflow.simulate_network_stack_dedup`).  This is the
+  form the exact ``jax.jit`` device path compiles: stack data enters as
+  arrays, so one executable serves every arch block of a streaming sweep.
+  """
+  from repro.core.dataflow import simulate_network_stack_dedup
+  c = inputs if inputs is not None else batch_inputs(table)
+  clock, power, area, leak = hw_batch_targets(c, xp)
+  latency_s, energy_mj, utilization = simulate_network_stack_dedup(
+      c, unique_cols, slot_ids, valid, clock, leak, xp=xp)
   return JointCharacterization(
       clock_mhz=clock, area_mm2=area, power_mw=power,
       latency_s=latency_s, energy_mj=energy_mj, utilization=utilization)

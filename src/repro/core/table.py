@@ -40,6 +40,23 @@ FLOAT_COLUMNS = ("bandwidth_gbps",)
 COLUMNS = INT_COLUMNS + FLOAT_COLUMNS
 
 
+def scratch_buf(scratch: Optional[Dict], key: str, n: int,
+                dtype) -> Optional[np.ndarray]:
+  """Reusable per-caller buffer: ``scratch[key]`` when shape/dtype still
+  match, else a fresh allocation registered back into ``scratch``.  The
+  shared protocol behind chunked-sweep temporary reuse (consumed here by
+  :meth:`ConfigTable.numeric_columns` and by
+  :func:`repro.core.oracle.batch_inputs`); returns None when ``scratch``
+  is None so callers can fall back to plain allocation."""
+  if scratch is None:
+    return None
+  buf = scratch.get(key)
+  if buf is None or buf.shape != (n,) or buf.dtype != dtype:
+    buf = np.empty(n, dtype)
+    scratch[key] = buf
+  return buf
+
+
 @dataclasses.dataclass(eq=False)
 class ConfigTable:
   """N design points as parallel columns (one row == one AcceleratorConfig).
@@ -88,30 +105,53 @@ class ConfigTable:
     """Per-row PE type names (the ResultFrame ``pe_type`` column)."""
     return np.asarray(self.pe_type_names)[self.pe_code]
 
+  def _pe_const_vocab(self, field: str) -> np.ndarray:
+    """Per-type constant vocabulary for one PEType field."""
+    return np.asarray(
+        [float(getattr(pe_lib.pe_type(t), field)) for t in self.pe_type_names],
+        np.float64)
+
   def pe_const(self, field: str) -> np.ndarray:
     """Per-row PEType constant (e.g. ``act_bits``, ``critical_path_ns``)
     expanded from the type vocabulary by code lookup."""
-    vocab = np.asarray(
-        [float(getattr(pe_lib.pe_type(t), field)) for t in self.pe_type_names],
-        np.float64)
-    return vocab[self.pe_code]
+    return self._pe_const_vocab(field)[self.pe_code]
 
   # per-row PEType constants the batch oracle/dataflow formulas consume
   PE_CONST_FIELDS = ("act_bits", "weight_bits", "psum_bits", "arith_gates",
                      "mac_energy_pj", "critical_path_ns")
 
-  def numeric_columns(self) -> Dict[str, np.ndarray]:
+  def numeric_columns(self, scratch: Optional[Dict[str, np.ndarray]] = None
+                      ) -> Dict[str, np.ndarray]:
     """All-float64 column dict (knobs + ``n_pe`` + per-row PE constants).
 
     This is the array bundle every ``*_batch`` formula consumes; it is a
     plain dict so the optional ``jax.jit`` device path can trace straight
     through it (a traced ConfigTable would drag numpy-only lookups into
     the jaxpr).
+
+    ``scratch`` (a caller-owned dict, one per worker thread) lets chunked
+    sweeps reuse the per-chunk float64 buffers instead of allocating a
+    fresh set per call; the returned dict then aliases the scratch
+    buffers, so consume it before the next call with the same scratch.
     """
-    cols = {name: getattr(self, name).astype(np.float64) for name in COLUMNS}
-    cols["n_pe"] = self.n_pe.astype(np.float64)
+    n = len(self)
+
+    def fill(key: str, src: np.ndarray) -> np.ndarray:
+      b = scratch_buf(scratch, key, n, np.float64)
+      if b is None:
+        return src.astype(np.float64)
+      b[...] = src
+      return b
+
+    cols = {name: fill(name, getattr(self, name)) for name in COLUMNS}
+    cols["n_pe"] = fill("n_pe", self.n_pe)
     for field in self.PE_CONST_FIELDS:
-      cols[field] = self.pe_const(field)
+      vocab = self._pe_const_vocab(field)
+      b = scratch_buf(scratch, field, n, np.float64)
+      if b is None:
+        cols[field] = vocab[self.pe_code]
+      else:
+        cols[field] = np.take(vocab, self.pe_code, out=b)
     return cols
 
   def hw_features(self) -> np.ndarray:

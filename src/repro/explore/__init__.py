@@ -34,6 +34,11 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        results — ``session.explore(stream=True,
                        reducers=...)`` / ``co_explore(stream=True)``
                                                               [streaming]
+  device programs      the ``VectorOracleBackend(jit=True)`` streaming
+                       path: exact x64 evaluation bit-identical to numpy,
+                       fused on-device pareto/top-k/stats reduction with
+                       O(survivors) transfer, async dispatch-ahead
+                       (imported lazily — see note below)        [device]
 
 Quickstart::
 
@@ -65,6 +70,12 @@ from repro.core.table import ConfigTable, JointTable
 from repro.explore.backend import (EvaluationBackend, OracleBackend,
                                    PolynomialBackend, VectorOracleBackend,
                                    gbuf_overheads, gbuf_overheads_table)
+# NOTE: repro.explore.device is intentionally NOT imported here — its
+# import sets process-global XLA exactness flags (no FMA contraction, no
+# algebraic simplifier), which mixed jax workloads may not want.  It
+# loads automatically when a VectorOracleBackend(jit=True) is built or a
+# streaming sweep hits the device path; import it explicitly (before any
+# jax compilation) when you need the flags earlier.
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
                                  pareto_mask, stable_topk_indices,
                                  summary_stats)

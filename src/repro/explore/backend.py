@@ -118,26 +118,105 @@ class OracleBackend:
                        tuple(cfgs), network)
 
 
+class _LRUCache:
+  """Tiny LRU for compiled executables: long-lived sessions sweeping many
+  networks must not accumulate one jitted program per layer tuple.
+  Lock-guarded: streaming pool workers may share one backend."""
+
+  def __init__(self, maxsize: int):
+    import threading
+    from collections import OrderedDict
+    self.maxsize = int(maxsize)
+    self._d: "OrderedDict" = OrderedDict()
+    self._lock = threading.Lock()
+
+  def __len__(self) -> int:
+    return len(self._d)
+
+  def get(self, key):
+    with self._lock:
+      if key not in self._d:
+        return None
+      self._d.move_to_end(key)
+      return self._d[key]
+
+  def put(self, key, value) -> None:
+    with self._lock:
+      self._d[key] = value
+      self._d.move_to_end(key)
+      while len(self._d) > self.maxsize:
+        self._d.popitem(last=False)
+
+
 class VectorOracleBackend:
   """The synthesis stand-in, array-at-a-time over ConfigTables.
 
   Evaluates design points in bounded-memory chunks of ``chunk_size`` rows
   through the vectorized oracle/dataflow formulas.  On the default numpy
-  path results are bit-identical to :class:`OracleBackend`; with
-  ``jit=True`` the per-chunk formula evaluation runs under ``jax.jit``
-  (and, when several devices are visible, ``shard_map`` over the row
-  axis), which is *approximate* — jax defaults to float32 — so it is a
-  throughput option, not a parity option.
+  path results are bit-identical to :class:`OracleBackend`.
+
+  ``jit=True`` runs the per-chunk formulas under ``jax.jit`` as a
+  first-class exact backend: the default ``precision="x64"`` traces with
+  float64 enabled and host-precomputed transcendental columns (see
+  :func:`repro.core.oracle.batch_inputs`), so device results are
+  **bit-identical** to the numpy path; ``precision="float32"`` keeps the
+  old approximate fast mode.  Joint sweeps compile the distinct-layer
+  factorization with the stack as a traced input, so one executable
+  serves every arch block of a streaming sweep.  When several devices
+  are visible, chunk rows shard across them via ``shard_map``.
+
+  The streaming engine additionally uses the ``*_pending`` entry points:
+  chunks dispatch asynchronously (jax futures) and resolve later, and
+  with a :class:`repro.explore.device.DevicePlan` the whole
+  evaluate+reduce pipeline is fused on device so only O(survivors)
+  floats come back per chunk.
   """
   name = "vector-oracle"
   prefers_table = True
 
-  def __init__(self, chunk_size: int = 65536, jit: bool = False):
+  # compiled-program cache bound (stack/layers enter as traced inputs, so
+  # entries are per (path, plan, precision), not per sweep content)
+  JIT_CACHE_SIZE = 8
+
+  def __init__(self, chunk_size: int = 65536, jit: bool = False,
+               precision: str = "x64"):
     if chunk_size <= 0:
       raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    if precision not in ("x64", "float32"):
+      raise ValueError(f"precision must be 'x64' or 'float32', "
+                       f"got {precision!r}")
     self.chunk_size = chunk_size
     self.jit = jit
-    self._jit_cache: Dict[Tuple[ConvLayer, ...], object] = {}
+    self.precision = precision
+    self._jit_cache = _LRUCache(self.JIT_CACHE_SIZE)
+    import threading
+    self._tls = threading.local()
+    if jit and precision == "x64":
+      # must precede this process's first XLA compilation (see device.py)
+      from repro.explore.device import ensure_exact_cpu_codegen
+      ensure_exact_cpu_codegen()
+
+  def _scratch(self) -> Dict:
+    """Per-worker-thread reusable feature-temporary buffers (numpy path
+    only: the jit path hands jax freshly allocated arrays, which may be
+    transferred asynchronously)."""
+    d = getattr(self._tls, "scratch", None)
+    if d is None:
+      d = {}
+      self._tls.scratch = d
+    return d
+
+  def _eval_chunk(self, chunk: ConfigTable, layers: Sequence[ConvLayer]):
+    """numpy chunk evaluation, reusing this worker's scratch buffers."""
+    inputs = oracle.batch_inputs(chunk, scratch=self._scratch())
+    ch = oracle.characterize_batch(None, layers, inputs=inputs)
+    return ch.latency_s, ch.power_mw, ch.area_mm2
+
+  def _co_eval_chunk(self, chunk: ConfigTable, stack: LayerStack):
+    """numpy joint chunk evaluation with scratch reuse."""
+    inputs = oracle.batch_inputs(chunk, scratch=self._scratch())
+    ch = oracle.characterize_joint(None, stack, inputs=inputs)
+    return ch.latency_s, ch.power_mw, ch.area_mm2
 
   def evaluate(self, cfgs: Configs, layers: Sequence[ConvLayer],
                network: str = "net") -> ResultFrame:
@@ -162,8 +241,7 @@ class VectorOracleBackend:
       if self.jit:
         l, p, a = self._eval_chunk_jax(chunk, tuple(layers))
       else:
-        ch = oracle.characterize_batch(chunk, layers)
-        l, p, a = ch.latency_s, ch.power_mw, ch.area_mm2
+        l, p, a = self._eval_chunk(chunk, layers)
       hi = lo + len(chunk)
       lat[lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
       lo = hi
@@ -188,13 +266,13 @@ class VectorOracleBackend:
     pwr = np.empty(n_hw)
     area = np.empty(n_hw)
     hw_chunk = max(1, self.chunk_size // max(n_archs, 1))
+    dedup = stack.dedup_slots() if self.jit else None
     lo = 0
     for chunk in hw.chunks(hw_chunk):
       if self.jit:
-        l, p, a = self._co_eval_chunk_jax(chunk, stack)
+        l, p, a = self._co_eval_chunk_jax(chunk, stack, dedup)
       else:
-        ch = oracle.characterize_joint(chunk, stack)
-        l, p, a = ch.latency_s, ch.power_mw, ch.area_mm2
+        l, p, a = self._co_eval_chunk(chunk, stack)
       hi = lo + len(chunk)
       lat[:, lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
       lo = hi
@@ -205,95 +283,193 @@ class VectorOracleBackend:
         extra={"arch_id": joint.arch_ids()})
 
   # -- optional device path -------------------------------------------------
+  # Joint programs take the sweep content (inputs bundle, dedup'd stack
+  # arrays) as arguments — one LRU entry per (path kind, plan, precision),
+  # jax handles shape specialization.  Plain-sweep programs still bake
+  # the layer tuple into the trace (layer features are scalars there, and
+  # one sweep evaluates one network), so their entries are per layer
+  # tuple and sessions sweeping many networks recompile under LRU
+  # eviction.
+
+  def _x64(self):
+    """Precision context: trace/run with float64 for the exact path."""
+    if self.precision == "x64":
+      from jax.experimental import enable_x64
+      return enable_x64()
+    import contextlib
+    return contextlib.nullcontext()
+
+  def _cached_fn(self, key, build):
+    fn = self._jit_cache.get(key)
+    if fn is None:
+      if self.precision == "x64":
+        from repro.explore.device import warn_if_inexact_codegen
+        warn_if_inexact_codegen()
+      fn = build()
+      self._jit_cache.put(key, fn)
+    return fn
+
+  @staticmethod
+  def _jit(fn):
+    import jax
+    kwargs = {}
+    if jax.default_backend() != "cpu":
+      # chunk input buffers are single-use: let XLA reuse their memory
+      kwargs["donate_argnums"] = (0,)
+    return jax.jit(fn, **kwargs)
+
+  @staticmethod
+  def _shard_rows(fn, joint: bool):
+    """Shard the HW-row axis of a full (lat, pwr, area) program across
+    visible devices (identity for a single device).  Fused programs run
+    unsharded — their reductions are chunk-global; multi-device overlap
+    comes from the dispatch-ahead window instead."""
+    import jax
+    import jax.numpy as jnp
+    devices = jax.devices()
+    if len(devices) <= 1:
+      return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.asarray(devices), ("batch",))
+    out_specs = (P(None, "batch"), P("batch"), P("batch")) if joint \
+        else (P("batch"), P("batch"), P("batch"))
+
+    def rowwise(inputs, *rest):
+      return fn(inputs, *rest)
+
+    def padded(inputs, *rest):
+      n = next(iter(inputs.values())).shape[0]
+      pad = (-n) % len(devices)
+      in_specs = (P("batch"),) + tuple(P() for _ in rest)
+      sharded = shard_map(rowwise, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+      if pad:
+        inputs = {k: jnp.concatenate([jnp.asarray(v),
+                                      jnp.asarray(v[-1:]).repeat(pad, 0)])
+                  for k, v in inputs.items()}
+      l, p, a = sharded(inputs, *rest)
+      if joint:
+        return l[:, :n], p[:n], a[:n]
+      return l[:n], p[:n], a[:n]
+
+    return padded
+
+  def _eval_fn(self, layers: Tuple[ConvLayer, ...], plan=None):
+    from repro.explore import device as device_lib
+
+    def build():
+      fn = device_lib.make_eval_fn(layers, plan)
+      if plan is None:
+        fn = self._shard_rows(fn, joint=False)
+      return self._jit(fn)
+
+    return self._cached_fn(("eval", layers, plan, self.precision), build)
+
+  def _joint_fn(self, plan=None):
+    from repro.explore import device as device_lib
+
+    def build():
+      fn = device_lib.make_joint_fn(plan)
+      if plan is None:
+        fn = self._shard_rows(fn, joint=True)
+      return self._jit(fn)
+
+    return self._cached_fn(("joint", plan, self.precision), build)
 
   def _eval_chunk_jax(self, chunk: ConfigTable,
                       layers: Tuple[ConvLayer, ...]):
     import jax
     inputs = oracle.batch_inputs(chunk)  # variations need host uint64
-    fn = self._jit_cache.get(layers)
-    if fn is None:
-      fn = self._build_jax_fn(layers)
-      self._jit_cache[layers] = fn
-    l, p, a = fn(inputs)
+    with self._x64():
+      l, p, a = self._eval_fn(layers)(inputs)
     return (np.asarray(jax.device_get(l), np.float64),
             np.asarray(jax.device_get(p), np.float64),
             np.asarray(jax.device_get(a), np.float64))
 
-  def _co_eval_chunk_jax(self, chunk: ConfigTable, stack: LayerStack):
+  def _co_eval_chunk_jax(self, chunk: ConfigTable, stack: LayerStack,
+                         dedup=None):
     import jax
     inputs = oracle.batch_inputs(chunk)
-    key = ("joint", stack.fingerprint())
-    fn = self._jit_cache.get(key)
-    if fn is None:
-      fn = self._build_jax_joint_fn(stack)
-      self._jit_cache[key] = fn
-    l, p, a = fn(inputs)
+    unique_cols, slot_ids = stack.dedup_slots() if dedup is None else dedup
+    with self._x64():
+      # accs is only consumed by fused plans; an empty array keeps the
+      # arg pytree shard_map-friendly (None has no pytree leaves)
+      l, p, a = self._joint_fn()(inputs, unique_cols, slot_ids,
+                                 stack.valid, np.zeros(0))
     return (np.asarray(jax.device_get(l), np.float64),
             np.asarray(jax.device_get(p), np.float64),
             np.asarray(jax.device_get(a), np.float64))
 
-  @staticmethod
-  def _build_jax_fn(layers: Tuple[ConvLayer, ...]):
+  # -- streaming entry points: async dispatch + optional fused reduction ----
+
+  def eval_pending(self, table: ConfigTable, layers: Sequence[ConvLayer],
+                   network: str, idx: np.ndarray):
+    """Dispatch one streaming chunk; the returned PendingFrame resolves
+    to the same (frame, idx) the numpy task path produces."""
     import jax
-    import jax.numpy as jnp
+    from repro.explore import device as device_lib
+    layers = tuple(layers)
+    inputs = oracle.batch_inputs(table)
+    with self._x64():
+      out = self._eval_fn(layers)(inputs)
 
-    def formulas(inputs):
-      ch = oracle.characterize_batch(None, layers, xp=jnp, inputs=inputs)
-      return ch.latency_s, ch.power_mw, ch.area_mm2
+    def finalize():
+      l, p, a = (np.asarray(jax.device_get(o), np.float64) for o in out)
+      return ResultFrame(l, p, a, table.pe_type_strings(), (), network,
+                         table=table), idx
 
-    devices = jax.devices()
-    if len(devices) > 1:
-      from jax.experimental.shard_map import shard_map
-      from jax.sharding import Mesh, PartitionSpec as P
-      mesh = Mesh(np.asarray(devices), ("batch",))
-      sharded = shard_map(formulas, mesh=mesh,
-                          in_specs=(P("batch"),), out_specs=P("batch"))
+    return device_lib.PendingFrame(finalize)
 
-      def padded(inputs):
-        n = next(iter(inputs.values())).shape[0]
-        pad = (-n) % len(devices)
-        if pad:
-          inputs = {k: jnp.concatenate([jnp.asarray(v),
-                                        jnp.asarray(v[-1:]).repeat(pad, 0)])
-                    for k, v in inputs.items()}
-        l, p, a = sharded(inputs)
-        return l[:n], p[:n], a[:n]
-
-      return jax.jit(padded)
-    return jax.jit(formulas)
-
-  @staticmethod
-  def _build_jax_joint_fn(stack: LayerStack):
+  def co_eval_pending(self, hw: ConfigTable, stack: LayerStack, network: str,
+                      idx: np.ndarray, arch_lo: int, accs: np.ndarray,
+                      arch_lookup: Tuple[object, ...], dedup=None):
+    """Joint twin of :meth:`eval_pending` (arch columns attached on
+    resolve, matching the host streaming task)."""
     import jax
-    import jax.numpy as jnp
+    from repro.explore import device as device_lib
+    inputs = oracle.batch_inputs(hw)
+    unique_cols, slot_ids = stack.dedup_slots() if dedup is None else dedup
+    with self._x64():
+      out = self._joint_fn()(inputs, unique_cols, slot_ids, stack.valid,
+                             np.zeros(0))
 
-    def formulas(inputs):
-      ch = oracle.characterize_joint(None, stack, xp=jnp, inputs=inputs)
-      return ch.latency_s, ch.power_mw, ch.area_mm2
+    def finalize():
+      lat, pwr, area = (np.asarray(jax.device_get(o), np.float64)
+                        for o in out)
+      return device_lib.joint_chunk_frame(
+          lat, pwr, area, hw, network, arch_lo, accs, arch_lookup), idx
 
-    devices = jax.devices()
-    if len(devices) > 1:
-      from jax.experimental.shard_map import shard_map
-      from jax.sharding import Mesh, PartitionSpec as P
-      mesh = Mesh(np.asarray(devices), ("batch",))
-      # HW rows shard over the mesh; the arch axis of latency replicates
-      # the batch split on its second dimension
-      sharded = shard_map(formulas, mesh=mesh, in_specs=(P("batch"),),
-                          out_specs=(P(None, "batch"), P("batch"),
-                                     P("batch")))
+    return device_lib.PendingFrame(finalize)
 
-      def padded(inputs):
-        n = next(iter(inputs.values())).shape[0]
-        pad = (-n) % len(devices)
-        if pad:
-          inputs = {k: jnp.concatenate([jnp.asarray(v),
-                                        jnp.asarray(v[-1:]).repeat(pad, 0)])
-                    for k, v in inputs.items()}
-        l, p, a = sharded(inputs)
-        return l[:, :n], p[:n], a[:n]
+  def fused_eval_pending(self, table: ConfigTable,
+                         layers: Sequence[ConvLayer], network: str,
+                         plan, idx: np.ndarray):
+    """Dispatch one fused evaluate+reduce chunk (see
+    :mod:`repro.explore.device`); resolves to per-reducer payloads with
+    O(survivors) device->host transfer."""
+    from repro.explore import device as device_lib
+    layers = tuple(layers)
+    inputs = oracle.batch_inputs(table)
+    with self._x64():
+      outputs = self._eval_fn(layers, plan)(inputs)
+    return device_lib.PendingFused(outputs, plan, table, idx, network)
 
-      return jax.jit(padded)
-    return jax.jit(formulas)
+  def fused_co_eval_pending(self, hw: ConfigTable, stack: LayerStack,
+                            network: str, plan, idx: np.ndarray,
+                            arch_lo: int, accs: np.ndarray,
+                            arch_lookup: Tuple[object, ...], dedup=None):
+    """Joint twin of :meth:`fused_eval_pending`."""
+    from repro.explore import device as device_lib
+    inputs = oracle.batch_inputs(hw)
+    unique_cols, slot_ids = stack.dedup_slots() if dedup is None else dedup
+    accs = np.asarray(accs, np.float64)
+    with self._x64():
+      outputs = self._joint_fn(plan)(inputs, unique_cols, slot_ids,
+                                     stack.valid, accs)
+    return device_lib.PendingFused(outputs, plan, hw, idx, network,
+                                   n_hw=len(hw), arch_lo=arch_lo, accs=accs,
+                                   arch_lookup=arch_lookup)
 
 
 # ---------------------------------------------------------------------------

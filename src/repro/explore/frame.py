@@ -30,6 +30,12 @@ from repro.core.table import ConfigTable, JointTable
 
 BASE_COLUMNS = ("latency_s", "power_mw", "area_mm2")
 
+# numeric columns derivable from the base metrics alone (plus, on joint
+# frames, the top1/top1_err pair derived from the arch accuracies) — the
+# contract the fused device programs mirror op for op so survivor values
+# stay bit-identical (see repro.explore.device.DEVICE_COLUMNS)
+DERIVED_COLUMNS = ("perf", "perf_per_area", "energy_mj")
+
 # derived columns where "bigger is better" (auto-negated inside pareto())
 _MAXIMIZE_COLUMNS = frozenset({"perf", "perf_per_area", "top1"})
 
@@ -294,7 +300,7 @@ class ResultFrame:
     return self.power_mw * self.latency_s  # mW * s = mJ
 
   def column(self, name: str) -> np.ndarray:
-    if name in BASE_COLUMNS or name in ("perf", "perf_per_area", "energy_mj"):
+    if name in BASE_COLUMNS or name in DERIVED_COLUMNS:
       return getattr(self, name)
     if name == "pe_type":
       return self.pe_type

@@ -23,6 +23,13 @@ out), or implicitly when ``vectorized="auto"`` sees a sweep of
 ``STREAM_AUTO_MIN_ROWS``+ rows on a table-capable backend — the engine
 then evaluates chunks on a thread pool and reassembles the identical
 full frame (parallel throughput, one-shot semantics).
+
+On a ``VectorOracleBackend(jit=True)`` the streaming engine goes
+device-resident: exact x64 evaluation under ``jax.jit`` (bit-identical
+to the numpy path), asynchronous dispatch-ahead chunk scheduling, and —
+when every reducer is device-fusable — fused on-device reduction so
+only O(survivors) floats come back per chunk
+(:mod:`repro.explore.device`).
 """
 from __future__ import annotations
 

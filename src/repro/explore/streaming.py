@@ -49,6 +49,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+from collections import deque
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from typing import (Callable, Dict, Iterable, Iterator, Optional, Sequence,
                     Tuple)
@@ -63,14 +64,26 @@ from repro.explore.space import DesignSpace
 # engine (CollectAccumulator: identical full frame out) at this many rows
 STREAM_AUTO_MIN_ROWS = 1_000_000
 
-# a (frame, global row ids) producer — the engine's unit of work
-Task = Callable[[], Tuple[ResultFrame, np.ndarray]]
+# a chunk producer — the engine's unit of work.  Tasks return either the
+# evaluated (frame, global row ids) pair directly, or an asynchronous
+# handle with .resolve() (the device path's PendingFrame / PendingFused)
+Task = Callable[[], object]
+
+
+# how many device chunks a single submitting thread keeps in flight: the
+# engine materializes + dispatches chunk n+ahead while the device still
+# runs chunk n (jax async dispatch), so host sampling/hashing overlaps
+# device execution — the double-buffering that replaced the old
+# "jit backends get one fully-serial worker" special case
+DISPATCH_AHEAD = 2
 
 
 def default_workers(backend=None) -> int:
   """Thread-pool width: one per core up to 8 for the numpy formulas
-  (they release the GIL); 1 for a ``jit=True`` backend, whose chunks
-  already span every visible device via shard_map."""
+  (they release the GIL); 1 for a ``jit=True`` backend — its chunks are
+  dispatched asynchronously with a ``DISPATCH_AHEAD`` in-flight window
+  (and span every visible device via shard_map), so the single
+  submitting thread still overlaps host and device work."""
   if backend is not None and getattr(backend, "jit", False):
     return 1
   return max(1, min(8, os.cpu_count() or 1))
@@ -93,6 +106,14 @@ class Reducer:
   ``result()`` emits the reduction.  Implementations must be
   chunk-order invariant: folding any partition of the sweep in any
   order yields the same result.
+
+  Device-fusable reducers additionally implement ``device_spec()``
+  (what the fused device program must compute per chunk, see
+  :mod:`repro.explore.device`) and ``fold_payload(payload)`` (consume
+  that program's per-chunk output).  The host accumulator state stays
+  the cross-chunk merge either way — a fused chunk folds exactly like a
+  host chunk whose rows were pre-thinned to an exact superset of the
+  survivors, which is why the bit-identity guarantees carry over.
   """
 
   def fold(self, frame: ResultFrame, indices: np.ndarray) -> None:
@@ -100,6 +121,19 @@ class Reducer:
 
   def result(self):
     raise NotImplementedError
+
+  def device_spec(self):
+    """The fused-device request, or None when this reducer needs full
+    chunks (the engine then falls back to plain per-chunk evaluation)."""
+    return None
+
+  def fold_payload(self, payload) -> None:
+    """Consume one fused-chunk payload.  The default handles the
+    ``("rows", frame, indices)`` form every row-keeping reducer uses."""
+    kind, frame, indices = payload
+    if kind != "rows":
+      raise ValueError(f"{type(self).__name__} cannot fold {kind!r}")
+    self.fold(frame, indices)
 
 
 class ParetoAccumulator(Reducer):
@@ -147,6 +181,11 @@ class ParetoAccumulator(Reducer):
     """Global row ids of the current front, ascending."""
     return np.sort(self._idx)
 
+  def device_spec(self):
+    from repro.explore.device import ParetoSpec
+    return ParetoSpec(self.cols,
+                      tuple(c for c in self.cols if c in self._mx))
+
   def result(self) -> ResultFrame:
     if self._frame is None:
       return _empty_frame()
@@ -191,6 +230,10 @@ class TopKAccumulator(Reducer):
     """Global row ids of the current k-best, best-first."""
     return self._idx.copy()
 
+  def device_spec(self):
+    from repro.explore.device import TopKSpec
+    return TopKSpec(self.by, self.k, self.maximize)
+
   def result(self) -> ResultFrame:
     # state is already (key, global id)-ordered best-first
     return self._frame if self._frame is not None else _empty_frame()
@@ -214,14 +257,32 @@ class StatsAccumulator(Reducer):
     if not v.size:
       return
     mean_b = float(v.mean())
-    m2_b = float(((v - mean_b) ** 2).sum())
+    self._merge(v.size, mean_b, float(((v - mean_b) ** 2).sum()),
+                float(v.min()), float(v.max()))
+
+  def _merge(self, n_b: int, mean_b: float, m2_b: float, min_b: float,
+             max_b: float) -> None:
+    """Chan's parallel merge of one (count, mean, M2, min, max) partial —
+    shared by host chunks and fused device partials."""
     delta = mean_b - self._mean
-    total = self.n + v.size
-    self._m2 += m2_b + delta * delta * self.n * v.size / total
-    self._mean += delta * v.size / total
+    total = self.n + n_b
+    self._m2 += m2_b + delta * delta * self.n * n_b / total
+    self._mean += delta * n_b / total
     self.n = total
-    self._min = min(self._min, float(v.min()))
-    self._max = max(self._max, float(v.max()))
+    self._min = min(self._min, min_b)
+    self._max = max(self._max, max_b)
+
+  def device_spec(self):
+    from repro.explore.device import StatsSpec
+    return StatsSpec(self.col)
+
+  def fold_payload(self, payload) -> None:
+    kind, data = payload[0], payload[1]
+    if kind != "stats":
+      return super().fold_payload(payload)
+    if data["n"]:
+      self._merge(data["n"], data["mean"], data["m2"], data["min"],
+                  data["max"])
 
   def result(self) -> Dict[str, float]:
     if not self.n:
@@ -256,6 +317,17 @@ class HistogramAccumulator(Reducer):
       return
     v = np.clip(v, self.edges[0], self.edges[-1])
     self.counts += np.histogram(v, bins=self.edges)[0]
+
+  def device_spec(self):
+    from repro.explore.device import HistSpec
+    return HistSpec(self.col, float(self.edges[0]), float(self.edges[-1]),
+                    len(self.counts))
+
+  def fold_payload(self, payload) -> None:
+    kind, data = payload[0], payload[1]
+    if kind != "hist":
+      return super().fold_payload(payload)
+    self.counts += np.asarray(data, np.int64)
 
   def quantile(self, q: float) -> float:
     """Approximate q-quantile from the bin counts (linear within bins)."""
@@ -319,9 +391,18 @@ class StreamResult:
 
 
 def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
-               workers: int = 1) -> StreamResult:
+               workers: int = 1,
+               dispatch_ahead: int = DISPATCH_AHEAD) -> StreamResult:
   """Drain ``tasks`` (each producing one evaluated chunk), folding every
   reducer as chunks complete.
+
+  A task may return the plain ``(frame, indices)`` tuple, or an
+  asynchronous handle — anything with a ``resolve()`` method, i.e. the
+  device path's :class:`~repro.explore.device.PendingFrame` /
+  :class:`~repro.explore.device.PendingFused`.  Handles are kept in a
+  bounded ``dispatch_ahead`` window before resolution, so a single
+  submitting thread materializes + dispatches upcoming chunks while the
+  device still executes earlier ones (jax async dispatch).
 
   ``workers > 1`` evaluates chunks on a thread pool with a bounded
   in-flight window (2x workers), so peak memory stays O(window x chunk);
@@ -333,17 +414,38 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
   t0 = time.perf_counter()
   n_rows = 0
   n_chunks = 0
+  n_transferred = 0
 
-  def fold(frame: ResultFrame, indices: np.ndarray) -> None:
-    nonlocal n_rows, n_chunks
-    n_rows += len(frame)
+  def fold(result) -> None:
+    nonlocal n_rows, n_chunks, n_transferred
+    if hasattr(result, "resolve"):
+      result = result.resolve()
     n_chunks += 1
+    payloads = getattr(result, "payloads", None)
+    if payloads is not None:  # a device FusedChunk (duck-typed: keeps
+      n_rows += result.n_rows  # the numpy path free of device imports)
+      n_transferred += result.n_transferred
+      for name, payload in payloads.items():
+        reducers[name].fold_payload(payload)
+      return
+    frame, indices = result
+    n_rows += len(frame)
+    n_transferred += len(frame)
     for r in reducers.values():
       r.fold(frame, indices)
 
   if workers == 1:
+    window: "deque" = deque()
     for task in tasks:
-      fold(*task())
+      res = task()
+      if hasattr(res, "resolve"):
+        window.append(res)
+        if len(window) > max(int(dispatch_ahead), 0):
+          fold(window.popleft())
+      else:
+        fold(res)
+    while window:
+      fold(window.popleft())
   else:
     with ThreadPoolExecutor(max_workers=workers) as pool:
       pending = set()
@@ -352,17 +454,18 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
         if len(pending) >= 2 * workers:
           done, pending = wait(pending, return_when=FIRST_COMPLETED)
           for fut in done:
-            fold(*fut.result())
+            fold(fut.result())
       while pending:
         done, pending = wait(pending, return_when=FIRST_COMPLETED)
         for fut in done:
-          fold(*fut.result())
+          fold(fut.result())
   seconds = time.perf_counter() - t0
   return StreamResult(
       results={name: r.result() for name, r in reducers.items()},
       n_rows=n_rows, seconds=seconds,
       meta={"seconds": seconds, "workers": float(workers),
             "n_chunks": float(n_chunks),
+            "rows_transferred": float(n_transferred),
             "rows_per_sec": n_rows / max(seconds, 1e-12)})
 
 
@@ -383,14 +486,31 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
   fold into ``reducers`` (default: one ParetoAccumulator on the paper's
   (perf_per_area, energy) axes).  Global row ids follow the one-shot
   sample order, so survivors match the one-shot frame row for row.
+
+  On a ``jit=True`` backend chunks dispatch asynchronously; when every
+  reducer is device-fusable the evaluate+reduce pipeline additionally
+  fuses into one jitted program per chunk (see
+  :mod:`repro.explore.device`), so only O(survivors) floats come back
+  per chunk instead of full metric arrays.
   """
   if not hasattr(backend, "evaluate_table"):
     raise ValueError(f"backend {backend.name!r} has no evaluate_table; "
                      "streaming requires the columnar path")
   if reducers is None:
     reducers = {"pareto": ParetoAccumulator()}
+  plan = None
+  device_mode = getattr(backend, "jit", False) \
+      and hasattr(backend, "fused_eval_pending")
+  if device_mode:
+    from repro.explore.device import build_plan
+    plan = build_plan(reducers, joint=False)
 
   def make_task(chunk, idx) -> Task:
+    if plan is not None:
+      return lambda: backend.fused_eval_pending(chunk, layers, network,
+                                                plan, idx)
+    if device_mode:
+      return lambda: backend.eval_pending(chunk, layers, network, idx)
     return lambda: (backend.evaluate_table(chunk, layers, network), idx)
 
   def tasks() -> Iterator[Task]:
@@ -434,8 +554,29 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
   accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
   stack = LayerStack.from_layer_lists(
       [arch_to_layers(a, image_size=image_size) for a in archs])
+  plan = None
+  device_mode = getattr(backend, "jit", False) \
+      and hasattr(backend, "fused_co_eval_pending")
+  dedup = None
+  if device_mode:
+    from repro.explore.device import build_plan
+    plan = build_plan(reducers, joint=True)
+    # one global distinct-layer factorization: every block slices the
+    # same unique rows, so one compiled program serves the whole sweep
+    unique_cols, slot_ids = stack.dedup_slots()
+    dedup = lambda a_sl: (unique_cols, slot_ids[a_sl])  # noqa: E731
 
-  def make_task(hw_sub, sub_stack, a_lo, idx) -> Task:
+  def make_task(hw_sub, sub_stack, a_sl, idx) -> Task:
+    a_lo = a_sl.start
+    if plan is not None:
+      return lambda: backend.fused_co_eval_pending(
+          hw_sub, sub_stack, "coexplore", plan, idx, a_lo, accs[a_sl],
+          archs, dedup=dedup(a_sl))
+    if device_mode:
+      return lambda: backend.co_eval_pending(
+          hw_sub, sub_stack, "coexplore", idx, a_lo, accs[a_sl], archs,
+          dedup=dedup(a_sl))
+
     def run():
       f = backend.co_evaluate_table(hw_sub, sub_stack, network="coexplore")
       f.extra["arch_id"] = f.extra["arch_id"] + a_lo
@@ -454,7 +595,7 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
         idx = offset + joint.block_indices(a_sl, h_sl)
         yield make_task(hw.select(h_sl),
                         stack.slice_archs(a_sl.start, a_sl.stop),
-                        a_sl.start, idx)
+                        a_sl, idx)
       offset += len(joint)
 
   return run_stream(tasks(), reducers,

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: pairwise Pareto dominance counts.
+
+The streaming sweep engine's device-resident reducer needs, per evaluated
+chunk, the set of non-dominated candidates so only O(survivors) rows ever
+cross the device boundary (repro.explore.device).  The primitive behind
+both its prefilter and its exact candidate merge is a pairwise dominance
+count: for each point, how many others dominate it (0 == on the front).
+
+Objectives are carried **feature-major** — ``(D, N)`` with the point axis
+last — so the point axis lands on the 128-wide lane dimension of the VPU
+tiles (D is 2-4: a (N, D) layout would waste the whole lane dimension).
+The kernel walks a 2-D grid of (BI, BJ) tile pairs; each step loads one
+``(D, BI)`` "row" tile and one ``(D, BJ)`` "col" tile, evaluates the
+dominance predicate with a static loop over D (bool (BI, BJ) masks, no
+3-D broadcast), and accumulates counts into the (1, BI) output tile over
+the j axis of the grid.
+
+Comparisons run in the input dtype: dominance is an *exact* predicate, so
+callers must pass objectives at the precision they need (the x64 streaming
+path hands f64; downcasting could merge distinct values and eliminate a
+true front point).
+
+``_block`` mode restricts dominators to each point's own tile — the
+block-decomposed front prefilter of ``repro.explore.frame._pareto_mask_nd``
+(every global front point survives its own block), one grid step per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# tile sizes: lanes are 128 wide; 256 keeps the (BI, BJ) bool mask small
+# while amortizing grid overhead
+BI = 256
+BJ = 256
+
+
+def _dominance_tile(x, y, d: int):
+  """counts[i] over one tile pair: x (d, bi) rows, y (d, bj) columns.
+  dominates[i, j] == all_d(y[d, j] <= x[d, i]) & any_d(y[d, j] < x[d, i])."""
+  le = None
+  lt = None
+  for k in range(d):
+    xi = x[k][:, None]   # (bi, 1)
+    yj = y[k][None, :]   # (1, bj)
+    le_k = yj <= xi
+    lt_k = yj < xi
+    le = le_k if le is None else le & le_k
+    lt = lt_k if lt is None else lt | lt_k
+  return (le & lt).sum(axis=1, dtype=jnp.int32)
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref, *, d: int, n_j_steps: int):
+  """Grid (N/BI, N/BJ): accumulate dominator counts over the j axis."""
+  jstep = pl.program_id(1)
+
+  @pl.when(jstep == 0)
+  def _init():
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+  counts = _dominance_tile(x_ref[...], y_ref[...], d)
+  o_ref[...] += counts[None, :]
+  del n_j_steps
+
+
+def _block_kernel(x_ref, o_ref, *, d: int):
+  """Grid (N/BI,): dominators sought within each point's own tile only."""
+  x = x_ref[...]
+  o_ref[...] = _dominance_tile(x, x, d)[None, :]
+
+
+def dominance_counts_pallas(obj_t: jax.Array, interpret: bool = True,
+                            bi: int = BI, bj: int = BJ) -> jax.Array:
+  """obj_t (D, N) feature-major objectives -> (N,) int32 global dominance
+  counts.  N must be pre-padded to a multiple of lcm(bi, bj) with +inf
+  points (ops.py handles padding; +inf rows dominate nothing)."""
+  d, n = obj_t.shape
+  assert n % bi == 0 and n % bj == 0, (n, bi, bj)
+  kern = functools.partial(_pairwise_kernel, d=d, n_j_steps=n // bj)
+  out = pl.pallas_call(
+      kern,
+      grid=(n // bi, n // bj),
+      in_specs=[
+          pl.BlockSpec((d, bi), lambda i, j: (0, i)),
+          pl.BlockSpec((d, bj), lambda i, j: (0, j)),
+      ],
+      out_specs=pl.BlockSpec((1, bi), lambda i, j: (0, i)),
+      out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+      interpret=interpret,
+  )(obj_t, obj_t)
+  return out[0]
+
+
+def block_dominance_counts_pallas(obj_t: jax.Array, interpret: bool = True,
+                                  block: int = BI) -> jax.Array:
+  """obj_t (D, N) -> (N,) int32 within-block dominance counts (the
+  prefilter mode: one tile pair per grid step, never O(N^2))."""
+  d, n = obj_t.shape
+  assert n % block == 0, (n, block)
+  kern = functools.partial(_block_kernel, d=d)
+  out = pl.pallas_call(
+      kern,
+      grid=(n // block,),
+      in_specs=[pl.BlockSpec((d, block), lambda i: (0, i))],
+      out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+      out_shape=jax.ShapeDtypeStruct((1, n), jnp.int32),
+      interpret=interpret,
+  )(obj_t)
+  return out[0]

@@ -1,0 +1,112 @@
+"""Public wrappers for the Pareto dominance kernels.
+
+Two interchangeable backends behind one API:
+
+  * a pure-jnp port of the block-decomposed N-D front machinery of
+    ``repro.explore.frame._pareto_mask_nd`` (vmapped per-block dominance,
+    no Python-level elimination loop) — what the fused device reducer
+    runs on CPU/GPU backends;
+  * the Pallas TPU kernel (``kernel.py``), exercised in interpret mode on
+    CPU by the tier-1 tests and compiled on real TPU backends.
+
+All objectives are MINIMIZED; callers negate maximize columns first (the
+convention of ``repro.explore.frame.pareto_mask``).  Comparisons run in
+the input dtype — pass f64 when the caller needs exact f64 dominance.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.pareto_front import kernel as _kernel
+from repro.kernels.pareto_front.ref import dominance_counts_ref
+
+
+def _pad_feature_major(obj: jax.Array, multiple: int) -> jax.Array:
+  """(N, D) -> (D, N_padded) with +inf pad points (dominate nothing and
+  are dominated by every real point, so real counts are unchanged)."""
+  n = obj.shape[0]
+  pad = (-n) % multiple
+  obj_t = obj.T
+  if pad:
+    obj_t = jnp.concatenate(
+        [obj_t, jnp.full((obj.shape[1], pad), jnp.inf, obj.dtype)], axis=1)
+  return obj_t
+
+
+def dominance_counts(obj: jax.Array, interpret: Optional[bool] = None,
+                     use_pallas: bool = True) -> jax.Array:
+  """(N, D) -> (N,) int32 global dominance counts (0 == on the front)."""
+  if interpret is None:
+    interpret = common.default_interpret()
+  n = obj.shape[0]
+  if not use_pallas:
+    return dominance_counts_ref(obj)
+  obj_t = _pad_feature_major(obj, max(_kernel.BI, _kernel.BJ))
+  return _kernel.dominance_counts_pallas(obj_t, interpret=interpret)[:n]
+
+
+def pareto_front_mask(obj: jax.Array, interpret: Optional[bool] = None,
+                      use_pallas: bool = True) -> jax.Array:
+  """(N,) bool exact non-dominated mask via pairwise dominance counts.
+
+  O(N^2) compares: meant for candidate sets that already passed
+  :func:`block_prefilter_mask`, not raw million-row sweeps.
+  """
+  return dominance_counts(obj, interpret=interpret,
+                          use_pallas=use_pallas) == 0
+
+
+def _block_survivor_mask_jnp(obj: jax.Array, block: int) -> jax.Array:
+  """vmapped within-block non-dominated mask ((N,) bool; N % block == 0).
+
+  The jax port of ``_pareto_mask_nd``'s block decomposition: the static
+  loop over D keeps the compare masks 2-D ((block, block) bools), and
+  vmap over blocks replaces the Python block loop.
+  """
+  n, d = obj.shape
+  o = obj.reshape(n // block, block, d)
+
+  def blk(b):
+    le = None
+    lt = None
+    for k in range(d):
+      col = b[:, k]
+      le_k = col[None, :] <= col[:, None]
+      lt_k = col[None, :] < col[:, None]
+      le = le_k if le is None else le & le_k
+      lt = lt_k if lt is None else lt | lt_k
+    return ~(le & lt).any(axis=1)
+
+  return jax.vmap(blk)(o).reshape(-1)
+
+
+def block_prefilter_mask(obj: jax.Array, block: int = 128,
+                         interpret: Optional[bool] = None,
+                         use_pallas: bool = False) -> jax.Array:
+  """(N,) bool block-decomposed front *superset* mask.
+
+  Every global front point is non-dominated within its own block, and
+  every dominated point is dominated by some front point (transitivity),
+  so the union of per-block fronts is an exact superset of the global
+  front — the same argument ``_pareto_mask_nd`` and the streaming
+  ParetoAccumulator rest on.  Cost is O(N * block), never O(N^2).
+  """
+  n = obj.shape[0]
+  if n == 0:
+    return jnp.zeros(0, bool)
+  if use_pallas:
+    if interpret is None:
+      interpret = common.default_interpret()
+    obj_t = _pad_feature_major(obj, block)
+    counts = _kernel.block_dominance_counts_pallas(obj_t, block=block,
+                                                   interpret=interpret)
+    return counts[:n] == 0
+  pad = (-n) % block
+  if pad:
+    obj = jnp.concatenate(
+        [obj, jnp.full((pad, obj.shape[1]), jnp.inf, obj.dtype)])
+  return _block_survivor_mask_jnp(obj, block)[:n]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Pareto dominance-count kernel.
+
+All objectives are MINIMIZED.  Point ``j`` dominates point ``i`` iff
+``obj[j] <= obj[i]`` on every axis and ``obj[j] < obj[i]`` on at least
+one — the exact predicate of ``repro.explore.frame.pareto_mask`` (ties /
+duplicates dominate nobody, so duplicated front points all survive).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dominance_counts_ref(obj: jax.Array) -> jax.Array:
+  """(N, D) objectives -> (N,) int32: how many points dominate each row."""
+  le = jnp.all(obj[None, :, :] <= obj[:, None, :], axis=-1)  # [i, j]: j<=i
+  lt = jnp.any(obj[None, :, :] < obj[:, None, :], axis=-1)   # [i, j]: j<i
+  return (le & lt).sum(axis=1).astype(jnp.int32)
+
+
+def pareto_mask_ref(obj: jax.Array) -> jax.Array:
+  """(N,) bool: rows no other row dominates (the exact front)."""
+  return dominance_counts_ref(obj) == 0
+
+
+def block_dominance_counts_ref(obj: jax.Array, block: int) -> jax.Array:
+  """Per-block dominance counts: dominators are only sought within each
+  row's own ``block``-sized slab (N must divide evenly; ops.py pads).
+  ``counts == 0`` is the block-decomposed front *superset*: every global
+  front point survives its own block."""
+  n, d = obj.shape
+  blocks = obj.reshape(n // block, block, d)
+  return jax.vmap(dominance_counts_ref)(blocks).reshape(-1)

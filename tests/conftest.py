@@ -1,0 +1,12 @@
+"""Shared test configuration.
+
+XLA latches its flags at the process's first compilation, and the exact
+device path (repro.explore.device) needs FMA contraction and the HLO
+algebraic simplifier off to be bit-compatible with numpy.  Other test
+modules compile jax programs before the device-sweep tests run, so the
+flags must enter the environment before anything compiles — conftest
+import is the earliest hook the test process has.
+"""
+from repro.explore.device import ensure_exact_cpu_codegen
+
+ensure_exact_cpu_codegen()

@@ -188,15 +188,15 @@ class TestVectorCoEvaluate:
     assert pts[5].cfg == hw.config_at(1)
     assert pts[-1].latency_s == f.latency_s[-1]
 
-  def test_jit_path_close(self, stack):
+  def test_jit_path_exact(self, stack):
+    """The default x64 joint device path is bit-identical to numpy."""
     pytest.importorskip("jax")
     hw = DesignSpace().sample_table(3, seed=1)
     base = VectorOracleBackend().co_evaluate_table(hw, stack)
     jit = VectorOracleBackend(chunk_size=64, jit=True).co_evaluate_table(
         hw, stack)
     for col in ("latency_s", "power_mw", "area_mm2"):
-      np.testing.assert_allclose(getattr(jit, col), getattr(base, col),
-                                 rtol=1e-3)
+      assert np.array_equal(getattr(jit, col), getattr(base, col)), col
 
 
 class TestPolynomialCoEvaluate:

@@ -208,8 +208,9 @@ class TestVectorOracleBackend:
     top = f.top_k(3, by="perf_per_area")
     assert len(top.table) == 3
 
-  def test_jit_path_close(self, small_layers):
-    """Device path is float32-approximate, not a parity path."""
+  def test_jit_path_exact(self, small_layers):
+    """The default x64 device path is bit-identical to numpy (the full
+    exactness matrix lives in tests/test_device_sweep.py)."""
     jax = pytest.importorskip("jax")
     del jax
     tbl = DesignSpace().sample_table(10, seed=1)
@@ -217,7 +218,18 @@ class TestVectorOracleBackend:
     jit = VectorOracleBackend(chunk_size=16, jit=True).evaluate_table(
         tbl, small_layers)
     for col in ("latency_s", "power_mw", "area_mm2"):
-      np.testing.assert_allclose(getattr(jit, col), getattr(base, col),
+      assert np.array_equal(getattr(jit, col), getattr(base, col)), col
+
+  def test_jit_float32_mode_close(self, small_layers):
+    """precision="float32" keeps the approximate fast mode."""
+    pytest.importorskip("jax")
+    tbl = DesignSpace().sample_table(10, seed=1)
+    base = VectorOracleBackend().evaluate_table(tbl, small_layers)
+    f32 = VectorOracleBackend(chunk_size=16, jit=True,
+                              precision="float32").evaluate_table(
+        tbl, small_layers)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      np.testing.assert_allclose(getattr(f32, col), getattr(base, col),
                                  rtol=1e-3)
 
   def test_bad_chunk_size(self):
