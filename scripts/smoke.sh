@@ -11,6 +11,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== static analysis (determinism/exactness) =="
+python -m repro.analysis src/repro --baseline analysis_baseline.json \
+  --strict-baseline
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -1,0 +1,42 @@
+"""repro.analysis: determinism & exactness static analysis.
+
+The exploration stack's headline guarantee — every fast path (vectorized,
+streaming, device-fused) is *bit-identical* to the scalar numpy oracle —
+is a contract no runtime test can police exhaustively: one stray
+``np.random`` call, an unseeded RNG, a float32 literal in an exact x64
+formula, or a host ``np.`` call inside a jitted program silently breaks
+``parity_max_rel_err == 0.0`` for some sweep nobody benchmarks.  This
+package is the AST-level backstop: a rule registry with per-rule codes,
+inline suppressions (``# repro: ignore[RULE-ID]``), a checked-in baseline
+for grandfathered findings, and a CLI::
+
+    python -m repro.analysis [paths...] [--format text|json|sarif]
+                             [--baseline analysis_baseline.json]
+
+Rule packs (see :mod:`repro.analysis.rules` and docs/analysis.md):
+
+  DET*  determinism   — global/unseeded RNG, wall-clock reads, set-order
+                        iteration, ad-hoc seed arithmetic
+  EXA*  exactness     — float32 casts, divergent transcendentals, and
+                        reassociating reductions in the parity-critical
+                        modules (core/oracle.py, core/dataflow.py,
+                        explore/device.py); divergent jnp ops in kernels
+                        without a ref.py oracle
+  JIT*  jit-purity    — print / global state / host numpy / host
+                        coercions inside functions reached by jax.jit,
+                        pallas_call or shard_map
+  CON*  contract      — kernel packages must ship kernel.py + ref.py +
+                        ops.py + an interpret-mode test; streaming
+                        reducers must implement the fold/result/
+                        device_spec surface explore.device.build_plan
+                        expects
+
+The engine is pure stdlib (ast + json): it never imports numpy or jax,
+so it runs in any environment, including bare CI runners.
+"""
+from repro.analysis.engine import (Baseline, Finding, Module, Report,
+                                   scan_paths)
+from repro.analysis.registry import RULES, Rule, register
+
+__all__ = ["Baseline", "Finding", "Module", "Report", "scan_paths",
+           "RULES", "Rule", "register"]

@@ -1,0 +1,91 @@
+"""Repo-specific scoping for the rule packs.
+
+Paths are posix-style, relative to the scan root (scanning ``src/repro``
+makes the oracle ``core/oracle.py`` — the fixture trees the tests build
+mirror that layout, so scopes apply there unchanged).
+"""
+from __future__ import annotations
+
+import re
+
+# -- determinism pack --------------------------------------------------------
+
+# Directories whose numerics must be run-to-run deterministic: the oracle
+# formulas, the exploration engine, the Pallas kernels and the synthetic
+# data pipelines.  (launch/, serve/, train/ may legitimately read clocks.)
+DETERMINISM_DIRS = ("core/", "explore/", "kernels/", "data/")
+
+# np.random factories that carry explicit seed state (everything else on
+# np.random is the hidden module-global generator).
+SEEDED_RNG_FACTORIES = frozenset({
+    "RandomState", "default_rng", "Generator", "SeedSequence",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+})
+
+# Wall-clock reads (date/time-of-day).  Monotonic benchmarking clocks
+# (perf_counter / monotonic) are deliberately NOT listed: throughput
+# metadata is allowed, nondeterministic *inputs* are not.
+WALL_CLOCK_CALLS = frozenset({
+    ("time", "time"), ("time", "time_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"), ("datetime", "today"),
+    ("date", "today"),
+})
+
+# Seed-consuming constructors whose arguments must come from
+# repro.core.seeding.derive_seed rather than ad-hoc arithmetic.
+SEED_SINKS = frozenset({"RandomState", "default_rng", "SeedSequence",
+                        "PRNGKey", "key"})
+SEED_DERIVER = "derive_seed"
+
+# -- exactness pack ----------------------------------------------------------
+
+# Modules under the parity_max_rel_err == 0.0 contract: the batch oracle
+# formulas, the dataflow model, and the fused device programs.
+PARITY_CRITICAL = frozenset({
+    "core/oracle.py", "core/dataflow.py", "explore/device.py",
+})
+
+# Array-module names the generic formulas are written against.  A
+# function taking one of these as a parameter may trace under jax, where
+# transcendentals and reassociating reductions diverge from numpy.
+ARRAY_MODULE_PARAMS = frozenset({"xp", "jnp"})
+
+# Ops where XLA's result is not guaranteed bit-identical to libm/numpy
+# (typically 1 ulp): these must be host-precomputed on the exact path
+# (see repro.core.oracle.batch_inputs) or carry a justified suppression.
+DIVERGENT_OPS = frozenset({
+    "log", "log2", "log10", "log1p", "exp", "exp2", "expm1",
+    "power", "pow", "float_power", "tanh", "sinh", "cosh",
+    "sin", "cos", "tan", "arcsin", "arccos", "arctan", "arctan2",
+    "erf", "erfc", "cbrt", "sigmoid", "softmax", "logsumexp",
+})
+
+# Reductions/contractions whose accumulation order XLA may reassociate.
+REASSOCIATING_CALLS = frozenset({
+    "einsum", "tensordot", "matmul", "dot", "vdot", "inner", "prod",
+})
+REASSOCIATING_METHODS = frozenset({"sum", "mean", "dot", "prod"})
+
+# -- jit-purity pack ---------------------------------------------------------
+
+# Known jit-root *builders*: functions whose returned nested callables the
+# backend wraps in jax.jit (repro/explore/backend.py).  The syntactic
+# detector cannot see that cross-module hand-off, so they are named here;
+# add new builders when a module grows one.
+JIT_ROOT_BUILDERS = {
+    "explore/device.py": frozenset({"make_eval_fn", "make_joint_fn"}),
+}
+
+# Host coercions that force a device sync / transfer inside traced code.
+HOST_COERCION_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+HOST_COERCION_CALLS = frozenset({"device_get"})
+
+# -- contract pack -----------------------------------------------------------
+
+KERNEL_PATH_RE = re.compile(r"(?:^|/)kernels/([A-Za-z0-9_]+)/kernel\.py$")
+KERNEL_SIBLINGS = ("ref.py", "ops.py")
+STREAMING_MODULE = "explore/streaming.py"
+REDUCER_BASE = "Reducer"
+REDUCER_REQUIRED_METHODS = ("fold", "result")
+DEVICE_SPEC_TYPES = frozenset({"ParetoSpec", "TopKSpec", "StatsSpec",
+                               "HistSpec"})

@@ -1,0 +1,134 @@
+"""Which functions in a module trace under jax?
+
+Roots are found syntactically:
+
+  * decorated with ``@jax.jit`` / ``@jit`` / ``@partial(jax.jit, ...)``;
+  * passed (possibly via ``functools.partial``) as the first argument to
+    a ``jit(...)`` / ``pallas_call(...)`` / ``shard_map(...)`` call
+    anywhere in the module;
+  * nested functions *returned by* a builder named in
+    ``config.JIT_ROOT_BUILDERS`` (the backend jits those returned
+    callables cross-module, which no local syntax shows).
+
+Reachability then propagates intra-module through plain ``Name`` calls
+(fixpoint).  Cross-module propagation is deliberately out of scope — the
+exactness pack's ``xp``-parameter convention covers the generic formula
+modules instead (see docs/analysis.md, "limits").
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Set
+
+from repro.analysis import config
+from repro.analysis.engine import Module
+
+_JIT_WRAPPERS = frozenset({"jit", "pallas_call", "shard_map"})
+
+
+def _is_jit_name(node: ast.AST) -> bool:
+  """Does this expression denote jit/pallas_call/shard_map?"""
+  if isinstance(node, ast.Name):
+    return node.id in _JIT_WRAPPERS
+  if isinstance(node, ast.Attribute):
+    return node.attr in _JIT_WRAPPERS
+  return False
+
+
+def _first_func_arg(call: ast.Call) -> str:
+  """Name of the function handed to a jit-like wrapper (unwrapping one
+  level of functools.partial), or '' when it is not a plain name."""
+  if not call.args:
+    return ""
+  arg = call.args[0]
+  if isinstance(arg, ast.Call) and attr_last(arg.func) == "partial" \
+      and arg.args and isinstance(arg.args[0], ast.Name):
+    return arg.args[0].id
+  if isinstance(arg, ast.Name):
+    return arg.id
+  return ""
+
+
+def attr_last(node: ast.AST) -> str:
+  if isinstance(node, ast.Attribute):
+    return node.attr
+  if isinstance(node, ast.Name):
+    return node.id
+  return ""
+
+
+def _decorated_as_jit(fn) -> bool:
+  for dec in fn.decorator_list:
+    if _is_jit_name(dec):
+      return True
+    if isinstance(dec, ast.Call):
+      if _is_jit_name(dec.func):
+        return True
+      if attr_last(dec.func) == "partial" and dec.args \
+          and _is_jit_name(dec.args[0]):
+        return True
+  return False
+
+
+def jit_reached_functions(mod: Module) -> Set[ast.AST]:
+  """The set of FunctionDef nodes in ``mod`` that trace under jax."""
+  tree = mod.tree
+  if tree is None:
+    return set()
+  by_name: Dict[str, list] = {}
+  for node in ast.walk(tree):
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+      by_name.setdefault(node.name, []).append(node)
+
+  reached: Set[ast.AST] = set()
+
+  def mark(name: str) -> None:
+    for fn in by_name.get(name, ()):
+      reached.add(fn)
+
+  for node in ast.walk(tree):
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+        and _decorated_as_jit(node):
+      reached.add(node)
+    if isinstance(node, ast.Call) and _is_jit_name(node.func):
+      name = _first_func_arg(node)
+      if name:
+        mark(name)
+
+  builders = config.JIT_ROOT_BUILDERS.get(mod.rel, frozenset())
+  for node in ast.walk(tree):
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+        and node.name in builders:
+      returned = {r.value.id for r in ast.walk(node)
+                  if isinstance(r, ast.Return)
+                  and isinstance(r.value, ast.Name)}
+      for inner in ast.walk(node):
+        if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+            and inner.name in returned:
+          reached.add(inner)
+
+  # propagate through intra-module Name calls to fixpoint
+  changed = True
+  while changed:
+    changed = False
+    for fn in list(reached):
+      for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+          for callee in by_name.get(node.func.id, ()):
+            if callee not in reached:
+              reached.add(callee)
+              changed = True
+  return reached
+
+
+def enclosing_function(mod: Module, target: ast.AST):
+  """The innermost function def whose body contains ``target``."""
+  best = None
+  for fn in ast.walk(mod.tree):
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+      if fn is target:
+        continue
+      if any(n is target for n in ast.walk(fn)):
+        if best is None or any(n is fn for n in ast.walk(best)):
+          best = fn
+  return best

@@ -1,0 +1,131 @@
+"""Contract-structure pack (CON*): the shapes the stack's guarantees
+hang off of.
+
+Every Pallas kernel package carries a numpy reference (``ref.py``), a
+jitted public wrapper (``ops.py``) and an interpret-mode test comparing
+the two — that triangle IS the kernel correctness story.  Every
+streaming reducer implements the fold/result merge surface the
+chunk-order-invariance proofs quantify over, and any ``device_spec`` it
+offers must speak one of the spec types ``explore.device.build_plan``
+can compile.  These rules keep new kernels/reducers from shipping
+without their contract half.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import config
+from repro.analysis.engine import Finding
+from repro.analysis.registry import Rule, register
+
+
+def _kernel_packages(ctx):
+  for mod in ctx.modules:
+    m = config.KERNEL_PATH_RE.search(mod.rel)
+    if m:
+      yield mod, m.group(1)
+
+
+@register
+class KernelSiblings(Rule):
+  id = "CON001"
+  pack = "contract"
+  summary = "kernel.py without its ref.py + ops.py siblings"
+
+  def check_tree(self, ctx):
+    for mod, name in _kernel_packages(ctx):
+      pkg = mod.rel.rsplit("/", 1)[0]
+      missing = [s for s in config.KERNEL_SIBLINGS
+                 if not ctx.has_file(f"{pkg}/{s}")]
+      if missing:
+        yield Finding(
+            self.id, mod.rel, 1, 0,
+            f"kernel package '{name}' is missing {', '.join(missing)}: "
+            "every kernel ships a numpy reference (ref.py) and a jitted "
+            "public wrapper (ops.py) alongside kernel.py")
+
+
+@register
+class KernelInterpretTest(Rule):
+  id = "CON002"
+  pack = "contract"
+  summary = "kernel package with no interpret-mode test referencing it"
+
+  def check_tree(self, ctx):
+    if ctx.tests_dir is None:
+      return  # no tests tree in view: nothing to assert against
+    for mod, name in _kernel_packages(ctx):
+      covered = any(name in src and "interpret" in src
+                    for src in ctx.tests.values())
+      if not covered:
+        yield Finding(
+            self.id, mod.rel, 1, 0,
+            f"no test under {ctx.tests_dir} references kernel "
+            f"'{name}' together with interpret mode — add an "
+            "interpret=True comparison against its ref.py oracle "
+            "(see tests/test_kernels.py)")
+
+
+def _reducer_classes(mod):
+  for node in ast.walk(mod.tree):
+    if isinstance(node, ast.ClassDef) and any(
+        isinstance(b, ast.Name) and b.id == config.REDUCER_BASE
+        for b in node.bases):
+      yield node
+
+
+def _methods(cls):
+  return {n.name: n for n in cls.body
+          if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+@register
+class ReducerSurface(Rule):
+  id = "CON003"
+  pack = "contract"
+  summary = ("streaming reducer missing the fold/result merge surface "
+             "the chunk-order-invariance guarantees quantify over")
+
+  def check_module(self, mod, ctx):
+    if mod.rel != config.STREAMING_MODULE:
+      return
+    for cls in _reducer_classes(mod):
+      methods = _methods(cls)
+      missing = [m for m in config.REDUCER_REQUIRED_METHODS
+                 if m not in methods]
+      if missing:
+        yield Finding(
+            self.id, mod.rel, cls.lineno, cls.col_offset,
+            f"Reducer subclass '{cls.name}' does not define "
+            f"{', '.join(missing)}: every accumulator must consume "
+            "chunks (fold) and emit its merge (result) so any chunk "
+            "partition folds to the same answer")
+
+
+@register
+class DeviceSpecShape(Rule):
+  id = "CON004"
+  pack = "contract"
+  summary = ("device_spec() returning something explore.device.build_plan "
+             "cannot compile")
+
+  def check_module(self, mod, ctx):
+    if mod.rel != config.STREAMING_MODULE:
+      return
+    for cls in _reducer_classes(mod):
+      spec_fn = _methods(cls).get("device_spec")
+      if spec_fn is None:
+        continue  # base default (None) => plain per-chunk fallback
+      known = {n.id for n in ast.walk(spec_fn)
+               if isinstance(n, ast.Name)} & config.DEVICE_SPEC_TYPES
+      returns_none_only = all(
+          r.value is None or (isinstance(r.value, ast.Constant)
+                              and r.value.value is None)
+          for r in ast.walk(spec_fn) if isinstance(r, ast.Return))
+      if not known and not returns_none_only:
+        yield Finding(
+            self.id, mod.rel, spec_fn.lineno, spec_fn.col_offset,
+            f"'{cls.name}.device_spec' must return one of "
+            f"{sorted(config.DEVICE_SPEC_TYPES)} (what "
+            "explore.device.build_plan compiles into the fused program) "
+            "or None to opt out of fusion")

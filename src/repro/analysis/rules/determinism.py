@@ -1,0 +1,144 @@
+"""Determinism pack (DET*): sweeps must be replayable from their seeds.
+
+Every number the exploration stack produces is either a pure function of
+a config table or derived from an explicitly seeded RNG; the streaming
+engine's chunk-order-invariance proofs assume it.  These rules catch the
+ways that silently stops being true.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import config
+from repro.analysis.engine import Finding, attr_chain
+from repro.analysis.registry import Rule, register
+
+
+def _in_determinism_scope(rel: str) -> bool:
+  return rel.startswith(config.DETERMINISM_DIRS)
+
+
+def _np_random_call(node: ast.Call):
+  """('np'|'numpy', fn) when the call is np.random.<fn>(...), else None."""
+  chain = attr_chain(node.func)
+  if len(chain) == 3 and chain[0] in ("np", "numpy") \
+      and chain[1] == "random":
+    return chain[2]
+  return None
+
+
+@register
+class GlobalNumpyRandom(Rule):
+  id = "DET001"
+  pack = "determinism"
+  summary = ("call into numpy's hidden module-global RNG "
+             "(np.random.<fn>) instead of a seeded RandomState/Generator")
+
+  def check_module(self, mod, ctx):
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.Call):
+        fn = _np_random_call(node)
+        if fn is not None and fn not in config.SEEDED_RNG_FACTORIES:
+          yield Finding(self.id, mod.rel, node.lineno, node.col_offset,
+                        f"np.random.{fn}(...) draws from the process-global "
+                        "RNG; construct a seeded np.random.RandomState / "
+                        "default_rng and draw from it")
+
+
+@register
+class UnseededRngFactory(Rule):
+  id = "DET002"
+  pack = "determinism"
+  summary = "RNG factory constructed without a seed (entropy from the OS)"
+
+  def check_module(self, mod, ctx):
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.Call):
+        fn = _np_random_call(node)
+        if fn in ("RandomState", "default_rng") and not node.args \
+            and not node.keywords:
+          yield Finding(self.id, mod.rel, node.lineno, node.col_offset,
+                        f"np.random.{fn}() without a seed pulls OS entropy; "
+                        "pass an explicit seed (see "
+                        "repro.core.seeding.derive_seed)")
+
+
+@register
+class WallClock(Rule):
+  id = "DET003"
+  pack = "determinism"
+  summary = ("wall-clock read (time.time / datetime.now) in deterministic "
+             "numeric code")
+
+  def check_module(self, mod, ctx):
+    if not _in_determinism_scope(mod.rel):
+      return
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if len(chain) >= 2 and chain[-2:] in config.WALL_CLOCK_CALLS:
+          yield Finding(self.id, mod.rel, node.lineno, node.col_offset,
+                        f"wall-clock read {'.'.join(chain)}(...) in "
+                        f"{mod.rel}: results must be a function of seeds "
+                        "and configs only (monotonic perf counters for "
+                        "throughput metadata are fine)")
+
+
+@register
+class SetOrderIteration(Rule):
+  id = "DET004"
+  pack = "determinism"
+  summary = ("iteration over a set drives numeric work in hash order "
+             "(string hashing is per-process randomized)")
+
+  def _set_valued(self, node: ast.AST) -> bool:
+    if isinstance(node, ast.Set):
+      return True
+    return isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+        and node.func.id in ("set", "frozenset")
+
+  def check_module(self, mod, ctx):
+    if not _in_determinism_scope(mod.rel):
+      return
+    iters = []
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.For):
+        iters.append(node.iter)
+      elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+        iters.extend(gen.iter for gen in node.generators)
+    for it in iters:
+      if self._set_valued(it):
+        yield Finding(self.id, mod.rel, it.lineno, it.col_offset,
+                      "iterating a set: order is hash-dependent "
+                      "(PYTHONHASHSEED) — wrap in sorted(...) or iterate "
+                      "a list/tuple")
+
+
+@register
+class AdHocSeedArithmetic(Rule):
+  id = "DET005"
+  pack = "determinism"
+  summary = ("arithmetic seed derivation at an RNG constructor "
+             "(collision/overflow-prone) instead of derive_seed")
+
+  def check_module(self, mod, ctx):
+    for node in ast.walk(mod.tree):
+      if not isinstance(node, ast.Call):
+        continue
+      chain = attr_chain(node.func)
+      if chain[-1] not in config.SEED_SINKS:
+        continue
+      # jax.random.key / PRNGKey or np.random.* only — not arbitrary
+      # user functions that happen to share a sink name
+      if chain[-1] in ("PRNGKey", "key") and len(chain) >= 2 \
+          and chain[-2] != "random":
+        continue
+      for arg in node.args:
+        if isinstance(arg, ast.BinOp):
+          yield Finding(
+              self.id, mod.rel, arg.lineno, arg.col_offset,
+              f"ad-hoc seed arithmetic feeding {'.'.join(chain)}: linear "
+              "seed maps collide (seed*k+i meets seed'*k+i') and overflow "
+              "platform int bounds — derive child seeds with "
+              "repro.core.seeding.derive_seed(label, *components)")

@@ -1,0 +1,158 @@
+"""Exactness pack (EXA*): the parity_max_rel_err == 0.0 contract.
+
+The exact device path is bit-identical to numpy because the parity-
+critical modules restrict themselves to IEEE-exact ops (+-*/, sqrt,
+ceil, comparisons) and host-precompute everything else
+(:func:`repro.core.oracle.batch_inputs`).  These rules fence that
+discipline: a float32 cast, an XLA transcendental, or a reassociated
+reduction in those modules is a silent 1-ulp (or worse) parity break.
+
+EXA002/EXA003 scope to *array-context* functions — those taking an
+``xp``/``jnp`` array-module parameter or reached by a jit root — since
+host-only helpers (e.g. the scalar reference oracle) ARE the libm
+reference the contract compares against.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis import config
+from repro.analysis.engine import Finding, attr_chain, func_params
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules._jitgraph import jit_reached_functions
+
+
+def _array_context_nodes(mod) -> Set[ast.AST]:
+  """All AST nodes inside functions that may trace under jax."""
+  fns = set(jit_reached_functions(mod))
+  for fn in ast.walk(mod.tree):
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+        and func_params(fn) & config.ARRAY_MODULE_PARAMS:
+      fns.add(fn)
+  nodes: Set[ast.AST] = set()
+  for fn in fns:
+    nodes.update(ast.walk(fn))
+  return nodes
+
+
+@register
+class Float32Cast(Rule):
+  id = "EXA001"
+  pack = "exactness"
+  summary = "float32 cast/dtype in a parity-critical module (exact = x64)"
+
+  def check_module(self, mod, ctx):
+    if mod.rel not in config.PARITY_CRITICAL:
+      return
+    for node in ast.walk(mod.tree):
+      hit = None
+      if isinstance(node, ast.Attribute) and node.attr == "float32" \
+          and attr_chain(node)[0] in ("np", "numpy", "jnp", "jax"):
+        hit = node
+      elif isinstance(node, ast.Constant) and node.value == "float32":
+        hit = node
+      if hit is not None:
+        yield Finding(self.id, mod.rel, hit.lineno, hit.col_offset,
+                      "float32 in a parity-critical module: the exact "
+                      "contract is float64 end to end (the float32 demo "
+                      "mode lives behind precision='float32' in the "
+                      "backend, not here)")
+
+
+@register
+class DivergentTranscendental(Rule):
+  id = "EXA002"
+  pack = "exactness"
+  summary = ("XLA-divergent transcendental (log/exp/pow/...) via xp/jnp "
+             "in a traceable function of a parity-critical module")
+
+  def check_module(self, mod, ctx):
+    if mod.rel not in config.PARITY_CRITICAL:
+      return
+    ctx_nodes = _array_context_nodes(mod)
+    for node in ast.walk(mod.tree):
+      if node not in ctx_nodes:
+        continue
+      if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if len(chain) == 2 and chain[0] in config.ARRAY_MODULE_PARAMS \
+            and chain[1] in config.DIVERGENT_OPS:
+          yield Finding(
+              self.id, mod.rel, node.lineno, node.col_offset,
+              f"{'.'.join(chain)}(...) may differ from numpy by 1 ulp "
+              "under XLA — host-precompute it into the inputs bundle "
+              "(oracle.batch_inputs) or justify with a suppression")
+      # non-integer literal exponent => pow lowering on the array path
+      if isinstance(node, ast.BinOp) \
+          and isinstance(node.op, ast.Pow) \
+          and isinstance(node.right, ast.Constant) \
+          and isinstance(node.right.value, float) \
+          and not float(node.right.value).is_integer():
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            f"`** {node.right.value}` lowers to a pow call on the array "
+            "path, which XLA computes differently from numpy — "
+            "host-precompute (oracle.batch_inputs) or justify with a "
+            "suppression")
+
+
+@register
+class ReassociatingReduction(Rule):
+  id = "EXA003"
+  pack = "exactness"
+  summary = ("reduction/contraction with reassociable accumulation order "
+             "in a traceable function of a parity-critical module")
+
+  def check_module(self, mod, ctx):
+    if mod.rel not in config.PARITY_CRITICAL:
+      return
+    ctx_nodes = _array_context_nodes(mod)
+    for node in ast.walk(mod.tree):
+      if node not in ctx_nodes or not isinstance(node, ast.Call):
+        continue
+      chain = attr_chain(node.func)
+      if len(chain) == 2 and chain[0] in config.ARRAY_MODULE_PARAMS \
+          and chain[1] in config.REASSOCIATING_CALLS:
+        name = ".".join(chain)
+      elif len(chain) >= 2 and chain[-1] in config.REASSOCIATING_METHODS \
+          and isinstance(node.func, ast.Attribute):
+        name = f"<expr>.{chain[-1]}"
+      else:
+        continue
+      yield Finding(
+          self.id, mod.rel, node.lineno, node.col_offset,
+          f"{name}(...) lets XLA reassociate the accumulation — "
+          "bit-identity needs a fixed-order fold (or a justified "
+          "suppression when the result is integer-exact / outside the "
+          "parity contract)")
+
+
+@register
+class DivergentOpWithoutRef(Rule):
+  id = "EXA004"
+  pack = "exactness"
+  summary = ("kernel uses XLA-divergent ops but ships no ref.py numpy "
+             "oracle to pin its semantics")
+
+  def check_module(self, mod, ctx):
+    m = config.KERNEL_PATH_RE.search(mod.rel)
+    if not m:
+      return
+    uses = []
+    for node in ast.walk(mod.tree):
+      if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if len(chain) >= 2 and chain[-1] in config.DIVERGENT_OPS \
+            and chain[0] in ("jnp", "jax", "lax"):
+          uses.append((node, ".".join(chain)))
+    if not uses:
+      return
+    ref = mod.rel.rsplit("/", 1)[0] + "/ref.py"
+    if not ctx.has_file(ref):
+      node, name = uses[0]
+      yield Finding(
+          self.id, mod.rel, node.lineno, node.col_offset,
+          f"kernel calls {name}(...) (XLA-divergent) but has no sibling "
+          "ref.py — every kernel's numerics must be pinned by a numpy "
+          "reference the interpret-mode tests compare against")

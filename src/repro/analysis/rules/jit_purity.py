@@ -1,0 +1,101 @@
+"""Jit-purity pack (JIT*): traced functions must be pure device programs.
+
+A function reached by ``jax.jit`` / ``pallas_call`` / ``shard_map``
+executes as a traced program: Python side effects run once at trace time
+(then silently never again), host numpy calls either fail on tracers or
+constant-fold surprising values, and ``.item()``-style coercions force a
+blocking device sync inside what is supposed to be an async pipeline.
+Reachability is computed per module (see :mod:`._jitgraph`).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import config
+from repro.analysis.engine import Finding, attr_chain
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules._jitgraph import jit_reached_functions
+
+
+def _reached_nodes(mod):
+  nodes = {}
+  for fn in jit_reached_functions(mod):
+    for n in ast.walk(fn):
+      nodes.setdefault(id(n), (n, fn))
+  return nodes
+
+
+@register
+class PrintInJit(Rule):
+  id = "JIT001"
+  pack = "jit-purity"
+  summary = "print() inside a traced function (runs at trace time only)"
+
+  def check_module(self, mod, ctx):
+    for node, fn in _reached_nodes(mod).values():
+      if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+          and node.func.id == "print":
+        yield Finding(self.id, mod.rel, node.lineno, node.col_offset,
+                      f"print() in traced function '{fn.name}' executes "
+                      "once at trace time and never per call — use "
+                      "jax.debug.print for traced values, or log on the "
+                      "host side")
+
+
+@register
+class GlobalStateInJit(Rule):
+  id = "JIT002"
+  pack = "jit-purity"
+  summary = "global/nonlocal mutation inside a traced function"
+
+  def check_module(self, mod, ctx):
+    for node, fn in _reached_nodes(mod).values():
+      if isinstance(node, (ast.Global, ast.Nonlocal)):
+        kind = "global" if isinstance(node, ast.Global) else "nonlocal"
+        yield Finding(self.id, mod.rel, node.lineno, node.col_offset,
+                      f"{kind} statement in traced function '{fn.name}': "
+                      "mutation happens at trace time only; thread state "
+                      "through arguments/returns instead")
+
+
+@register
+class HostNumpyInJit(Rule):
+  id = "JIT003"
+  pack = "jit-purity"
+  summary = "host numpy call inside a traced function"
+
+  def check_module(self, mod, ctx):
+    for node, fn in _reached_nodes(mod).values():
+      if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain[0] in ("np", "numpy") and len(chain) >= 2 \
+            and chain[1] != "random":  # np.random is DET001's beat
+          yield Finding(
+              self.id, mod.rel, node.lineno, node.col_offset,
+              f"host {'.'.join(chain)}(...) in traced function "
+              f"'{fn.name}' — it fails on tracers or constant-folds at "
+              "trace time; use jnp, or justify (trace-constant "
+              "computation) with a suppression")
+
+
+@register
+class HostCoercionInJit(Rule):
+  id = "JIT004"
+  pack = "jit-purity"
+  summary = (".item()/.tolist()/device_get host coercion inside a traced "
+             "function")
+
+  def check_module(self, mod, ctx):
+    for node, fn in _reached_nodes(mod).values():
+      if not isinstance(node, ast.Call):
+        continue
+      chain = attr_chain(node.func)
+      if (chain[-1] in config.HOST_COERCION_METHODS
+          and isinstance(node.func, ast.Attribute)) \
+          or chain[-1] in config.HOST_COERCION_CALLS:
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            f"host coercion .{chain[-1]}(...) in traced function "
+            f"'{fn.name}' fails on tracers (concretization error) and "
+            "forces a device sync — keep values on device until the "
+            "caller resolves them")

@@ -22,6 +22,7 @@ from repro.core.cnn import (SEARCH_SPACE, SPACE_SIZE, ArchChoice, accuracy,
                             apply_vgg, init_vgg_supernet, max_arch,
                             sample_arch, xent)
 from repro.core.dataflow import ConvLayer
+from repro.core.seeding import derive_seed
 from repro.data.synthetic import CifarLike, CifarLikeConfig
 from repro.train import optimizer as opt_lib
 
@@ -90,7 +91,8 @@ class Supernet:
     """The paper's predictor: sample architectures, evaluate directly."""
     out = []
     for i in range(n_archs):
-      arch = sample_arch(jax.random.PRNGKey(seed * 100_003 + i))
+      arch = sample_arch(jax.random.PRNGKey(
+          derive_seed("supernet-eval", seed, i)))
       out.append((arch, self.evaluate(arch, n_val)))
     return out
 

@@ -16,6 +16,8 @@ from typing import Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
+from repro.core.seeding import derive_seed
+
 
 # ---------------------------------------------------------------------------
 # token stream
@@ -43,8 +45,8 @@ class MarkovTokenStream:
   def sample_batch(self, batch: int, seq_len: int, step: int
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Deterministic (tokens, labels) for a global step."""
-    rng = np.random.RandomState((self.cfg.seed * 1_000_003 + step)
-                                % (2 ** 31))
+    rng = np.random.RandomState(derive_seed("markov-step", self.cfg.seed,
+                                            step))
     v, b = self.cfg.vocab_size, self.cfg.branching
     toks = np.empty((batch, seq_len + 1), np.int32)
     toks[:, 0] = rng.randint(0, v, size=batch)
@@ -98,7 +100,7 @@ class CifarLike:
 
   def __init__(self, cfg: CifarLikeConfig):
     self.cfg = cfg
-    rng = np.random.RandomState(cfg.seed + 999)
+    rng = np.random.RandomState(derive_seed("cifar-classes", cfg.seed))
     c = cfg.n_classes
     self.theta = rng.uniform(0, np.pi, c)
     self.freq = rng.uniform(2.0, 8.0, c)
@@ -108,7 +110,8 @@ class CifarLike:
   def sample(self, n: int, split_seed: int
              ) -> Tuple[np.ndarray, np.ndarray]:
     cfg = self.cfg
-    rng = np.random.RandomState((cfg.seed * 7 + split_seed) % (2 ** 31))
+    rng = np.random.RandomState(derive_seed("cifar-split", cfg.seed,
+                                            split_seed))
     labels = rng.randint(0, cfg.n_classes, n)
     s = cfg.image_size
     yy, xx = np.meshgrid(np.linspace(-1, 1, s), np.linspace(-1, 1, s),

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import re
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
@@ -74,6 +75,50 @@ def ensure_exact_cpu_codegen() -> None:
 
 _EXACT_PROBE: Optional[bool] = None
 _EXACT_WARNED = False
+
+# ISAs without fused multiply-add: capping codegen at any of these keeps
+# XLA's a*b+c bit-identical to numpy's two-op sequence.  AVX2 and up fuse.
+_FMA_FREE_ISAS = frozenset({"SSE2", "SSE4_1", "SSE4_2", "AVX"})
+
+
+def check_exact_codegen_env() -> Optional[str]:
+  """Static pre-flight check of the exact-codegen environment.
+
+  Unlike :func:`exact_codegen_active` this never compiles (so it cannot
+  itself latch the wrong flags); it inspects ``XLA_FLAGS`` and the jax
+  import state and returns a human-readable problem description, or
+  ``None`` when the environment can deliver bit-parity.  Callers that
+  need the contract (``tests/conftest.py``) should fail fast on a
+  non-None return instead of discovering a ~1 ulp drift in a parity
+  assertion minutes later.
+  """
+  import sys
+  flags = os.environ.get("XLA_FLAGS", "")
+  isas = re.findall(r"--xla_cpu_max_isa=(\S+)", flags)
+  passes = re.findall(r"--xla_disable_hlo_passes=(\S+)", flags)
+  if not isas or not passes:
+    return ("XLA_FLAGS is missing the exact-codegen flags "
+            "(--xla_cpu_max_isa / --xla_disable_hlo_passes); call "
+            "ensure_exact_cpu_codegen() before jax compiles anything")
+  if isas[-1].upper() not in _FMA_FREE_ISAS:
+    return (f"XLA_FLAGS pins --xla_cpu_max_isa={isas[-1]}, an ISA with "
+            "FMA contraction — a*b+c fuses to 1-ulp-different results; "
+            "use AVX (or another of "
+            f"{sorted(_FMA_FREE_ISAS)})")
+  if not any("algsimp" in p.split(",") for p in passes):
+    return (f"XLA_FLAGS disables HLO passes ({passes[-1]}) without "
+            "including algsimp — the algebraic simplifier rewrites "
+            "x/const into x*(1/const) and breaks bit-parity")
+  if "jax" in sys.modules:
+    # flags latch at the first backend initialization, not at import —
+    # an already-initialized backend means they were read without ours
+    xb = sys.modules.get("jax._src.xla_bridge")
+    if xb is not None and getattr(xb, "_backends", None):
+      return ("a jax backend was initialized before the exact-codegen "
+              "flags were set; XLA latched its flags (and the x64 "
+              "default) at that first compilation — set XLA_FLAGS in "
+              "the environment before the process starts")
+  return None
 
 
 def exact_codegen_active() -> bool:
@@ -288,7 +333,9 @@ def _pareto_prefilter(cols, spec: ParetoSpec, grouped: bool, jnp, jax):
 def _histogram_counts(v, lo: float, hi: float, bins: int, jnp):
   """np.histogram-identical fixed-edge binning (half-open bins, last
   closed; values pre-clipped into range like HistogramAccumulator)."""
-  edges = np.linspace(float(lo), float(hi), int(bins) + 1)
+  # host np on purpose: lo/hi/bins are trace constants from the HistSpec,
+  # and host-built edges keep binning bit-identical to np.histogram
+  edges = np.linspace(float(lo), float(hi), int(bins) + 1)  # repro: ignore[JIT003]
   v = jnp.clip(v.reshape(-1), edges[0], edges[-1])
   idx = jnp.clip(jnp.searchsorted(jnp.asarray(edges), v, side="right") - 1,
                  0, bins - 1)
@@ -307,7 +354,7 @@ def _reduce_outputs(cols, plan: DevicePlan, grouped: bool, jnp, jax):
       mask = _pareto_prefilter(cols, spec, grouped, jnp, jax).reshape(-1)
       idx = jnp.nonzero(mask, size=plan.cap, fill_value=n)[0]
       out[name] = {
-          "count": mask.sum(),
+          "count": mask.sum(),  # repro: ignore[EXA003] — bool count: integer-exact under any order
           "idx": idx,
           "rows": tuple(jnp.take(b, idx, mode="fill", fill_value=0.0)
                         for b in base),
@@ -323,8 +370,11 @@ def _reduce_outputs(cols, plan: DevicePlan, grouped: bool, jnp, jax):
       }
     elif isinstance(spec, StatsSpec):
       v = cols[spec.col].reshape(-1)
-      mean = v.mean()
-      out[name] = {"n": n, "mean": mean, "m2": ((v - mean) ** 2).sum(),
+      # Welford partials are outside the bit-identity contract (stats are
+      # merge-order-dependent on the host path too); reassociation here
+      # moves mean/m2 by ulps, never the survivor sets
+      mean = v.mean()  # repro: ignore[EXA003]
+      out[name] = {"n": n, "mean": mean, "m2": ((v - mean) ** 2).sum(),  # repro: ignore[EXA003]
                    "min": v.min(), "max": v.max()}
     elif isinstance(spec, HistSpec):
       out[name] = {"counts": _histogram_counts(cols[spec.col], spec.lo,

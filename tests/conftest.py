@@ -6,7 +6,23 @@ algebraic simplifier off to be bit-compatible with numpy.  Other test
 modules compile jax programs before the device-sweep tests run, so the
 flags must enter the environment before anything compiles — conftest
 import is the earliest hook the test process has.
+
+After setting the flags we *verify* them statically: a conflicting
+XLA_FLAGS inherited from the environment (say --xla_cpu_max_isa=AVX512)
+or a backend initialized before this hook would make every parity test
+fail with an inscrutable ~1 ulp drift.  check_exact_codegen_env catches
+that here, with a message saying what to fix, before any test runs.
 """
-from repro.explore.device import ensure_exact_cpu_codegen
+import pytest
+
+from repro.explore.device import (check_exact_codegen_env,
+                                  ensure_exact_cpu_codegen)
 
 ensure_exact_cpu_codegen()
+
+_problem = check_exact_codegen_env()
+if _problem is not None:
+  raise pytest.UsageError(
+      f"exact-codegen preflight failed: {_problem}.  The bit-identity "
+      "parity tests (tests/test_device_sweep.py and friends) cannot pass "
+      "in this environment; fix XLA_FLAGS rather than skipping them.")

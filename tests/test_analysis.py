@@ -1,0 +1,411 @@
+"""repro.analysis: engine mechanics + one seeded regression per rule.
+
+Fixture trees mirror the real layout (core/, explore/, kernels/) so the
+path-scoped rules apply to them unchanged.  The self-scan test at the
+bottom is the contract this PR adds: ``src/repro`` stays clean modulo
+the checked-in baseline, forever.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, scan_paths
+
+REPO = Path(__file__).resolve().parents[1]
+BASELINE = REPO / "analysis_baseline.json"
+
+
+def run_tree(tmp_path, files, tests=None, **kw):
+  """Scan a {relpath: source} fixture tree (tests= adds a tests dir).
+
+  Each call gets a fresh root so repeated calls in one test don't see
+  each other's fixture files.
+  """
+  root = Path(tempfile.mkdtemp(dir=tmp_path)) / "pkg"
+  for rel, src in files.items():
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(src)
+  if tests is not None:
+    tdir = root.parent / "tests"
+    tdir.mkdir(exist_ok=True)
+    for name, src in tests.items():
+      (tdir / name).write_text(src)
+  else:
+    tdir = root.parent / "no_tests_dir"  # nonexistent: disables CON002
+  return scan_paths([root], tests_dir=tdir, **kw)
+
+
+def codes(report):
+  return sorted(f.rule for f in report.findings)
+
+
+# ---------------------------------------------------------------------------
+# determinism pack
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+
+  def test_global_numpy_random_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\nv = np.random.rand(3)\n"})
+    assert codes(rep) == ["DET001"]
+
+  def test_seeded_randomstate_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "rng = np.random.RandomState(0)\n"
+                              "v = rng.rand(3)\n"})
+    assert codes(rep) == []
+
+  def test_unseeded_factory_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "rng = np.random.default_rng()\n"})
+    assert codes(rep) == ["DET002"]
+
+  def test_wall_clock_scoped(self, tmp_path):
+    src = "import time\nt = time.time()\n"
+    assert codes(run_tree(tmp_path, {"core/x.py": src})) == ["DET003"]
+    # out of the determinism dirs: allowed
+    assert codes(run_tree(tmp_path, {"launch/x.py": src})) == []
+    # monotonic benchmarking clocks are allowed everywhere
+    assert codes(run_tree(tmp_path, {
+        "core/y.py": "import time\nt = time.perf_counter()\n"})) == []
+
+  def test_set_iteration_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/x.py":
+                              "out = [y for y in {1, 2, 3}]\n"})
+    assert codes(rep) == ["DET004"]
+    assert codes(run_tree(tmp_path, {
+        "explore/y.py": "out = [y for y in sorted({1, 2, 3})]\n"})) == []
+
+  def test_adhoc_seed_arithmetic_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"data/x.py":
+                              "import numpy as np\n"
+                              "def f(seed, i):\n"
+                              "  return np.random.RandomState(seed * 7 + i)\n"})
+    assert codes(rep) == ["DET005"]
+
+  def test_derive_seed_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"data/x.py":
+                              "import numpy as np\n"
+                              "from repro.core.seeding import derive_seed\n"
+                              "def f(seed, i):\n"
+                              "  return np.random.RandomState("
+                              "derive_seed('x', seed, i))\n"})
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# exactness pack
+# ---------------------------------------------------------------------------
+
+class TestExactness:
+
+  def test_float32_in_parity_module(self, tmp_path):
+    src = "import numpy as np\ndef f(x):\n  return x.astype(np.float32)\n"
+    assert codes(run_tree(tmp_path, {"core/oracle.py": src})) == ["EXA001"]
+    # same code outside the parity-critical set: fine
+    assert codes(run_tree(tmp_path, {"core/other.py": src})) == []
+
+  def test_divergent_transcendental_in_array_context(self, tmp_path):
+    assert codes(run_tree(tmp_path, {
+        "core/oracle.py": "def f(c, xp):\n  return xp.log2(c)\n"
+    })) == ["EXA002"]
+    # sqrt is IEEE-exact; host np.log2 is the libm reference itself
+    assert codes(run_tree(tmp_path, {
+        "core/oracle.py": "import numpy as np\n"
+                          "def f(c, xp):\n  return xp.sqrt(c)\n"
+                          "def g(x):\n  return np.log2(x)\n"})) == []
+
+  def test_fractional_pow_in_array_context(self, tmp_path):
+    assert codes(run_tree(tmp_path, {
+        "explore/device.py": "def f(c, xp):\n  return c ** 0.7\n"
+    })) == ["EXA002"]
+    assert codes(run_tree(tmp_path, {
+        "explore/device.py": "def f(c, xp):\n  return c ** 2\n"})) == []
+
+  def test_reassociating_reduction(self, tmp_path):
+    assert codes(run_tree(tmp_path, {
+        "core/dataflow.py": "def f(v, xp):\n  return xp.dot(v, v)\n"
+    })) == ["EXA003"]
+    assert codes(run_tree(tmp_path, {
+        "core/dataflow.py": "def f(v, xp):\n  return v.sum()\n"
+    })) == ["EXA003"]
+
+  def test_kernel_divergent_op_needs_ref(self, tmp_path):
+    kern = "import jax.numpy as jnp\ndef k(x):\n  return jnp.exp(x)\n"
+    rep = run_tree(tmp_path, {"kernels/foo/kernel.py": kern},
+                   rules=["EXA004"])
+    assert codes(rep) == ["EXA004"]
+    rep = run_tree(tmp_path, {"kernels/foo/kernel.py": kern,
+                              "kernels/foo/ref.py": "def k_ref(x): ...\n"},
+                   rules=["EXA004"])
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity pack
+# ---------------------------------------------------------------------------
+
+class TestJitPurity:
+
+  def test_print_in_decorated_jit(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import jax\n"
+                              "@jax.jit\n"
+                              "def f(x):\n  print(x)\n  return x\n"})
+    assert codes(rep) == ["JIT001"]
+
+  def test_global_mutation_in_jit(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import jax, functools\n"
+                              "S = 0\n"
+                              "@functools.partial(jax.jit)\n"
+                              "def f(x):\n"
+                              "  global S\n  S = 1\n  return x\n"})
+    assert codes(rep) == ["JIT002"]
+
+  def test_host_numpy_propagates_through_calls(self, tmp_path):
+    # f is jitted at a call site; f calls g by name; g uses host numpy
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import jax\nimport numpy as np\n"
+                              "def g(x):\n  return np.zeros_like(x)\n"
+                              "def f(x):\n  return g(x)\n"
+                              "run = jax.jit(f)\n"})
+    assert codes(rep) == ["JIT003"]
+
+  def test_item_coercion_in_pallas_kernel(self, tmp_path):
+    rep = run_tree(tmp_path, {"kernels/foo/kernel.py":
+                              "from jax.experimental import pallas as pl\n"
+                              "def kern(x_ref, o_ref):\n"
+                              "  o_ref[...] = x_ref[...].item()\n"
+                              "def call(x):\n"
+                              "  return pl.pallas_call(kern)(x)\n"},
+                   rules=["JIT004"])
+    assert codes(rep) == ["JIT004"]
+
+  def test_builder_returned_callables_are_roots(self, tmp_path):
+    # explore/device.py's make_eval_fn is a configured jit-root builder:
+    # its returned nested function is traced even with no local jit call
+    rep = run_tree(tmp_path, {"explore/device.py":
+                              "def make_eval_fn(layers, plan):\n"
+                              "  def run(inputs):\n"
+                              "    print('tracing')\n"
+                              "    return inputs\n"
+                              "  return run\n"},
+                   rules=["JIT001"])
+    assert codes(rep) == ["JIT001"]
+
+  def test_host_side_code_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "def f(x):\n"
+                              "  print(x)\n  return np.zeros(3)\n"})
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# contract pack
+# ---------------------------------------------------------------------------
+
+class TestContract:
+
+  def test_kernel_missing_siblings(self, tmp_path):
+    rep = run_tree(tmp_path, {"kernels/foo/kernel.py": "def k(): ...\n"},
+                   rules=["CON001"])
+    assert codes(rep) == ["CON001"]
+    rep = run_tree(tmp_path, {"kernels/foo/kernel.py": "def k(): ...\n",
+                              "kernels/foo/ref.py": "",
+                              "kernels/foo/ops.py": ""},
+                   rules=["CON001"])
+    assert codes(rep) == []
+
+  def test_kernel_needs_interpret_test(self, tmp_path):
+    files = {"kernels/foo/kernel.py": "def k(): ...\n",
+             "kernels/foo/ref.py": "", "kernels/foo/ops.py": ""}
+    rep = run_tree(tmp_path, files, tests={"test_other.py": "# nothing\n"},
+                   rules=["CON002"])
+    assert codes(rep) == ["CON002"]
+    rep = run_tree(tmp_path, files, tests={
+        "test_k.py": "from pkg.kernels.foo import ops\n"
+                     "def test_k():\n"
+                     "  assert ops.k(interpret=True) is not None\n"},
+                   rules=["CON002"])
+    assert codes(rep) == []
+
+  def test_reducer_missing_surface(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/streaming.py":
+                              "class Reducer:\n  ...\n"
+                              "class Broken(Reducer):\n"
+                              "  def fold(self, frame, idx): ...\n"})
+    assert codes(rep) == ["CON003"]
+
+  def test_device_spec_unknown_type(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/streaming.py":
+                              "class Reducer:\n  ...\n"
+                              "class Bad(Reducer):\n"
+                              "  def fold(self, frame, idx): ...\n"
+                              "  def result(self): ...\n"
+                              "  def device_spec(self):\n"
+                              "    return {'k': 3}\n"})
+    assert codes(rep) == ["CON004"]
+
+  def test_device_spec_known_or_none_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/streaming.py":
+                              "class Reducer:\n  ...\n"
+                              "class Good(Reducer):\n"
+                              "  def fold(self, frame, idx): ...\n"
+                              "  def result(self): ...\n"
+                              "  def device_spec(self):\n"
+                              "    from repro.explore.device import TopKSpec\n"
+                              "    return TopKSpec('perf', 5, True)\n"
+                              "class OptOut(Reducer):\n"
+                              "  def fold(self, frame, idx): ...\n"
+                              "  def result(self): ...\n"
+                              "  def device_spec(self):\n"
+                              "    return None\n"})
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics: suppressions, baseline, fingerprints, parse errors
+# ---------------------------------------------------------------------------
+
+BAD_DET = ("import numpy as np\n"
+           "v = np.random.rand(3)\n")
+
+
+class TestEngine:
+
+  def test_inline_suppression_same_line(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "v = np.random.rand(3)  "
+                              "# repro: ignore[DET001]\n"})
+    assert codes(rep) == [] and rep.inline_suppressed == 1
+
+  def test_inline_suppression_previous_line(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "# repro: ignore[DET001]\n"
+                              "v = np.random.rand(3)\n"})
+    assert codes(rep) == [] and rep.inline_suppressed == 1
+
+  def test_wrong_id_does_not_suppress(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py":
+                              "import numpy as np\n"
+                              "v = np.random.rand(3)  "
+                              "# repro: ignore[EXA001]\n"})
+    assert codes(rep) == ["DET001"]
+
+  def test_baseline_round_trip(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py": BAD_DET})
+    assert len(rep.new) == 1
+    base = Baseline.from_findings(rep.findings, justification="legacy")
+    path = tmp_path / "base.json"
+    base.save(path)
+    rep2 = run_tree(tmp_path, {"core/x.py": BAD_DET},
+                    baseline=Baseline.load(path))
+    assert rep2.new == [] and len(rep2.baselined) == 1 and rep2.ok
+
+  def test_baseline_goes_stale_when_line_changes(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py": BAD_DET})
+    base = Baseline.from_findings(rep.findings)
+    rep2 = run_tree(tmp_path, {"core/x.py":
+                               "import numpy as np\n"
+                               "v = np.random.rand(4)\n"},  # text changed
+                    baseline=base)
+    assert len(rep2.new) == 1 and len(rep2.stale_baseline) == 1
+
+  def test_fingerprint_stable_under_line_shift(self, tmp_path):
+    rep1 = run_tree(tmp_path, {"core/x.py": BAD_DET})
+    rep2 = run_tree(tmp_path, {"core/y.py":
+                               "# a new leading comment\n\n" + BAD_DET})
+    # different file name => different fingerprint, so compare via text
+    f1, f2 = rep1.findings[0], rep2.findings[0]
+    assert f1.line != f2.line
+    base = Baseline.from_findings([f2])
+    rep3 = run_tree(tmp_path, {"core/y.py":
+                               "# yet another comment\n\n\n" + BAD_DET},
+                    baseline=base)
+    assert rep3.new == []  # moved again, fingerprint still matches
+
+  def test_parse_error_is_a_finding(self, tmp_path):
+    rep = run_tree(tmp_path, {"core/x.py": "def broken(:\n"})
+    assert codes(rep) == ["ANA001"]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _cli(args, cwd=REPO):
+  env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+  return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                        capture_output=True, text=True, env=env, cwd=cwd)
+
+
+class TestCli:
+
+  def test_bad_tree_fails_json(self, tmp_path):
+    bad = tmp_path / "core"
+    bad.mkdir()
+    (bad / "x.py").write_text(BAD_DET)
+    r = _cli([str(tmp_path), "--baseline", "none", "--format", "json",
+              "--tests-dir", "none"])
+    assert r.returncode == 1
+    data = json.loads(r.stdout)
+    assert data["counts"]["new"] == 1 and not data["ok"]
+
+  def test_sarif_output(self, tmp_path):
+    bad = tmp_path / "core"
+    bad.mkdir()
+    (bad / "x.py").write_text(BAD_DET)
+    out = tmp_path / "out.sarif"
+    r = _cli([str(tmp_path), "--baseline", "none", "--format", "sarif",
+              "--output", str(out), "--tests-dir", "none"])
+    assert r.returncode == 1
+    doc = json.loads(out.read_text())
+    assert doc["version"] == "2.1.0"
+    assert doc["runs"][0]["results"][0]["ruleId"] == "DET001"
+    assert any(rule["id"] == "DET001"
+               for rule in doc["runs"][0]["tool"]["driver"]["rules"])
+
+  def test_list_rules(self):
+    r = _cli(["--list-rules"])
+    assert r.returncode == 0
+    for rid in ("DET001", "EXA002", "JIT003", "CON001"):
+      assert rid in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# the contract itself: src/repro is clean modulo the checked-in baseline
+# ---------------------------------------------------------------------------
+
+class TestSelfScan:
+
+  def test_src_repro_clean_modulo_baseline(self):
+    baseline = Baseline.load(BASELINE)
+    assert len(baseline.entries) <= 5, \
+        "baseline must stay near-empty; fix findings instead of banking them"
+    for e in baseline.entries:
+      assert e.get("justification", "").strip() not in ("", "TODO: justify or fix"), \
+          f"baseline entry {e['fingerprint']} has no justification"
+    rep = scan_paths([REPO / "src" / "repro"], tests_dir=REPO / "tests",
+                     baseline=baseline)
+    assert rep.new == [], "\n".join(
+        f"{f.location()} {f.rule} {f.message}" for f in rep.new)
+    assert rep.stale_baseline == [], \
+        "baseline entries match nothing — prune them"
+
+  def test_cli_self_scan_exits_zero(self):
+    r = _cli(["src/repro", "--baseline", "analysis_baseline.json",
+              "--strict-baseline"])
+    assert r.returncode == 0, r.stdout + r.stderr
