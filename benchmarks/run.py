@@ -28,11 +28,13 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--suite", default="all",
                   choices=("paper", "accuracy", "framework", "coexplore",
-                           "streaming", "all"),
+                           "streaming", "search", "all"),
                   help="benchmark module to run (default: all); "
                        "'coexplore' runs just the joint-sweep perf record, "
                        "'streaming' the constant-memory sweep-engine record "
-                       "(STREAMING_BENCH_SCALE=smoke shrinks it for CI)")
+                       "(STREAMING_BENCH_SCALE=smoke shrinks it for CI), "
+                       "'search' the guided-search front-quality record "
+                       "(SEARCH_BENCH_SCALE=smoke shrinks it for CI)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -46,17 +48,20 @@ def main() -> None:
     from benchmarks import common
     common.JSON_DIR = args.json_dir
 
-  from benchmarks import accuracy_experiments, framework_perf, paper_figures
+  from benchmarks import (accuracy_experiments, framework_perf,
+                          paper_figures, search_perf)
   suites = {
       "paper": paper_figures.ALL,
       "accuracy": accuracy_experiments.ALL,
       "framework": framework_perf.ALL,
       "coexplore": [framework_perf.coexplore_vector_perf],
       "streaming": [framework_perf.streaming_perf],
+      "search": search_perf.ALL,
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL
-                                       + framework_perf.ALL)
+                                       + framework_perf.ALL
+                                       + search_perf.ALL)
   print("name,us_per_call,derived")
   failures = 0
   for fn in benches:

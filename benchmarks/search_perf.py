@@ -1,0 +1,135 @@
+"""Guided-search benchmark: front hypervolume vs random sampling.
+
+The PR-7 tentpole claim: NSGA-II-style guided search through the
+streaming evaluator finds a strictly better Pareto front than uniform
+random sampling at the SAME evaluation budget — measured as exact
+hypervolume (minimization, shared reference point from the union of
+both fronts) on the QUIDAM joint arch x HW space.  The random baseline
+is ``optimize(..., generations=1, population=budget)``: generation 0 of
+the optimizer IS uniform constraint-respecting sampling, so both arms
+share one code path, one dedup policy, and one seeding discipline.
+
+Also records the surrogate-screened arm and re-runs the guided arm at
+the same seed to pin the bit-identity contract in the perf record.
+Records results/BENCH_search.json (SEARCH_BENCH_SCALE=smoke shrinks it
+for CI into its own BENCH_search_smoke.json record).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+
+
+def _front_matrix(front, objectives):
+  from repro.explore.search import objective_matrix
+  return objective_matrix(front, objectives)
+
+
+def search_perf() -> None:
+  import os
+
+  from repro.core.cnn import SEARCH_SPACE, ArchChoice
+  from repro.explore import (DesignSpace, ExplorationSession,
+                             VectorOracleBackend)
+  from repro.explore.search import hypervolume
+
+  smoke = os.environ.get("SEARCH_BENCH_SCALE") == "smoke"
+  n_archs = 8 if smoke else 24
+  population = 16 if smoke else 48
+  generations = 6 if smoke else 24
+  seed = 7
+  objectives = ("top1_err", "energy_mj", "area_mm2")
+
+  rng = np.random.RandomState(0)
+  archs = [ArchChoice(tuple((int(rng.choice(reps)), int(rng.choice(chs)))
+                            for reps, chs in SEARCH_SPACE))
+           for _ in range(n_archs)]
+  accs = rng.uniform(0.5, 0.95, size=n_archs)
+  arch_accs = list(zip(archs, accs))
+
+  space = DesignSpace()
+  session = ExplorationSession(VectorOracleBackend(), space)
+
+  def guided(**kw):
+    t0 = time.perf_counter()
+    res = session.optimize(arch_accs=arch_accs, objectives=objectives,
+                           population=population, generations=generations,
+                           seed=seed, **kw)
+    return res, time.perf_counter() - t0
+
+  res, guided_s = guided()
+  budget = int(res.meta["evaluations"])
+  sur, sur_s = guided(surrogate=True)
+
+  # random arm: one generation whose population is the guided arm's
+  # realized budget — generation 0 is plain uniform sampling
+  t0 = time.perf_counter()
+  rand = session.optimize(arch_accs=arch_accs, objectives=objectives,
+                          population=budget, generations=1, seed=seed + 1)
+  rand_s = time.perf_counter() - t0
+
+  # exact hypervolume under one shared reference: the per-objective max
+  # over the union of all fronts, pushed out 10% so boundary points
+  # contribute volume in every arm
+  mats = {name: _front_matrix(r["pareto"], objectives)
+          for name, r in (("guided", res), ("surrogate", sur),
+                          ("random", rand))}
+  union = np.concatenate(list(mats.values()), axis=0)
+  lo, hi = union.min(axis=0), union.max(axis=0)
+  ref = hi + 0.1 * np.maximum(hi - lo, 1e-12)
+  hv = {name: hypervolume(m, ref) for name, m in mats.items()}
+  ratio = hv["guided"] / max(hv["random"], 1e-300)
+  sur_ratio = hv["surrogate"] / max(hv["random"], 1e-300)
+
+  # same-seed bit-identity: the whole trajectory replays exactly
+  res2, _ = guided()
+  front, front2 = res["pareto"], res2["pareto"]
+  identical = len(front) == len(front2) and all(
+      np.array_equal(front.column(c), front2.column(c))
+      for c in objectives + ("latency_s", "power_mw"))
+
+  record = {
+      "scale": "smoke" if smoke else "full",
+      "space": "quidam-joint",
+      "n_archs": n_archs,
+      "hw_axes": len(space.axes) + 1,  # + pe_type
+      "objectives": list(objectives),
+      "population": population,
+      "generations": generations,
+      "evaluations": budget,
+      "random_evaluations": int(rand.meta["evaluations"]),
+      "guided_seconds": round(guided_s, 4),
+      "surrogate_seconds": round(sur_s, 4),
+      "random_seconds": round(rand_s, 4),
+      "guided_evals_per_sec": round(budget / guided_s, 1),
+      "front_size_guided": int(len(front)),
+      "front_size_surrogate": int(len(sur["pareto"])),
+      "front_size_random": int(len(rand["pareto"])),
+      "hv_ref": [float(r) for r in ref],
+      "hv_guided": hv["guided"],
+      "hv_surrogate": hv["surrogate"],
+      "hv_random": hv["random"],
+      "hv_ratio_guided_vs_random": round(ratio, 3),
+      "hv_ratio_surrogate_vs_random": round(sur_ratio, 3),
+      "same_seed_bit_identical": bool(identical),
+  }
+  path = write_bench_json("search_smoke" if smoke else "search", record)
+  emit("search_perf", guided_s / max(budget, 1) * 1e6,
+       f"evals={budget};front={len(front)};hv_ratio={ratio:.2f}x;"
+       f"surrogate_hv_ratio={sur_ratio:.2f}x;"
+       f"bit_identical={identical};json={path}")
+  if not identical:
+    raise AssertionError("same-seed optimize() reruns diverged")
+  # the acceptance bar (>= 2x) is asserted at full scale; the smoke run
+  # only has a generation or two of headroom, so it just has to win
+  floor = 1.0 if smoke else 2.0
+  if ratio < floor:
+    raise AssertionError(
+        f"guided-search hypervolume ratio {ratio:.3f} below {floor}x "
+        "vs equal-budget random sampling")
+
+
+ALL = [search_perf]

@@ -85,6 +85,11 @@ HOST_COERCION_CALLS = frozenset({"device_get"})
 KERNEL_PATH_RE = re.compile(r"(?:^|/)kernels/([A-Za-z0-9_]+)/kernel\.py$")
 KERNEL_SIBLINGS = ("ref.py", "ops.py")
 STREAMING_MODULE = "explore/streaming.py"
+# The guided-search optimizer: every RNG its proposal operators construct
+# must be seeded by a *direct* derive_seed(...) call (CON005) — stricter
+# than DET005 (which only rejects ad-hoc seed arithmetic), because the
+# search bit-identity contract hangs on labelled per-generation streams.
+SEARCH_MODULE = "explore/search.py"
 REDUCER_BASE = "Reducer"
 REDUCER_REQUIRED_METHODS = ("fold", "result")
 DEVICE_SPEC_TYPES = frozenset({"ParetoSpec", "TopKSpec", "StatsSpec",

@@ -15,7 +15,7 @@ from __future__ import annotations
 import ast
 
 from repro.analysis import config
-from repro.analysis.engine import Finding
+from repro.analysis.engine import Finding, attr_chain
 from repro.analysis.registry import Rule, register
 
 
@@ -129,3 +129,35 @@ class DeviceSpecShape(Rule):
             f"{sorted(config.DEVICE_SPEC_TYPES)} (what "
             "explore.device.build_plan compiles into the fused program) "
             "or None to opt out of fusion")
+
+
+@register
+class SearchSeedRouting(Rule):
+  id = "CON005"
+  pack = "contract"
+  summary = ("guided-search RNG not seeded by a direct derive_seed call "
+             "(same-seed bit-identity of optimize() hangs on labelled "
+             "per-generation streams)")
+
+  def check_module(self, mod, ctx):
+    if mod.rel != config.SEARCH_MODULE:
+      return
+    for node in ast.walk(mod.tree):
+      if not isinstance(node, ast.Call):
+        continue
+      chain = attr_chain(node.func)
+      if chain[-1] not in config.SEED_SINKS:
+        continue
+      args = list(node.args) + [kw.value for kw in node.keywords]
+      derived = any(
+          isinstance(a, ast.Call)
+          and attr_chain(a.func)[-1] == config.SEED_DERIVER
+          for a in args)
+      if not derived:
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            f"search proposal operators must seed '{chain[-1]}' with a "
+            f"direct {config.SEED_DERIVER}(...) call (stricter than "
+            "DET005: no pre-derived variables, no raw seeds) so every "
+            "random stream is a labelled per-generation derivation and "
+            "same-seed optimize() reruns stay bit-identical")

@@ -26,6 +26,14 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        .pareto(), .normalize(), .stats(), .top_k() [frame]
   ExplorationSession   facade driving plain DSE and co-exploration over
                        the same backend + space                 [session]
+  guided search        NSGA-II-style multi-objective optimizer over the
+                       evaluate pipeline — one generation == one chunk
+                       (device-resident on a jit backend), surrogate
+                       screening by expected hypervolume gain, fronts
+                       folded through ParetoAccumulator:
+                       ``session.optimize(...)``; front-quality helpers
+                       ``hypervolume``/``nondominated_ranks``/
+                       ``crowding_distance``                     [search]
   streaming engine     constant-memory, parallel sweeps with online
                        reduction: ParetoAccumulator, TopKAccumulator,
                        StatsAccumulator, HistogramAccumulator fold lazy
@@ -79,6 +87,9 @@ from repro.explore.backend import (EvaluationBackend, OracleBackend,
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
                                  pareto_mask, stable_topk_indices,
                                  summary_stats)
+from repro.explore.search import (crowding_distance, guided_search,
+                                  hypervolume, nondominated_ranks,
+                                  objective_matrix)
 from repro.explore.session import ExplorationSession
 from repro.explore.space import (AXIS_ORDER, Axis, DesignSpace,
                                  VectorConstraint, vector_constraint)
@@ -96,7 +107,9 @@ __all__ = [
     "OracleBackend", "ParetoAccumulator", "PolynomialBackend", "Reducer",
     "ResultFrame", "STREAM_AUTO_MIN_ROWS", "StatsAccumulator",
     "StreamResult", "TopKAccumulator", "VectorConstraint",
-    "VectorOracleBackend", "gbuf_overheads", "gbuf_overheads_table",
-    "pareto_mask", "stable_topk_indices", "stream_co_explore",
-    "stream_explore", "summary_stats", "vector_constraint",
+    "VectorOracleBackend", "crowding_distance", "gbuf_overheads",
+    "gbuf_overheads_table", "guided_search", "hypervolume",
+    "nondominated_ranks", "objective_matrix", "pareto_mask",
+    "stable_topk_indices", "stream_co_explore", "stream_explore",
+    "summary_stats", "vector_constraint",
 ]

@@ -374,7 +374,12 @@ def _reduce_outputs(cols, plan: DevicePlan, grouped: bool, jnp, jax):
       # merge-order-dependent on the host path too); reassociation here
       # moves mean/m2 by ulps, never the survivor sets
       mean = v.mean()  # repro: ignore[EXA003]
-      out[name] = {"n": n, "mean": mean, "m2": ((v - mean) ** 2).sum(),  # repro: ignore[EXA003]
+      # n is a static trace constant: a single-row chunk has zero spread
+      # by definition, and computing (v - mean)**2 for it would turn a
+      # non-finite value into a NaN M2 partial (mirrors
+      # StatsAccumulator.fold's n == 1 short-circuit)
+      m2 = jnp.zeros(()) if n == 1 else ((v - mean) ** 2).sum()  # repro: ignore[EXA003]
+      out[name] = {"n": n, "mean": mean, "m2": m2,
                    "min": v.min(), "max": v.max()}
     elif isinstance(spec, HistSpec):
       out[name] = {"counts": _histogram_counts(cols[spec.col], spec.lo,

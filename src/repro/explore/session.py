@@ -157,6 +157,123 @@ class ExplorationSession:
     frame.meta["eval_us_per_design"] = res.seconds / max(len(frame), 1) * 1e6
     return frame
 
+  def optimize(self, layers: Optional[Sequence[ConvLayer]] = None,
+               network: str = "search", *,
+               arch_accs: Optional[Sequence[Tuple[object, float]]] = None,
+               objectives: Optional[Sequence[str]] = None,
+               maximize: Optional[Sequence[str]] = None,
+               population: int = 32, generations: int = 12, seed: int = 17,
+               image_size: int = 32, surrogate: bool = False,
+               surrogate_pool: int = 4, crossover_rate: float = 0.9,
+               mutation_rate: Optional[float] = None,
+               reducers: Optional[Dict[str, Reducer]] = None
+               ) -> StreamResult:
+    """Guided multi-objective search (:mod:`repro.explore.search`) instead
+    of enumeration: an NSGA-II-style optimizer whose generations evaluate
+    as single chunks through this session's backend, fronts folding
+    through the chunk-order-invariant ParetoAccumulator — the same
+    :class:`StreamResult` the streaming engine returns, same-seed reruns
+    bit-identical.
+
+    Two modes, like :meth:`explore` / :meth:`co_explore`:
+
+      * HW-only (pass ``layers``): searches the DesignSpace for one
+        workload; default objectives ``("perf_per_area", "energy_mj")``
+        (the paper's front axes).  On a ``VectorOracleBackend(jit=True)``
+        each generation is one device-resident ``eval_pending`` dispatch
+        (exact x64: the search trajectory is bit-identical to numpy).
+      * joint (pass ``arch_accs``): the architecture choice becomes one
+        more integer gene, and each generation evaluates grouped by
+        architecture through ``evaluate_table``; default objectives
+        ``("top1_err", "energy_mj", "area_mm2")`` (the Fig. 12 front).
+        Requires a non-jit backend — per-arch layer programs would
+        thrash the bounded jit cache, so this path refuses rather than
+        silently recompiling every generation.
+
+    ``surrogate=True`` adds online polynomial screening (QAPPA-style
+    models refit on all evaluated points each generation) — proposals
+    are pre-ranked by expected hypervolume gain before spending budget.
+    ``meta`` carries evaluations / generations / hypervolume.
+    """
+    from repro.explore import search as _search  # local: keep header lean
+    if (layers is None) == (arch_accs is None):
+      raise ValueError("pass exactly one of layers= (HW-only search) or "
+                       "arch_accs= (joint search)")
+    if arch_accs is None:
+      if objectives is None:
+        objectives = ("perf_per_area", "energy_mj")
+      use_device = bool(getattr(self.backend, "jit", False)) \
+          and hasattr(self.backend, "eval_pending")
+      use_table = hasattr(self.backend, "evaluate_table")
+      layer_key = tuple(layers)
+
+      def evaluate(table, idx, arch):
+        if use_device:
+          return self.backend.eval_pending(table, layer_key, network, idx)
+        if use_table:
+          return self.backend.evaluate_table(table, layers, network), idx
+        return self.backend.evaluate(table.to_configs(), layers, network), idx
+
+      return _search.guided_search(
+          self.space, evaluate, objectives, maximize=maximize,
+          population=population, generations=generations, seed=seed,
+          surrogate=surrogate, surrogate_pool=surrogate_pool,
+          crossover_rate=crossover_rate, mutation_rate=mutation_rate,
+          reducers=reducers)
+
+    from repro.core.supernet import arch_to_layers  # deferred: pulls jax
+    if objectives is None:
+      objectives = ("top1_err", "energy_mj", "area_mm2")
+    if getattr(self.backend, "jit", False):
+      raise ValueError(
+          "joint optimize() needs a non-jit backend: each generation "
+          "evaluates per-architecture layer lists, which would thrash "
+          "the bounded jit program cache; use VectorOracleBackend() or "
+          "PolynomialBackend")
+    use_table = hasattr(self.backend, "evaluate_table")
+    archs = [arch for arch, _ in arch_accs]
+    accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
+    arch_layers = [arch_to_layers(arch, image_size=image_size)
+                   for arch in archs]
+
+    def evaluate(table, idx, arch):
+      # group rows by architecture gene (one evaluate_table per distinct
+      # arch in the generation), then reassemble in genome row order
+      parts: List[ResultFrame] = []
+      rows: List[np.ndarray] = []
+      for aid in np.unique(arch):
+        sel = np.flatnonzero(arch == aid)
+        sub = table.select(sel)
+        if use_table:
+          f = self.backend.evaluate_table(sub, arch_layers[aid], network)
+        else:
+          f = self.backend.evaluate(sub.to_configs(), arch_layers[aid],
+                                    network)
+        f.extra["top1"] = np.full(len(f), accs[aid])
+        f.extra["arch_id"] = np.full(len(f), aid, np.int64)
+        f.arch_lookup = tuple(archs)
+        parts.append(f)
+        rows.append(sel)
+      frame = ResultFrame.concat(parts)
+      perm = np.concatenate(rows)
+      inv = np.empty_like(perm)
+      inv[perm] = np.arange(perm.shape[0])
+      return frame.select(inv), idx
+
+    def features(table, arch):
+      # the arch gene enters the surrogate as its accuracy (the quantity
+      # the top1_err objective actually depends on), not as a raw id
+      base = _search.default_features(table, None)
+      return np.concatenate([base, accs[arch][:, None]], axis=1)
+
+    return _search.guided_search(
+        self.space, evaluate, objectives, maximize=maximize,
+        population=population, generations=generations, seed=seed,
+        surrogate=surrogate, surrogate_pool=surrogate_pool,
+        features=features, crossover_rate=crossover_rate,
+        mutation_rate=mutation_rate, n_archs=len(archs),
+        reducers=reducers)
+
   def co_explore(self, arch_accs: Sequence[Tuple[object, float]],
                  n_hw_per_type: int = 20, seed: int = 3,
                  image_size: int = 32, method: str = "random",

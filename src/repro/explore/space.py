@@ -235,6 +235,13 @@ class DesignSpace:
         mask[idx] &= scalar
     return mask
 
+  def table_mask(self, table: ConfigTable) -> np.ndarray:
+    """Public constraint mask over a candidate table — the guided-search
+    variation operators (:mod:`repro.explore.search`) re-validate every
+    mutated/crossed-over population through this before spending
+    evaluation budget."""
+    return self._table_mask(table)
+
   def _make_table(self, pe_type: str, cols: Dict[str, np.ndarray]
                   ) -> ConfigTable:
     n = len(cols[AXIS_ORDER[0]])

@@ -257,13 +257,26 @@ class StatsAccumulator(Reducer):
     if not v.size:
       return
     mean_b = float(v.mean())
-    self._merge(v.size, mean_b, float(((v - mean_b) ** 2).sum()),
-                float(v.min()), float(v.max()))
+    # a single row has zero spread by definition; computing (v - mean)**2
+    # would turn a non-finite value into a NaN M2 partial (inf - inf)
+    m2_b = 0.0 if v.size == 1 else float(((v - mean_b) ** 2).sum())
+    self._merge(v.size, mean_b, m2_b, float(v.min()), float(v.max()))
 
   def _merge(self, n_b: int, mean_b: float, m2_b: float, min_b: float,
              max_b: float) -> None:
     """Chan's parallel merge of one (count, mean, M2, min, max) partial —
     shared by host chunks and fused device partials."""
+    if not self.n:
+      # adopt the first partial directly: bit-identical to the merge
+      # formula for finite means (delta*n_b/total collapses to mean_b
+      # exactly), and NaN-free when mean_b is +-inf (the general formula
+      # multiplies delta**2 by n == 0 -> inf * 0 -> NaN)
+      self.n = n_b
+      self._mean = mean_b
+      self._m2 += m2_b
+      self._min = min(self._min, min_b)
+      self._max = max(self._max, max_b)
+      return
     delta = mean_b - self._mean
     total = self.n + n_b
     self._m2 += m2_b + delta * delta * self.n * n_b / total

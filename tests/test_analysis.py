@@ -273,6 +273,42 @@ class TestContract:
                               "    return None\n"})
     assert codes(rep) == []
 
+  def test_search_seed_routing_flagged(self, tmp_path):
+    # raw seed into a sink inside the search module: CON005 (stricter
+    # than DET005 — even a clean variable holding a derived seed fails)
+    rep = run_tree(tmp_path, {"explore/search.py":
+                              "import numpy as np\n"
+                              "def gen(seed):\n"
+                              "  return np.random.RandomState(seed)\n"},
+                   rules=["CON005"])
+    assert codes(rep) == ["CON005"]
+    rep = run_tree(tmp_path, {"explore/search.py":
+                              "import numpy as np\n"
+                              "from repro.core.seeding import derive_seed\n"
+                              "def gen(seed, g):\n"
+                              "  s = derive_seed('search-gen', seed, g)\n"
+                              "  return np.random.RandomState(s)\n"},
+                   rules=["CON005"])
+    assert codes(rep) == ["CON005"]
+
+  def test_search_seed_routing_direct_derivation_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/search.py":
+                              "import numpy as np\n"
+                              "from repro.core.seeding import derive_seed\n"
+                              "def gen(seed, g):\n"
+                              "  return np.random.RandomState(\n"
+                              "      derive_seed('search-gen', seed, g))\n"},
+                   rules=["CON005"])
+    assert codes(rep) == []
+
+  def test_search_seed_routing_scoped_to_search_module(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/other.py":
+                              "import numpy as np\n"
+                              "def gen(seed):\n"
+                              "  return np.random.RandomState(seed)\n"},
+                   rules=["CON005"])
+    assert codes(rep) == []
+
 
 # ---------------------------------------------------------------------------
 # engine mechanics: suppressions, baseline, fingerprints, parse errors

@@ -308,6 +308,91 @@ class TestParetoFrontKernel:
       assert not (front & ~keep[g]).any(), g
 
 
+class TestInterleavedSearchGenerations:
+  """Guided-search generations interleave distinct fused plans through
+  one backend: every generation must stay exact while the jit LRU churns,
+  and cap overflow must degrade to the full-chunk fold, never to a wrong
+  front."""
+
+  def test_distinct_plans_stay_exact_under_lru_churn(self, layers, space):
+    from repro.explore import device as device_lib
+    backend = VectorOracleBackend(jit=True)
+    cols = ("perf_per_area", "energy_mj")
+    n_gens = backend.JIT_CACHE_SIZE + 3  # > maxsize: forces eviction
+    overflow_hit = fused_hit = False
+    for g in range(n_gens):
+      tbl = space.sample_table(40, seed=100 + g)
+      base = VectorOracleBackend().evaluate_table(tbl, layers)
+      want = base.select(base.pareto(cols))
+      if g == 0:
+        assert len(want) > 1  # otherwise cap below cannot overflow
+        cap = len(want) - 1   # generation 0: guaranteed overflow
+      else:
+        cap = len(tbl) + g    # distinct plan per generation, no overflow
+      reducers = {"pareto": ParetoAccumulator(cols)}
+      plan = device_lib.build_plan(reducers, joint=False, cap=cap)
+      pend = backend.fused_eval_pending(tbl, layers, "net", plan,
+                                        np.arange(len(tbl), dtype=np.int64))
+      chunk = pend.resolve()
+      kind, frame, _ = chunk.payloads["pareto"]
+      assert kind == "rows"
+      if cap < len(want):
+        overflow_hit = True
+        assert len(frame) == len(tbl)  # full-chunk fallback
+      else:
+        fused_hit = True
+        assert len(frame) <= cap       # O(survivors) transfer
+      reducers["pareto"].fold_payload(chunk.payloads["pareto"])
+      got = reducers["pareto"].result()
+      for col in METRICS:
+        assert np.array_equal(got.column(col), want.column(col)), (g, col)
+      assert len(backend._jit_cache) <= backend.JIT_CACHE_SIZE
+    assert overflow_hit and fused_hit
+    # 11 distinct plans passed through an 8-entry cache: it is full, and
+    # eviction actually happened (the earliest plans are gone)
+    assert len(backend._jit_cache) == backend.JIT_CACHE_SIZE
+
+  def test_device_optimize_matches_numpy_optimize(self, layers, space):
+    """The search trajectory itself is bit-identical across backends:
+    every generation's fitness feeds selection, so one differing ulp
+    would diverge the whole run."""
+    kw = dict(objectives=("perf_per_area", "energy_mj"), population=12,
+              generations=4, seed=5)
+    host = ExplorationSession(VectorOracleBackend(), space).optimize(
+        layers, **kw)
+    dev = ExplorationSession(VectorOracleBackend(chunk_size=32, jit=True),
+                             space).optimize(layers, **kw)
+    assert host.n_rows == dev.n_rows
+    a, b = host["pareto"], dev["pareto"]
+    for col in ("perf_per_area", "energy_mj") + METRICS:
+      assert np.array_equal(a.column(col), b.column(col)), col
+    assert np.array_equal(a.table.pe_rows, b.table.pe_rows)
+    assert list(a.pe_type) == list(b.pe_type)
+
+  def test_fused_stats_single_row_chunk_has_zero_m2(self, layers, space):
+    """Device mirror of StatsAccumulator's n == 1 short-circuit: a
+    single-row chunk's fused stats payload carries M2 == 0.0 (a NaN here
+    would poison every downstream Welford merge)."""
+    from repro.explore import device as device_lib
+    backend = VectorOracleBackend(jit=True)
+    tbl = space.sample_type_table(space.pe_types[0], 1, seed=13)
+    reducers = {"stats": StatsAccumulator("power_mw")}
+    plan = device_lib.build_plan(reducers, joint=False)
+    pend = backend.fused_eval_pending(tbl, layers, "net", plan,
+                                      np.zeros(1, np.int64))
+    kind, payload = pend.resolve().payloads["stats"]
+    assert kind == "stats"
+    assert payload["n"] == 1
+    assert payload["m2"] == 0.0
+    assert payload["min"] == payload["max"] == payload["mean"]
+    # folding it must leave the accumulator NaN-free and mergeable
+    reducers["stats"].fold_payload(("stats", payload))
+    base = VectorOracleBackend().evaluate_table(tbl, layers)
+    got = reducers["stats"].result()
+    assert got["mean"] == float(base.power_mw[0])
+    assert got["std"] == 0.0
+
+
 class TestJitCacheBound:
   def test_lru_evicts_oldest(self):
     cache = _LRUCache(maxsize=2)

@@ -1,0 +1,432 @@
+"""Guided-search harness tests (repro.explore.search).
+
+Front-quality property tests run on analytic benchmark problems with
+known Pareto fronts (ZDT1/ZDT2 in 2-D, DTLZ2 in 3-D) mapped onto a
+DesignSpace: every axis becomes a decision variable x_i = value/32 in
+[0, 1].  The three headline properties:
+
+  * the optimizer's front dominates random sampling at equal evaluation
+    budget (hypervolume, shared reference point);
+  * same-seed reruns are bit-identical (front columns byte-for-byte);
+  * re-folding the recorded generations through a fresh
+    ParetoAccumulator in any shuffled order reproduces the one-shot
+    front exactly (the streaming chunk-order-invariance contract).
+"""
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core.workloads import get_network
+from repro.explore import (DesignSpace, ExplorationSession,
+                           ParetoAccumulator, VectorOracleBackend,
+                           crowding_distance, guided_search, hypervolume,
+                           nondominated_ranks, objective_matrix,
+                           pareto_mask)
+from repro.explore.frame import ResultFrame
+from repro.explore.streaming import Reducer
+
+INTS = ("pe_rows", "pe_cols", "sp_if", "sp_fw", "sp_ps", "gbuf_kb")
+GRID = 33  # values 0..32 -> x = value/32 covers [0, 1] incl. exact 0.5
+
+
+def unit_space() -> DesignSpace:
+  """Every axis an evenly-spaced 33-point decision variable in [0, 1]."""
+  axes = {name: tuple(range(GRID)) for name in INTS}
+  axes["bandwidth_gbps"] = tuple(np.linspace(0.0, 1.0, GRID))
+  return DesignSpace(pe_types=("INT8",), axes=axes)
+
+
+def decision_vars(table) -> np.ndarray:
+  """(n, 7) matrix of x_i in [0, 1] from a unit_space table."""
+  cols = [np.asarray(getattr(table, n), np.float64) / (GRID - 1)
+          for n in INTS]
+  return np.stack(cols + [table.bandwidth_gbps], axis=1)
+
+
+def _frame(objs, table) -> ResultFrame:
+  """Pack up-to-3 minimized objectives into the frame's base columns."""
+  pad = [np.ones(len(table))] * (3 - len(objs))
+  return ResultFrame(*(list(objs) + pad), table.pe_type_strings(),
+                     table=table)
+
+
+def zdt1(table, idx, arch):
+  x = decision_vars(table)
+  f1 = x[:, 0]
+  g = 1.0 + 9.0 * x[:, 1:].mean(axis=1)
+  f2 = g * (1.0 - np.sqrt(f1 / g))
+  return _frame((f1, f2), table), idx
+
+
+def zdt2(table, idx, arch):
+  x = decision_vars(table)
+  f1 = x[:, 0]
+  g = 1.0 + 9.0 * x[:, 1:].mean(axis=1)
+  f2 = g * (1.0 - (f1 / g) ** 2)  # non-convex true front
+  return _frame((f1, f2), table), idx
+
+
+def dtlz2(table, idx, arch):
+  x = decision_vars(table)
+  g = ((x[:, 2:] - 0.5) ** 2).sum(axis=1)  # 0 exactly on the true front
+  c1, s1 = np.cos(np.pi * x[:, 0] / 2), np.sin(np.pi * x[:, 0] / 2)
+  c2, s2 = np.cos(np.pi * x[:, 1] / 2), np.sin(np.pi * x[:, 1] / 2)
+  return _frame(((1 + g) * c1 * c2, (1 + g) * c1 * s2, (1 + g) * s1),
+                table), idx
+
+
+OBJ2 = ("latency_s", "power_mw")
+OBJ3 = ("latency_s", "power_mw", "area_mm2")
+
+
+def front_hv(res, cols, ref) -> float:
+  f = res["pareto"]
+  return hypervolume(
+      np.stack([f.column(c) for c in cols], axis=1), ref)
+
+
+def random_front_hv(space, evaluate, budget, seed, cols, ref) -> float:
+  tbl = space.sample_type_table("INT8", budget, seed=seed)
+  frame, _ = evaluate(tbl, np.arange(len(tbl)), None)
+  obj = np.stack([frame.column(c) for c in cols], axis=1)
+  return hypervolume(obj[pareto_mask(obj)], ref)
+
+
+class _Recorder(Reducer):
+  """Captures every folded (frame, indices) generation for re-folding."""
+
+  def __init__(self):
+    self.chunks = []
+
+  def fold(self, frame, indices):
+    self.chunks.append((frame, np.asarray(indices, np.int64).copy()))
+
+  def result(self):
+    return self.chunks
+
+
+# ---------------------------------------------------------------------------
+# hypervolume: known analytic values + invariances
+# ---------------------------------------------------------------------------
+
+class TestHypervolume:
+
+  def test_known_2d_values(self):
+    assert hypervolume([[0.0, 0.0]], (1.0, 1.0)) == pytest.approx(1.0)
+    # two staircase points: [0,1]x[.5,1] + [.5,1]x[0,1] minus overlap
+    assert hypervolume([[0.0, 0.5], [0.5, 0.0]],
+                       (1.0, 1.0)) == pytest.approx(0.75)
+    # a dominated point adds nothing
+    assert hypervolume([[0.0, 0.5], [0.5, 0.0], [0.6, 0.6]],
+                       (1.0, 1.0)) == pytest.approx(0.75)
+    # points at/outside the reference contribute nothing
+    assert hypervolume([[1.0, 0.0], [2.0, -1.0]], (1.0, 1.0)) == 0.0
+    assert hypervolume(np.zeros((0, 2)), (1.0, 1.0)) == 0.0
+
+  def test_known_3d_values(self):
+    assert hypervolume([[0.0, 0.0, 0.0]],
+                       (1.0, 1.0, 1.0)) == pytest.approx(1.0)
+    # two unit sub-cubes overlapping in a quarter-cube
+    pts = [[0.0, 0.0, 0.5], [0.5, 0.0, 0.0]]
+    assert hypervolume(pts, (1.0, 1.0, 1.0)) == pytest.approx(0.75)
+    # duplicated points count once
+    assert hypervolume(pts + pts, (1.0, 1.0, 1.0)) == pytest.approx(0.75)
+
+  def test_matches_monte_carlo_3d(self):
+    rng = np.random.RandomState(5)
+    pts = rng.rand(24, 3)
+    ref = (1.0, 1.0, 1.0)
+    samples = rng.rand(200_000, 3)
+    dominated = np.zeros(len(samples), np.bool_)
+    for p in pts:
+      dominated |= np.all(samples >= p, axis=1)
+    assert hypervolume(pts, ref) == pytest.approx(
+        dominated.mean(), abs=5e-3)
+
+  def test_row_permutation_invariant(self):
+    rng = np.random.RandomState(11)
+    pts = rng.rand(40, 3)
+    ref = (1.5, 1.5, 1.5)
+    base = hypervolume(pts, ref)
+    for seed in range(3):
+      perm = np.random.RandomState(seed).permutation(len(pts))
+      assert hypervolume(pts[perm], ref) == base
+
+  @settings(max_examples=20, deadline=None, derandomize=True)
+  @given(st.integers(0, 2 ** 31 - 1), st.integers(2, 3))
+  def test_dominated_points_never_change_hv(self, seed, dim):
+    rng = np.random.RandomState(seed % 2 ** 31)
+    pts = rng.rand(12, dim)
+    ref = np.full(dim, 1.25)
+    base = hypervolume(pts, ref)
+    # any point >= an existing point is dominated (or equal): no change
+    extra = np.minimum(pts[rng.randint(len(pts))] + rng.rand(dim), 1.2)
+    assert hypervolume(np.vstack([pts, extra]), ref) == pytest.approx(
+        base, rel=1e-12)
+
+  def test_shape_validation(self):
+    with pytest.raises(ValueError):
+      hypervolume(np.zeros(3), (1.0,))
+    with pytest.raises(ValueError):
+      hypervolume(np.zeros((2, 3)), (1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II building blocks
+# ---------------------------------------------------------------------------
+
+class TestSelectionKernels:
+
+  def test_nondominated_ranks_layered(self):
+    # three nested diagonal fronts
+    obj = np.array([[0.0, 2.0], [1.0, 1.0], [2.0, 0.0],
+                    [1.0, 3.0], [2.0, 2.0],
+                    [3.0, 3.0]])
+    assert nondominated_ranks(obj).tolist() == [0, 0, 0, 1, 1, 2]
+
+  def test_ranks_cover_every_row(self):
+    rng = np.random.RandomState(3)
+    obj = rng.rand(200, 3)
+    ranks = nondominated_ranks(obj)
+    assert ranks.min() == 0
+    for r in range(int(ranks.max()) + 1):
+      # each layer is itself non-dominated
+      layer = obj[ranks == r]
+      assert pareto_mask(layer).all()
+
+  def test_crowding_boundaries_infinite(self):
+    obj = np.array([[0.0, 4.0], [1.0, 3.0], [2.0, 2.0], [3.0, 1.0],
+                    [4.0, 0.0]])
+    crowd = crowding_distance(obj, np.zeros(5, np.int64))
+    assert np.isinf(crowd[0]) and np.isinf(crowd[4])
+    assert np.all(np.isfinite(crowd[1:4]))
+    # evenly spaced interior points have equal crowding
+    assert crowd[1] == pytest.approx(crowd[2]) == pytest.approx(crowd[3])
+
+  def test_objective_matrix_sign_convention(self):
+    frame = ResultFrame(np.array([2.0, 4.0]), np.array([10.0, 20.0]),
+                        np.array([1.0, 1.0]), np.array(["INT8", "INT8"]))
+    m = objective_matrix(frame, ("perf", "latency_s"))
+    assert np.array_equal(m[:, 0], -frame.column("perf"))  # maximized
+    assert np.array_equal(m[:, 1], frame.column("latency_s"))
+
+
+# ---------------------------------------------------------------------------
+# front quality: optimizer vs random at equal budget
+# ---------------------------------------------------------------------------
+
+class TestFrontQuality:
+
+  @pytest.mark.parametrize("problem", [zdt1, zdt2], ids=["zdt1", "zdt2"])
+  def test_beats_random_2d(self, problem):
+    space = unit_space()
+    ref = (1.1, 11.0)
+    res = guided_search(space, problem, OBJ2, population=20,
+                        generations=10, seed=3)
+    hv_opt = front_hv(res, OBJ2, ref)
+    hv_rand = random_front_hv(space, problem, res.n_rows, 3, OBJ2, ref)
+    assert hv_opt > hv_rand
+
+  def test_beats_random_3d(self):
+    space = unit_space()
+    ref = (2.5, 2.5, 2.5)
+    res = guided_search(space, dtlz2, OBJ3, population=24,
+                        generations=10, seed=5)
+    hv_opt = front_hv(res, OBJ3, ref)
+    hv_rand = random_front_hv(space, dtlz2, res.n_rows, 5, OBJ3, ref)
+    assert hv_opt > hv_rand
+    # the optimizer's front sits near the g == 0 sphere: |f| close to 1
+    f = res["pareto"]
+    norms = np.sqrt(sum(f.column(c) ** 2 for c in OBJ3))
+    assert norms.mean() < 1.25  # random fronts average well above this
+
+  @settings(max_examples=5, deadline=None, derandomize=True)
+  @given(st.integers(0, 2 ** 31 - 1))
+  def test_beats_random_any_seed(self, seed):
+    space = unit_space()
+    ref = (1.1, 11.0)
+    res = guided_search(space, zdt1, OBJ2, population=20,
+                        generations=10, seed=seed)
+    hv_opt = front_hv(res, OBJ2, ref)
+    hv_rand = random_front_hv(space, zdt1, res.n_rows, seed, OBJ2, ref)
+    assert hv_opt > hv_rand
+
+  def test_surrogate_mode_beats_random(self):
+    space = unit_space()
+    ref = (1.1, 11.0)
+    res = guided_search(space, zdt1, OBJ2, population=20,
+                        generations=10, seed=3, surrogate=True)
+    assert res.meta["surrogate"] == 1.0
+    hv_opt = front_hv(res, OBJ2, ref)
+    hv_rand = random_front_hv(space, zdt1, res.n_rows, 3, OBJ2, ref)
+    assert hv_opt > hv_rand
+
+  def test_front_approaches_true_zdt1_front(self):
+    # true front: f2 = 1 - sqrt(f1); every optimizer front point should
+    # end well below the g ~= 5.5 band random sampling lives in
+    res = guided_search(unit_space(), zdt1, OBJ2, population=24,
+                        generations=16, seed=7)
+    f = res["pareto"]
+    excess = f.column("power_mw") - (1.0 - np.sqrt(f.column("latency_s")))
+    assert np.all(excess >= -1e-12)  # never below the analytic front
+    assert excess.mean() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# determinism + streaming-fold exactness
+# ---------------------------------------------------------------------------
+
+class TestDeterminism:
+
+  @pytest.mark.parametrize("surrogate", [False, True],
+                           ids=["evolutionary", "surrogate"])
+  def test_same_seed_bit_identical(self, surrogate):
+    space = unit_space()
+    runs = [guided_search(space, zdt1, OBJ2, population=16, generations=6,
+                          seed=11, surrogate=surrogate) for _ in range(2)]
+    a, b = (r["pareto"] for r in runs)
+    assert len(a) == len(b)
+    for col in OBJ2:
+      assert np.array_equal(a.column(col), b.column(col))
+    assert np.array_equal(a.table.pe_rows, b.table.pe_rows)
+    assert runs[0].n_rows == runs[1].n_rows
+    assert runs[0].meta["hypervolume"] == runs[1].meta["hypervolume"]
+
+  def test_different_seeds_differ(self):
+    space = unit_space()
+    a = guided_search(space, zdt1, OBJ2, population=16, generations=6,
+                      seed=1)
+    b = guided_search(space, zdt1, OBJ2, population=16, generations=6,
+                      seed=2)
+    assert not np.array_equal(a["pareto"].column("latency_s"),
+                              b["pareto"].column("latency_s"))
+
+  @pytest.mark.parametrize("shuffle_seed", [0, 1, 2])
+  def test_shuffled_generation_folds_reproduce_front(self, shuffle_seed):
+    space = unit_space()
+    res = guided_search(
+        space, zdt1, OBJ2, population=16, generations=8, seed=4,
+        reducers={"pareto": ParetoAccumulator(OBJ2), "rec": _Recorder()})
+    one_shot = res["pareto"]
+    chunks = list(res["rec"])
+    assert len(chunks) == int(res.meta["generations"])
+    order = np.random.RandomState(shuffle_seed).permutation(len(chunks))
+    acc = ParetoAccumulator(OBJ2)
+    for i in order:
+      acc.fold(*chunks[i])
+    refolded = acc.result()
+    assert len(refolded) == len(one_shot)
+    for col in OBJ2:
+      assert np.array_equal(refolded.column(col), one_shot.column(col))
+    for knob in ("pe_rows", "bandwidth_gbps"):
+      assert np.array_equal(getattr(refolded.table, knob),
+                            getattr(one_shot.table, knob))
+
+  def test_never_reevaluates_a_design_point(self):
+    res = guided_search(unit_space(), zdt1, OBJ2, population=12,
+                        generations=8, seed=9,
+                        reducers={"pareto": ParetoAccumulator(OBJ2),
+                                  "rec": _Recorder()})
+    keys = [k for frame, _ in res["rec"] for k in frame.table.row_keys()]
+    assert len(keys) == res.n_rows
+    assert len(set(keys)) == len(keys)
+
+  def test_exhausted_space_stops_early(self):
+    # 4-point space: one live axis, everything else pinned
+    axes = {name: (1,) for name in INTS}
+    axes["pe_rows"] = (1, 2, 3, 4)
+    axes["bandwidth_gbps"] = (1.0,)
+    space = DesignSpace(pe_types=("INT8",), axes=axes)
+    res = guided_search(space, zdt1, OBJ2, population=2, generations=10,
+                        seed=0)
+    assert res.n_rows <= 4
+    assert res.meta["generations"] < 10
+
+  def test_constraints_respected(self):
+    from repro.explore import vector_constraint
+    space = unit_space()
+    space = DesignSpace(
+        pe_types=("INT8",),
+        axes={a.name: a.values for a in space.axes},
+        constraints=(vector_constraint(lambda c: c.pe_rows <= 16,
+                                       lambda t: t.pe_rows <= 16),))
+    res = guided_search(space, zdt1, OBJ2, population=16, generations=6,
+                        seed=2, reducers={"rec": _Recorder()})
+    for frame, _ in res["rec"]:
+      assert np.all(frame.table.pe_rows <= 16)
+
+  def test_parameter_validation(self):
+    space = unit_space()
+    with pytest.raises(ValueError):
+      guided_search(space, zdt1, (), population=8, generations=2)
+    with pytest.raises(ValueError):
+      guided_search(space, zdt1, OBJ2, population=1)
+    with pytest.raises(ValueError):
+      guided_search(space, zdt1, OBJ2, generations=0)
+    with pytest.raises(ValueError):
+      guided_search(space, zdt1, OBJ2, surrogate_pool=1)
+    with pytest.raises(ValueError):
+      guided_search(space, zdt1, OBJ2, n_archs=0)
+
+
+# ---------------------------------------------------------------------------
+# session.optimize: real oracle backends
+# ---------------------------------------------------------------------------
+
+class TestSessionOptimize:
+
+  @pytest.fixture(scope="class")
+  def layers(self):
+    return get_network("resnet20")[:3]
+
+  def test_hw_search_returns_stream_result(self, layers):
+    session = ExplorationSession(VectorOracleBackend())
+    res = session.optimize(layers, population=8, generations=3, seed=1)
+    front = res["pareto"]
+    assert len(front) >= 1
+    assert res.meta["evaluations"] == res.n_rows == 24
+    assert res.meta["generations"] == 3
+    # default objectives: the paper's (perf_per_area, energy) axes
+    assert front.column("perf_per_area").shape == (len(front),)
+    assert pareto_mask(objective_matrix(
+        front, ("perf_per_area", "energy_mj"))).all()
+
+  def test_hw_search_bit_identical(self, layers):
+    session = ExplorationSession(VectorOracleBackend())
+    a = session.optimize(layers, population=8, generations=3, seed=1)
+    b = session.optimize(layers, population=8, generations=3, seed=1)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      assert np.array_equal(a["pareto"].column(col),
+                            b["pareto"].column(col))
+
+  def test_joint_search(self, layers):
+    from repro.core.supernet import SEARCH_SPACE, ArchChoice
+    rng = np.random.RandomState(7)
+    arch_accs = []
+    for i in range(5):
+      arch = ArchChoice(tuple(
+          (int(rng.choice(reps)), int(rng.choice(chs)))
+          for reps, chs in SEARCH_SPACE))
+      arch_accs.append((arch, 0.6 + 0.05 * i))
+    session = ExplorationSession(VectorOracleBackend())
+    res = session.optimize(arch_accs=arch_accs, population=8,
+                           generations=3, seed=2, image_size=16)
+    front = res["pareto"]
+    assert len(front) >= 1
+    assert front.arch_lookup  # archs resolvable
+    aid = front.column("arch_id")
+    assert np.all((aid >= 0) & (aid < len(arch_accs)))
+    assert np.all(front.column("top1_err")
+                  == 1.0 - np.asarray([arch_accs[int(i)][1] for i in aid]))
+    # joint rerun is bit-identical too
+    res2 = session.optimize(arch_accs=arch_accs, population=8,
+                            generations=3, seed=2, image_size=16)
+    for col in ("top1_err", "energy_mj", "area_mm2"):
+      assert np.array_equal(front.column(col), res2["pareto"].column(col))
+
+  def test_mode_validation(self, layers):
+    session = ExplorationSession(VectorOracleBackend())
+    with pytest.raises(ValueError, match="exactly one"):
+      session.optimize()
+    with pytest.raises(ValueError, match="exactly one"):
+      session.optimize(layers, arch_accs=[(None, 0.5)])

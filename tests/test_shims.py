@@ -1,0 +1,172 @@
+"""Regression pins for the compat shims (core/dse.py, core/coexplore.py).
+
+These are the paper-reproduction entry points; each test computes the
+expected answer through the public ``repro.explore`` path and asserts
+the shim's output matches bit-for-bit — front membership AND ordering —
+so refactors of the explore package can't silently drift them.
+"""
+import numpy as np
+import pytest
+
+from repro.core import coexplore, dse
+from repro.core.supernet import SEARCH_SPACE, ArchChoice
+from repro.core.table import ConfigTable
+from repro.core.workloads import get_network
+from repro.explore import (DesignSpace, ExplorationSession, OracleBackend,
+                           PolynomialBackend, ResultFrame,
+                           VectorOracleBackend, pareto_mask, summary_stats)
+
+PE_TYPES = ("INT8", "INT16")  # INT16 present: the normalization anchor
+
+
+@pytest.fixture(scope="module")
+def layers():
+  return get_network("resnet20")[:3]
+
+
+@pytest.fixture(scope="module")
+def backend(layers):
+  # small fit; the process-wide fit cache makes reruns free
+  return PolynomialBackend.fit(PE_TYPES, degree=3, n_train=40,
+                               layers=layers, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfgs():
+  space = DesignSpace(pe_types=PE_TYPES)
+  return space.sample(6, seed=1)  # 6 per type, both PE types
+
+
+@pytest.fixture(scope="module")
+def arch_accs():
+  rng = np.random.RandomState(7)
+  out = []
+  for i in range(3):
+    arch = ArchChoice(tuple(
+        (int(rng.choice(reps)), int(rng.choice(chs)))
+        for reps, chs in SEARCH_SPACE))
+    out.append((arch, 0.55 + 0.1 * i))
+  return out
+
+
+class TestDseShim:
+
+  def test_pareto_front_is_pareto_mask(self):
+    rng = np.random.RandomState(0)
+    for d in (2, 3):
+      obj = rng.rand(64, d)
+      got = dse.pareto_front(obj)
+      assert np.array_equal(got, pareto_mask(obj))
+      # semantic pin: a kept row is dominated by no other row
+      for i in np.flatnonzero(got):
+        dom = np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1)
+        assert not dom.any()
+
+  def test_evaluate_with_oracle_pins_explore_path(self, cfgs, layers):
+    pts = dse.evaluate_with_oracle(cfgs, layers, "net")
+    frame = OracleBackend().evaluate(cfgs, layers, "net")
+    vec = VectorOracleBackend().evaluate_table(
+        ConfigTable.from_configs(cfgs), layers, "net")
+    assert [p.cfg for p in pts] == list(cfgs)  # ordering preserved
+    for col, attr in (("latency_s", "latency_s"), ("power_mw", "power_mw"),
+                      ("area_mm2", "area_mm2")):
+      got = np.asarray([getattr(p, attr) for p in pts])
+      assert np.array_equal(got, frame.column(col))
+      # scalar shim == vectorized table path, bit for bit (PR-2 contract)
+      assert np.array_equal(got, vec.column(col))
+
+  def test_evaluate_with_models_pins_table_path(self, backend, cfgs, layers):
+    pts = dse.evaluate_with_models(backend.models, cfgs, layers, "net")
+    frame = backend.evaluate_table(ConfigTable.from_configs(cfgs), layers,
+                                   "net")
+    assert [p.cfg for p in pts] == list(cfgs)
+    for col in ("latency_s", "power_mw", "area_mm2"):
+      assert np.array_equal(
+          np.asarray([getattr(p, col) for p in pts]), frame.column(col))
+
+  def test_best_int16_reference_pins_reference_index(self, backend, cfgs,
+                                                     layers):
+    pts = dse.evaluate_with_models(backend.models, cfgs, layers, "net")
+    ref = dse.best_int16_reference(pts)
+    frame = ResultFrame.from_points(pts)
+    assert ref is pts[frame.reference_index("perf_per_area")]
+    assert ref.cfg.pe_type == "INT16"
+    int16 = [p for p in pts if p.cfg.pe_type == "INT16"]
+    assert ref.perf_per_area == max(p.perf_per_area for p in int16)
+
+  def test_normalized_metrics_pins_frame_normalize(self, backend, cfgs,
+                                                   layers):
+    pts = dse.evaluate_with_models(backend.models, cfgs, layers, "net")
+    ppa_n, energy_n = dse.normalized_metrics(pts)
+    norm = ResultFrame.from_points(pts).normalize(ref="best-int16")
+    assert np.array_equal(ppa_n, norm.perf_per_area)
+    assert np.array_equal(energy_n, norm.energy)
+    # explicit-ref variant pins the tuple-ref path
+    ref = dse.best_int16_reference(pts)
+    ppa_r, energy_r = dse.normalized_metrics(pts, ref=ref)
+    assert np.array_equal(ppa_r, ppa_n)
+    assert np.array_equal(energy_r, energy_n)
+
+  def test_distribution_stats_pins_summary_stats(self):
+    v = np.random.RandomState(4).rand(101)
+    assert dse.distribution_stats(v) == summary_stats(v)
+
+
+class TestCoexploreShim:
+
+  @pytest.fixture(scope="class")
+  def pts(self, backend, arch_accs):
+    return coexplore.co_explore(backend.models, arch_accs, n_hw_per_type=4,
+                                seed=3, image_size=16, pe_types=PE_TYPES)
+
+  def test_co_explore_pins_session_path(self, backend, arch_accs, pts):
+    session = ExplorationSession(backend, DesignSpace(pe_types=PE_TYPES))
+    frame = session.co_explore(arch_accs, n_hw_per_type=4, seed=3,
+                               image_size=16, vectorized=False)
+    assert len(pts) == len(frame)
+    lookup = frame.arch_lookup
+    assert np.array_equal(
+        np.asarray([p.latency_s for p in pts]), frame.latency_s)
+    assert np.array_equal(
+        np.asarray([p.power_mw for p in pts]), frame.power_mw)
+    assert np.array_equal(
+        np.asarray([p.area_mm2 for p in pts]), frame.area_mm2)
+    assert np.array_equal(
+        np.asarray([p.top1 for p in pts]), frame.extra["top1"])
+    # row order: (pe_type, arch, hw) loop order, arch identity via lookup
+    assert [p.cfg.pe_type for p in pts] == list(frame.pe_type)
+    assert [p.arch for p in pts] \
+        == [lookup[int(a)] for a in frame.extra["arch_id"]]
+
+  def test_copoint_derived_fields(self, pts):
+    for p in pts[:8]:
+      assert p.energy_mj == p.power_mw * p.latency_s
+      assert p.top1_err == 1.0 - p.top1
+
+  def test_normalize_and_front_pins_explore_ops(self, pts):
+    d = coexplore.normalize_and_front(pts)
+    # expected, via the public explore surface on the same rows
+    frame = ResultFrame(
+        latency_s=np.asarray([p.latency_s for p in pts]),
+        power_mw=np.asarray([p.power_mw for p in pts]),
+        area_mm2=np.asarray([p.area_mm2 for p in pts]),
+        pe_type=np.asarray([p.cfg.pe_type for p in pts]),
+        extra={"top1": np.asarray([p.top1 for p in pts], np.float64)})
+    e_ref = frame.energy_mj[frame.reference_index("energy")]
+    a_ref = frame.area_mm2[frame.reference_index("area")]
+    err = frame.column("top1_err")
+    energy = frame.energy_mj / e_ref
+    area = frame.area_mm2 / a_ref
+    assert np.array_equal(d["err"], err)
+    assert np.array_equal(d["energy"], energy)
+    assert np.array_equal(d["area"], area)
+    assert np.array_equal(d["types"], frame.pe_type)
+    assert np.array_equal(d["front_energy"],
+                          pareto_mask(np.stack([err, energy], axis=1)))
+    assert np.array_equal(d["front_area"],
+                          pareto_mask(np.stack([err, area], axis=1)))
+    # membership sanity: every front point is genuinely non-dominated
+    obj = np.stack([err, energy], axis=1)
+    for i in np.flatnonzero(d["front_energy"]):
+      dom = np.all(obj <= obj[i], axis=1) & np.any(obj < obj[i], axis=1)
+      assert not dom.any()

@@ -208,6 +208,55 @@ class TestStatsAndHistogram:
     out = StatsAccumulator("energy_mj").result()
     assert all(np.isnan(x) for x in out.values())
 
+  def test_stats_single_row_chunks_match_one_shot(self):
+    # row-at-a-time folding exercises the n == 1 zero-M2 short-circuit;
+    # must agree with the one-shot fold (and numpy) instead of poisoning
+    # the Welford merge with NaN partials
+    rng = np.random.RandomState(8)
+    frame = random_frame(rng, 37)
+    acc = StatsAccumulator("energy_mj")
+    for i in range(len(frame)):
+      acc.fold(frame.select(np.asarray([i])), np.asarray([i]))
+    got = acc.result()
+    v = frame.energy_mj
+    assert got["count"] == len(frame)
+    assert got["min"] == v.min() and got["max"] == v.max()
+    np.testing.assert_allclose(got["mean"], v.mean(), rtol=1e-12)
+    np.testing.assert_allclose(got["std"], v.std(), rtol=1e-9)
+
+  def test_stats_single_nonfinite_row_has_no_nan_partial(self):
+    # a 1-row chunk holding inf used to yield m2 = (inf - inf)**2 = NaN,
+    # and merging a +-inf mean into the empty state NaN'd the M2 term;
+    # both paths must now stay NaN-free for count/min/max
+    def one_row(val):
+      return ResultFrame(np.asarray([val]), np.asarray([1.0]),
+                         np.asarray([1.0]), np.asarray(["INT8"]))
+
+    acc = StatsAccumulator("latency_s")
+    acc.fold(one_row(np.inf), np.asarray([0]))
+    acc.fold(one_row(2.0), np.asarray([1]))
+    acc.fold(one_row(3.0), np.asarray([2]))
+    got = acc.result()
+    assert got["count"] == 3
+    assert got["min"] == 2.0
+    assert got["max"] == np.inf
+
+  def test_stats_first_partial_adopted_bit_identically(self):
+    # the n == 0 adopt-directly shortcut must be bit-identical to the
+    # general Chan merge for finite inputs
+    rng = np.random.RandomState(9)
+    v = rng.rand(50) * 1e3
+    frame = ResultFrame(v, np.ones(50), np.ones(50),
+                        np.asarray(["INT8"] * 50))
+    acc = StatsAccumulator("latency_s")
+    acc.fold(frame, np.arange(50))
+    mean_b = float(v.mean())
+    m2_b = float(((v - mean_b) ** 2).sum())
+    # what the general formula computes from the (0, 0.0, 0.0) state
+    assert acc._mean == 0.0 + (mean_b - 0.0) * 50 / 50
+    assert acc._m2 == m2_b + (mean_b - 0.0) ** 2 * 0 * 50 / 50
+    assert acc.n == 50
+
   def test_histogram_counts_and_quantiles(self):
     rng = np.random.RandomState(3)
     frame = random_frame(rng, 500)
