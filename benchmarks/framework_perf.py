@@ -464,6 +464,13 @@ def streaming_perf() -> None:
       "pareto3d_points": n_nd,
       "pareto3d_seconds": round(nd_s, 4),
       "pareto3d_front_size": int(nd_mask.sum()),
+      # failure accounting (explore/resilience.py): a healthy canonical
+      # run records zeros; nonzero values mean the rates above include
+      # retried/demoted/resumed chunks and are not comparable
+      "n_retries": int(res.meta["n_retries"]),
+      "n_demotions": int(res.meta["n_demotions"]),
+      "n_resumed_chunks": int(res.meta["n_resumed_chunks"]),
+      "n_overflows": int(res.meta["n_overflows"]),
   }
   # smoke runs land in their own record so reproducing the CI command
   # locally never clobbers the canonical full-scale tentpole evidence
@@ -487,6 +494,120 @@ def streaming_perf() -> None:
     raise AssertionError(f"x64 device parity broken: {parity}")
 
 
+def resilience_perf() -> None:
+  """The fault-tolerance claims, measured: (a) kill-and-resume — a
+  streamed co-exploration killed mid-sweep by an injected FaultPlan
+  resumes from its journal, skipping the already-folded chunks, with
+  bit-identical survivors; (b) graceful degradation — seeded transient
+  device faults heal by retry/ladder with unchanged results; both with
+  retry/demotion/resume accounting and overheads recorded to
+  results/BENCH_resilience.json.  RESILIENCE_BENCH_SCALE=smoke (CI)
+  shrinks the sweep while still exercising every path."""
+  import os
+  import tempfile
+
+  from benchmarks.common import write_bench_json
+  from repro.core.cnn import SEARCH_SPACE, ArchChoice
+  from repro.explore import (ChunkError, DesignSpace, ExplorationSession,
+                             Fault, FaultPlan, ParetoAccumulator,
+                             ResiliencePolicy, RetryPolicy,
+                             TopKAccumulator, VectorOracleBackend)
+
+  smoke = os.environ.get("RESILIENCE_BENCH_SCALE") == "smoke"
+  n_archs = 16 if smoke else 200
+  n_hw_per_type = 20 if smoke else 500
+  chunk_size = 4096 if smoke else 65536
+  cols = ("top1_err", "energy_mj", "area_mm2")
+  metric_cols = ("latency_s", "power_mw", "area_mm2")
+
+  rng = np.random.RandomState(0)
+  archs = [ArchChoice(tuple((int(rng.choice(reps)), int(rng.choice(chs)))
+                            for reps, chs in SEARCH_SPACE))
+           for _ in range(n_archs)]
+  arch_accs = list(zip(archs, rng.uniform(0.5, 0.95, size=n_archs)))
+  space = DesignSpace()
+  session = ExplorationSession(VectorOracleBackend(chunk_size=chunk_size),
+                               space)
+
+  def sweep(**kw):
+    return session.co_explore(
+        arch_accs, n_hw_per_type=n_hw_per_type, seed=3, image_size=16,
+        stream=True, chunk_size=chunk_size,
+        reducers={"pareto": ParetoAccumulator(cols),
+                  "top": TopKAccumulator(50, by="energy_mj")}, **kw)
+
+  t0 = time.perf_counter()
+  ref = sweep()
+  healthy_s = time.perf_counter() - t0
+  n_chunks = int(ref.meta["n_chunks"])
+
+  def identical(res) -> bool:
+    return all(
+        np.array_equal(getattr(res["pareto"], c), getattr(ref["pareto"], c))
+        and np.array_equal(getattr(res["top"], c), getattr(ref["top"], c))
+        for c in metric_cols)
+
+  # (a) kill mid-sweep, resume from the journal
+  kill_at = n_chunks // 2
+  with tempfile.TemporaryDirectory() as jdir:
+    pol = ResiliencePolicy(
+        retry=RetryPolicy(sleep=lambda s: None),
+        fault_plan=FaultPlan([Fault("kill", kill_at, "task")]))
+    killed_index = -1
+    try:
+      sweep(policy=pol, resume_from=jdir)
+    except ChunkError as e:
+      killed_index = e.chunk_index
+    t0 = time.perf_counter()
+    resumed = sweep(resume_from=jdir)
+    resume_s = time.perf_counter() - t0
+  resume_identical = identical(resumed)
+  n_resumed = int(resumed.meta["n_resumed_chunks"])
+
+  # (b) seeded transient faults healed by retry (no wall-waiting)
+  plan = FaultPlan.seeded(7, n_chunks, p_raise=0.5, layer="task")
+  pol = ResiliencePolicy(retry=RetryPolicy(sleep=lambda s: None),
+                         fault_plan=plan)
+  t0 = time.perf_counter()
+  healed = sweep(policy=pol)
+  faulty_s = time.perf_counter() - t0
+  healed_identical = identical(healed)
+
+  record = {
+      "n_pairs": int(ref.n_rows),
+      "n_chunks": n_chunks,
+      "healthy_seconds": round(healthy_s, 4),
+      "kill_at_chunk": kill_at,
+      "killed_chunk_index": killed_index,
+      "n_resumed_chunks": n_resumed,
+      "resume_seconds": round(resume_s, 4),
+      "resume_fraction_of_healthy": round(resume_s / max(healthy_s, 1e-9),
+                                          3),
+      "resume_bit_identical": bool(resume_identical),
+      "injected_faults": len(plan.faults),
+      "faults_fired": int(plan.n_fired),
+      "n_retries": int(healed.meta["n_retries"]),
+      "n_demotions": int(healed.meta["n_demotions"]),
+      "faulty_seconds": round(faulty_s, 4),
+      "retry_overhead": round(faulty_s / max(healthy_s, 1e-9), 3),
+      "healed_bit_identical": bool(healed_identical),
+  }
+  path = write_bench_json("resilience_smoke" if smoke else "resilience",
+                          record)
+  emit("resilience_perf", healthy_s / max(ref.n_rows, 1) * 1e6,
+       f"chunks={n_chunks};killed_at={killed_index};resumed={n_resumed};"
+       f"resume_identical={resume_identical};"
+       f"retries={record['n_retries']};"
+       f"healed_identical={healed_identical};json={path}")
+  if killed_index != kill_at:
+    raise AssertionError(
+        f"injected kill surfaced chunk {killed_index}, wanted {kill_at}")
+  if not resume_identical:
+    raise AssertionError("resumed survivors diverged from healthy run")
+  if not healed_identical:
+    raise AssertionError("retry-healed survivors diverged from healthy run")
+
+
 ALL = [kernel_codecs, train_step_small_lm, serve_engine_throughput,
        explore_api_perf, explore_vector_perf, coexplore_vector_perf,
-       streaming_perf]
+       streaming_perf, resilience_perf]

@@ -28,13 +28,15 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--suite", default="all",
                   choices=("paper", "accuracy", "framework", "coexplore",
-                           "streaming", "search", "all"),
+                           "streaming", "search", "resilience", "all"),
                   help="benchmark module to run (default: all); "
                        "'coexplore' runs just the joint-sweep perf record, "
                        "'streaming' the constant-memory sweep-engine record "
                        "(STREAMING_BENCH_SCALE=smoke shrinks it for CI), "
                        "'search' the guided-search front-quality record "
-                       "(SEARCH_BENCH_SCALE=smoke shrinks it for CI)")
+                       "(SEARCH_BENCH_SCALE=smoke shrinks it for CI), "
+                       "'resilience' the kill-and-resume / fault-healing "
+                       "record (RESILIENCE_BENCH_SCALE=smoke for CI)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -57,6 +59,7 @@ def main() -> None:
       "coexplore": [framework_perf.coexplore_vector_perf],
       "streaming": [framework_perf.streaming_perf],
       "search": search_perf.ALL,
+      "resilience": [framework_perf.resilience_perf],
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL

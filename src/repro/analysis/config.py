@@ -80,6 +80,13 @@ JIT_ROOT_BUILDERS = {
 HOST_COERCION_METHODS = frozenset({"item", "tolist", "block_until_ready"})
 HOST_COERCION_CALLS = frozenset({"device_get"})
 
+# -- robustness pack ---------------------------------------------------------
+
+# Directories under the fault-tolerance contract: every exception either
+# reaches the resilience layer's retry/demotion accounting or is
+# re-raised as a typed ChunkError — never silently swallowed (ROB001).
+ROBUSTNESS_DIRS = ("explore/",)
+
 # -- contract pack -----------------------------------------------------------
 
 KERNEL_PATH_RE = re.compile(r"(?:^|/)kernels/([A-Za-z0-9_]+)/kernel\.py$")

@@ -1,3 +1,3 @@
 """Rule packs — importing this module registers every rule."""
 from repro.analysis.rules import (contract, determinism, exactness,  # noqa: F401
-                                  jit_purity)
+                                  jit_purity, robustness)

@@ -1,0 +1,68 @@
+"""Robustness pack (ROB*): failures must surface, not vanish.
+
+The resilience layer (``explore/resilience.py``) gives every failure a
+typed path: retryable errors re-execute through ``RetryPolicy``, rung
+exhaustion demotes down the device->host ladder, and anything terminal
+is journaled and re-raised as ``ChunkError`` with the failing chunk's
+global index.  That accounting only works if exceptions actually reach
+it — a bare ``except:`` or a handler that silently discards the error
+hides faults from the retry/demotion counters and turns a diagnosable
+chunk failure into a wrong-answer sweep.  These rules keep the
+exploration stack's handlers honest.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import config
+from repro.analysis.engine import Finding
+from repro.analysis.registry import Rule, register
+
+
+def _in_robustness_scope(rel: str) -> bool:
+  return rel.startswith(config.ROBUSTNESS_DIRS)
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+  """True when the handler body discards the exception without acting.
+
+  A body counts as swallowing when every statement is ``pass``, ``...``,
+  or a bare constant (docstring-style) — no re-raise, no logging, no
+  fallback value, no state update.
+  """
+  for stmt in handler.body:
+    if isinstance(stmt, ast.Pass):
+      continue
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+      continue
+    return False
+  return True
+
+
+@register
+class BareExcept(Rule):
+  id = "ROB001"
+  pack = "robustness"
+  summary = ("bare except / silently swallowed exception in the "
+             "exploration stack")
+
+  def check_module(self, mod, ctx):
+    if not _in_robustness_scope(mod.rel):
+      return
+    for node in ast.walk(mod.tree):
+      if not isinstance(node, ast.ExceptHandler):
+        continue
+      if node.type is None:
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            "bare 'except:' catches SystemExit/KeyboardInterrupt and "
+            "hides the failure from the resilience layer's retry/"
+            "demotion accounting; catch a concrete exception type and "
+            "let everything else propagate to ChunkError")
+      elif _swallows(node):
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            "exception handler discards the error without acting "
+            "(body is only pass/...); re-raise, degrade to a fallback "
+            "rung, or return an explicit sentinel so the failure stays "
+            "visible to retry/demotion accounting")

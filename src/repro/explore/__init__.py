@@ -47,6 +47,12 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        fused on-device pareto/top-k/stats reduction with
                        O(survivors) transfer, async dispatch-ahead
                        (imported lazily — see note below)        [device]
+  resilience           fault-tolerant sweeps: chunk retry (RetryPolicy),
+                       graceful device->host degradation + watchdog
+                       (ResiliencePolicy), journaled checkpoint/resume
+                       (SweepJournal + ``resume_from=``), deterministic
+                       fault injection (FaultPlan) — results stay
+                       bit-identical through all of it        [resilience]
 
 Quickstart::
 
@@ -87,6 +93,10 @@ from repro.explore.backend import (EvaluationBackend, OracleBackend,
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
                                  pareto_mask, stable_topk_indices,
                                  summary_stats)
+from repro.explore.resilience import (ChunkError, ChunkTask, Fault,
+                                      FaultInjected, FaultPlan, InjectedHang,
+                                      ResiliencePolicy, RetryPolicy, Rung,
+                                      SweepJournal, SweepKilled, sweep_key)
 from repro.explore.search import (crowding_distance, guided_search,
                                   hypervolume, nondominated_ranks,
                                   objective_matrix)
@@ -101,15 +111,17 @@ from repro.explore.streaming import (STREAM_AUTO_MIN_ROWS,
                                      stream_explore)
 
 __all__ = [
-    "AXIS_ORDER", "Axis", "CollectAccumulator", "ConfigTable", "DesignPoint",
-    "DesignSpace", "EvaluationBackend", "ExplorationSession",
-    "HistogramAccumulator", "JointTable", "LayerStack", "Normalized",
-    "OracleBackend", "ParetoAccumulator", "PolynomialBackend", "Reducer",
-    "ResultFrame", "STREAM_AUTO_MIN_ROWS", "StatsAccumulator",
-    "StreamResult", "TopKAccumulator", "VectorConstraint",
+    "AXIS_ORDER", "Axis", "ChunkError", "ChunkTask", "CollectAccumulator",
+    "ConfigTable", "DesignPoint", "DesignSpace", "EvaluationBackend",
+    "ExplorationSession", "Fault", "FaultInjected", "FaultPlan",
+    "HistogramAccumulator", "InjectedHang", "JointTable", "LayerStack",
+    "Normalized", "OracleBackend", "ParetoAccumulator", "PolynomialBackend",
+    "Reducer", "ResiliencePolicy", "ResultFrame", "RetryPolicy", "Rung",
+    "STREAM_AUTO_MIN_ROWS", "StatsAccumulator", "StreamResult",
+    "SweepJournal", "SweepKilled", "TopKAccumulator", "VectorConstraint",
     "VectorOracleBackend", "crowding_distance", "gbuf_overheads",
     "gbuf_overheads_table", "guided_search", "hypervolume",
     "nondominated_ranks", "objective_matrix", "pareto_mask",
     "stable_topk_indices", "stream_co_explore", "stream_explore",
-    "summary_stats", "vector_constraint",
+    "summary_stats", "sweep_key", "vector_constraint",
 ]

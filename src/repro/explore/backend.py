@@ -282,6 +282,47 @@ class VectorOracleBackend:
         joint.pe_type_strings(), (), network, table=joint,
         extra={"arch_id": joint.arch_ids()})
 
+  # -- host fallback rungs --------------------------------------------------
+  # The degradation ladder's terminal rung (repro.explore.resilience):
+  # same formulas, numpy only — never touches jax even when ``jit=True``,
+  # so a compile/OOM/transfer failure cannot recur here.  Bit-identical
+  # to the device path by the exact-codegen parity contract.
+
+  def host_evaluate_table(self, table: ConfigTable,
+                          layers: Sequence[ConvLayer],
+                          network: str = "net") -> ResultFrame:
+    n = len(table)
+    lat = np.empty(n)
+    pwr = np.empty(n)
+    area = np.empty(n)
+    lo = 0
+    for chunk in table.chunks(self.chunk_size):
+      l, p, a = self._eval_chunk(chunk, layers)
+      hi = lo + len(chunk)
+      lat[lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
+      lo = hi
+    return ResultFrame(lat, pwr, area, table.pe_type_strings(), (),
+                       network, table=table)
+
+  def host_co_evaluate_table(self, hw: ConfigTable, stack: LayerStack,
+                             network: str = "coexplore") -> ResultFrame:
+    n_hw, n_archs = len(hw), stack.n_archs
+    lat = np.empty((n_archs, n_hw))
+    pwr = np.empty(n_hw)
+    area = np.empty(n_hw)
+    hw_chunk = max(1, self.chunk_size // max(n_archs, 1))
+    lo = 0
+    for chunk in hw.chunks(hw_chunk):
+      l, p, a = self._co_eval_chunk(chunk, stack)
+      hi = lo + len(chunk)
+      lat[:, lo:hi], pwr[lo:hi], area[lo:hi] = l, p, a
+      lo = hi
+    joint = hw.cross(n_archs)
+    return ResultFrame(
+        lat.reshape(-1), np.tile(pwr, n_archs), np.tile(area, n_archs),
+        joint.pe_type_strings(), (), network, table=joint,
+        extra={"arch_id": joint.arch_ids()})
+
   # -- optional device path -------------------------------------------------
   # Joint programs take the sweep content (inputs bundle, dedup'd stack
   # arrays) as arguments — one LRU entry per (path kind, plan, precision),
@@ -544,7 +585,8 @@ class PolynomialBackend:
         with np.load(path) as data:
           if str(data["meta/fit_key"]) == want:
             return cls._from_npz(data, path)
-      except Exception:  # corrupt/stale/foreign file -> refit and overwrite
+      # corrupt/stale/foreign cache file -> refit and overwrite below
+      except Exception:  # repro: ignore[ROB001]
         pass
     backend = cls.fit(pe_types, degree, n_train, layers, seed)
     backend.save(path, fit_key=want)

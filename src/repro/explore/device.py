@@ -472,10 +472,14 @@ class FusedChunk:
   """Resolved fused-chunk result: one payload per reducer (see
   ``Reducer.fold_payload``) plus row counts for engine accounting —
   ``n_transferred`` is how many evaluated rows actually crossed the
-  device boundary (the O(survivors), not O(chunk_size), evidence)."""
+  device boundary (the O(survivors), not O(chunk_size), evidence);
+  ``n_overflows`` counts pareto reducers whose survivor count blew the
+  plan cap and fell back to the full chunk frame — the first rung of
+  the graceful-degradation story (see repro.explore.resilience)."""
   payloads: Dict[str, tuple]
   n_rows: int
   n_transferred: int = 0
+  n_overflows: int = 0
 
 
 class _PendingBase:
@@ -554,11 +558,13 @@ class PendingFused(_PendingBase):
     payloads: Dict[str, tuple] = {}
     full = None
     transferred = 0
+    overflows = 0
     for name, spec in self.plan:
       out = self._reduced[name]
       if isinstance(spec, ParetoSpec):
         count = int(out["count"])
         if count > self.plan.cap:  # rare: fetch the full chunk instead
+          overflows += 1
           if full is None:
             full = self.full_frame()
             transferred += len(self.indices)
@@ -579,4 +585,4 @@ class PendingFused(_PendingBase):
       else:
         payloads[name] = ("hist", np.asarray(out["counts"], np.int64))
     return FusedChunk(payloads=payloads, n_rows=len(self.indices),
-                      n_transferred=transferred)
+                      n_transferred=transferred, n_overflows=overflows)

@@ -1,0 +1,472 @@
+"""Fault tolerance for production-scale exploration: retry, degradation,
+checkpoint/resume, and deterministic fault injection.
+
+QUIDAM's pre-characterized PPA models only pay off if a sweep actually
+*finishes* — a 10M-pair streamed co-exploration or a long guided-search
+run must survive the transient failures any long-lived service sees:
+flaky jit compiles, device OOMs, hung dispatches, worker exceptions,
+whole-process kills.  Everything here leans on one structural fact: a
+chunk is a pure function of ``(space, chunk_index, seed)``, so
+re-evaluating it — on any rung of the ladder, in any later process — is
+bit-identical.  That turns fault tolerance into bookkeeping:
+
+  retry        :class:`RetryPolicy` — seeded, bounded exponential
+               backoff around each rung dispatch, built on the single
+               retry primitive :func:`repro.train.fault_tolerance.
+               retrying` (injectable ``sleep`` — tests never wall-wait)
+  degradation  :class:`ResiliencePolicy` — per-chunk fallback ladder
+               ``fused-device -> unfused-device -> numpy`` (each rung a
+               :class:`Rung` inside a :class:`ChunkTask`); exhausted
+               retries or a watchdogged/hung resolution demote to the
+               next rung, and the numpy rung has no device failure
+               modes left.  Every demotion is counted and surfaced in
+               ``StreamResult.meta``.
+  resume       reducer ``snapshot()/restore()`` state serialized by a
+               :class:`SweepJournal` — a content-addressed checkpoint
+               store keyed by (design-space hash, oracle version,
+               reducer plan, sweep params).  ``run_stream`` /
+               ``stream_explore`` / ``stream_co_explore`` /
+               ``guided_search`` accept ``resume_from=`` and skip
+               chunks already folded; chunk-order invariance of the
+               reducers makes the resumed final fronts bit-identical to
+               an uninterrupted run.
+  injection    :class:`FaultPlan` — seeded schedules of raise / hang /
+               kill-at-chunk-k faults installable at the task, device,
+               and backend layers; the tests and the resilience
+               benchmark drive every path above through it
+               deterministically.
+
+The journal is deliberately backend-agnostic: the exact-codegen parity
+contract (``parity_max_rel_err == 0.0``) means a sweep checkpointed from
+the device path can resume on the numpy path and vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import threading
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import oracle
+from repro.core.seeding import derive_seed
+from repro.train.fault_tolerance import StepFailure, retrying
+
+
+# ---------------------------------------------------------------------------
+# failure taxonomy
+# ---------------------------------------------------------------------------
+
+class FaultInjected(RuntimeError):
+  """A :class:`FaultPlan`-injected transient fault.  Subclasses
+  RuntimeError so the default retry policy treats it exactly like a real
+  transient device error."""
+
+
+class SweepKilled(Exception):
+  """A :class:`FaultPlan`-injected process death.  Deliberately NOT a
+  RuntimeError: no retry policy or ladder rung may absorb it — it must
+  abort the run the way a real kill would, leaving only the journal."""
+
+
+class ChunkTimeout(RuntimeError):
+  """A pending chunk resolution exceeded the watchdog timeout."""
+
+
+class InjectedHang(ChunkTimeout):
+  """Deterministic stand-in for a hung resolution: raised at the
+  resolve point *instead of* blocking, so tests exercise the demotion
+  path without consuming the watchdog's wall-clock budget."""
+
+
+class ChunkError(RuntimeError):
+  """A chunk failed fatally.  Carries the chunk's global index so a
+  caller (or operator) knows exactly where the sweep stopped."""
+
+  def __init__(self, chunk_index: int, message: str = ""):
+    self.chunk_index = int(chunk_index)
+    detail = f": {message}" if message else ""
+    super().__init__(f"chunk {self.chunk_index} failed{detail}")
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("raise", "hang", "kill")
+FAULT_LAYERS = ("task", "device", "backend")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+  """One scheduled fault: ``kind`` fires at chunk ``chunk`` when the
+  ladder touches ``layer``, at most ``times`` times (a transient with
+  ``times <= max_retries`` is healed by retry alone; a larger budget
+  forces a demotion)."""
+  kind: str
+  chunk: int
+  layer: str = "task"
+  times: int = 1
+
+  def __post_init__(self):
+    if self.kind not in FAULT_KINDS:
+      raise ValueError(f"unknown fault kind {self.kind!r}")
+    if self.layer not in FAULT_LAYERS:
+      raise ValueError(f"unknown fault layer {self.layer!r}")
+    if self.times <= 0:
+      raise ValueError(f"times must be positive, got {self.times}")
+
+
+class FaultPlan:
+  """A deterministic schedule of injected faults.
+
+  Installed on a :class:`ResiliencePolicy`; the policy consults the plan
+  at each rung dispatch (``check``) and each pending resolution
+  (``check_resolve``).  Thread-safe — the streaming engine dispatches
+  chunks from a pool — and exactly reproducible: the same plan against
+  the same sweep fires the same faults at the same chunks.
+  """
+
+  def __init__(self, faults: Iterable[Fault] = ()):
+    self.faults: Tuple[Fault, ...] = tuple(faults)
+    self._remaining = [f.times for f in self.faults]
+    self.n_fired = 0
+    self._lock = threading.Lock()
+
+  @classmethod
+  def seeded(cls, seed: int, n_chunks: int, p_raise: float = 0.25,
+             p_hang: float = 0.0, p_kill: float = 0.0,
+             layer: str = "device", times: int = 1) -> "FaultPlan":
+    """Random-but-reproducible schedule: per chunk, independent draws
+    decide whether a raise / hang / kill fault is planted (hangs always
+    target the device layer — that is where resolutions block)."""
+    rng = np.random.RandomState(derive_seed("fault-plan", seed))
+    faults: List[Fault] = []
+    for chunk in range(int(n_chunks)):
+      u = rng.random_sample(3)
+      if u[0] < p_raise:
+        faults.append(Fault("raise", chunk, layer, times))
+      if u[1] < p_hang:
+        faults.append(Fault("hang", chunk, "device", times))
+      if u[2] < p_kill:
+        faults.append(Fault("kill", chunk, layer, times))
+    return cls(faults)
+
+  def _fire(self, layer: str, chunk: int,
+            kinds: Tuple[str, ...]) -> Optional[str]:
+    with self._lock:
+      for i, f in enumerate(self.faults):
+        if (f.chunk == chunk and f.layer == layer and f.kind in kinds
+            and self._remaining[i] > 0):
+          self._remaining[i] -= 1
+          self.n_fired += 1
+          return f.kind
+    return None
+
+  def check(self, layer: str, chunk: int) -> None:
+    """Dispatch-point hook: raises the scheduled fault, if any."""
+    kind = self._fire(layer, chunk, ("kill", "raise"))
+    if kind == "kill":
+      raise SweepKilled(f"injected kill at {layer} layer, chunk {chunk}")
+    if kind == "raise":
+      raise FaultInjected(f"injected fault at {layer} layer, chunk {chunk}")
+
+  def check_resolve(self, layer: str, chunk: int) -> None:
+    """Resolution-point hook: a scheduled hang raises
+    :class:`InjectedHang` instead of blocking."""
+    if self._fire(layer, chunk, ("hang",)):
+      raise InjectedHang(f"injected hang at {layer} layer, chunk {chunk}")
+
+
+# ---------------------------------------------------------------------------
+# retry policy (thin, injectable wrapper over train.fault_tolerance)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetryPolicy:
+  """Bounded exponential-backoff retry for one rung dispatch.
+
+  Delegates to :func:`repro.train.fault_tolerance.retrying` — the same
+  primitive that guards trainer steps — so there is exactly one retry
+  semantics in the stack.  ``sleep`` is injectable; tests pass a no-op
+  and never wall-wait."""
+  max_retries: int = 2
+  base_delay: float = 0.01
+  backoff: float = 2.0
+  sleep: Callable[[float], None] = time.sleep
+  retry_exceptions: Tuple = (RuntimeError,)
+
+  def call(self, fn: Callable[[], object],
+           on_retry: Optional[Callable[[int, Exception], None]] = None):
+    """Run ``fn`` with retries; raises
+    :class:`~repro.train.fault_tolerance.StepFailure` on exhaustion.
+    ``on_retry(attempt, exc)`` fires only for failures that will
+    actually be retried, so it counts re-executions exactly."""
+    def note(attempt: int, exc: Exception) -> None:
+      if on_retry is not None and attempt < self.max_retries:
+        on_retry(attempt, exc)
+    return retrying(fn, max_retries=self.max_retries, on_failure=note,
+                    retry_exceptions=self.retry_exceptions,
+                    sleep=self.sleep, base_delay=self.base_delay,
+                    backoff=self.backoff)()
+
+
+# ---------------------------------------------------------------------------
+# the degradation ladder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Rung:
+  """One way to evaluate a chunk.  ``fn`` returns either the plain
+  ``(frame, indices)`` pair or a pending handle with ``resolve()``;
+  ``layer`` is the :class:`FaultPlan` layer this rung dispatches
+  through."""
+  name: str
+  fn: Callable[[], object]
+  layer: str = "backend"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkTask:
+  """A chunk plus its fallback ladder, best rung first.  Calling the
+  task directly (no policy installed) runs the best rung only — the
+  zero-overhead healthy path the engine used before resilience."""
+  index: int
+  rungs: Tuple[Rung, ...]
+
+  def __call__(self):
+    return self.rungs[0].fn()
+
+
+class ResiliencePolicy:
+  """Executes :class:`ChunkTask` ladders with retry, demotion, and an
+  optional resolution watchdog.
+
+  Per rung: dispatch under :class:`RetryPolicy`; if retries exhaust (or
+  a pending resolution later fails/hangs), demote to the next rung —
+  the terminal numpy rung has no device failure modes, so a sweep
+  completes unless the host itself is gone.  Demotion preserves
+  bit-identity: whichever rung computes a chunk, the exact-codegen
+  parity contract makes the folded rows identical.  ``n_retries`` /
+  ``n_demotions`` are totalled here and surfaced in
+  ``StreamResult.meta``.  :class:`SweepKilled` is never absorbed.
+  """
+
+  def __init__(self, retry: Optional[RetryPolicy] = None,
+               fault_plan: Optional[FaultPlan] = None,
+               resolve_timeout: Optional[float] = None):
+    self.retry = RetryPolicy() if retry is None else retry
+    self.fault_plan = fault_plan
+    self.resolve_timeout = resolve_timeout
+    self.n_retries = 0
+    self.n_demotions = 0
+    self.demotions: List[Tuple[int, str, str]] = []  # (chunk, rung, why)
+    self._lock = threading.Lock()
+
+  # -- accounting -----------------------------------------------------------
+
+  def _note_retry(self) -> None:
+    with self._lock:
+      self.n_retries += 1
+
+  def _note_demotion(self, chunk: int, rung: str, why: str) -> None:
+    with self._lock:
+      self.n_demotions += 1
+      self.demotions.append((chunk, rung, why))
+
+  # -- execution ------------------------------------------------------------
+
+  def execute(self, task):
+    """Run a task through its ladder.  Plain callables (no ladder) pass
+    straight through so legacy task iterables keep working."""
+    if not isinstance(task, ChunkTask):
+      return task()
+    return self._run_ladder(task, 0)
+
+  def _attempt(self, task: ChunkTask, rung: Rung) -> Callable[[], object]:
+    def attempt():
+      if self.fault_plan is not None:
+        self.fault_plan.check("task", task.index)
+        if rung.layer != "task":
+          self.fault_plan.check(rung.layer, task.index)
+      return rung.fn()
+    return attempt
+
+  def _run_ladder(self, task: ChunkTask, start: int):
+    last: Optional[Exception] = None
+    for r in range(start, len(task.rungs)):
+      rung = task.rungs[r]
+      try:
+        out = self.retry.call(self._attempt(task, rung),
+                              on_retry=lambda a, e: self._note_retry())
+      except StepFailure as e:
+        if r + 1 < len(task.rungs):
+          self._note_demotion(task.index, rung.name, "dispatch")
+          last = e
+          continue
+        raise
+      if hasattr(out, "resolve") and r + 1 < len(task.rungs):
+        return _GuardedPending(self, task, r, out)
+      return out
+    raise StepFailure(f"chunk {task.index}: every ladder rung "
+                      "exhausted") from last  # pragma: no cover
+
+  def _timed_resolve(self, handle):
+    """Resolve a pending handle under the watchdog: the resolution runs
+    on a daemon helper thread and a bounded join decides whether it hung
+    (the abandoned thread keeps draining the device queue harmlessly —
+    its result is discarded and the chunk recomputed on a lower rung)."""
+    if self.resolve_timeout is None:
+      return handle.resolve()
+    box: List[Tuple[str, object]] = []
+
+    def run():
+      try:
+        box.append(("ok", handle.resolve()))
+      except BaseException as e:  # relayed to the watchdog thread below
+        box.append(("err", e))
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    t.join(self.resolve_timeout)
+    if not box:
+      raise ChunkTimeout(
+          f"resolution exceeded the {self.resolve_timeout}s watchdog")
+    tag, val = box[0]
+    if tag == "err":
+      raise val
+    return val
+
+
+class _GuardedPending:
+  """Wraps a device pending handle issued by a non-terminal rung: the
+  resolution goes through the fault plan and the watchdog, and any
+  transient failure demotes to the remaining rungs synchronously."""
+
+  def __init__(self, policy: ResiliencePolicy, task: ChunkTask,
+               rung_pos: int, handle):
+    self._policy = policy
+    self._task = task
+    self._pos = rung_pos
+    self._handle = handle
+
+  def resolve(self):
+    policy, task = self._policy, self._task
+    rung = task.rungs[self._pos]
+    demotable = (ChunkTimeout, StepFailure) + policy.retry.retry_exceptions
+    try:
+      if policy.fault_plan is not None:
+        policy.fault_plan.check_resolve(rung.layer, task.index)
+      return policy._timed_resolve(self._handle)
+    except SweepKilled:
+      raise
+    except demotable:
+      # hung or failed resolution: recompute on the remaining rungs —
+      # the chunk is a pure function of its index, so whichever rung
+      # finishes it, the folded rows are bit-identical
+      policy._note_demotion(task.index, rung.name, "resolve")
+      out = policy._run_ladder(task, self._pos + 1)
+      if hasattr(out, "resolve"):
+        out = out.resolve()
+      return out
+
+
+# ---------------------------------------------------------------------------
+# content-addressed checkpoint journal
+# ---------------------------------------------------------------------------
+
+JOURNAL_VERSION = 1
+
+
+def _sha(parts: Iterable[str]) -> str:
+  h = hashlib.sha256()
+  for p in parts:
+    h.update(p.encode("utf-8"))
+    h.update(b"\x00")
+  return h.hexdigest()
+
+
+def space_fingerprint(space) -> str:
+  """Content hash of a DesignSpace's sampling identity: PE types, axis
+  names/values, and the constraint count.  (Constraint *bodies* are
+  opaque callables; swapping one while keeping the count is on the
+  caller, exactly like swapping the evaluate hook of a search.)"""
+  parts = ["space", ",".join(space.pe_types)]
+  for axis in space.axes:
+    parts.append(axis.name + "=" + ",".join(repr(v) for v in axis.values))
+  parts.append(f"n_constraints={len(space.constraints)}")
+  return _sha(parts)
+
+
+def reducers_fingerprint(reducers: Dict[str, object]) -> str:
+  """Content hash of a reducer plan: names plus each reducer's own
+  ``fingerprint()`` (class + the parameters that shape its state)."""
+  return _sha(f"{name}={reducers[name].fingerprint()}"
+              for name in sorted(reducers))
+
+
+def arch_accs_fingerprint(archs: Sequence[object],
+                          accs: Sequence[float]) -> str:
+  """Content hash of a co-exploration's (architecture, accuracy) input."""
+  parts = ["arch-accs"]
+  parts.extend(repr(a) for a in archs)
+  parts.extend(repr(float(x)) for x in accs)
+  return _sha(parts)
+
+
+def sweep_key(kind: str, space_fp: str, reducers_fp: str,
+              params: Dict[str, object]) -> str:
+  """The journal key: (design-space hash, oracle version, reducer plan,
+  sweep parameters).  Backend identity is deliberately excluded — the
+  parity contract makes checkpoints portable across the numpy and
+  device paths."""
+  parts = [f"journal-v{JOURNAL_VERSION}", kind, space_fp,
+           f"oracle-v{oracle.ORACLE_VERSION}", reducers_fp]
+  parts.extend(f"{k}={params[k]!r}" for k in sorted(params))
+  return _sha(parts)
+
+
+class SweepJournal:
+  """Durable checkpoint store for resumable sweeps: one pickle file per
+  journal key under ``dir_path``, written atomically (tmp +
+  ``os.replace``) so a kill mid-write leaves the previous durable
+  record intact.  ``load`` returns None — a fresh start, never an
+  error — on missing, corrupt, or key/version-mismatched records.
+
+  This journal is the foundation the ROADMAP's exploration-as-a-service
+  sweep-cache builds on: the key is content-addressed, so a *finished*
+  sweep's record doubles as a cache hit for an identical future sweep.
+  """
+
+  def __init__(self, dir_path):
+    self.dir = str(dir_path)
+    os.makedirs(self.dir, exist_ok=True)
+
+  def path(self, key: str) -> str:
+    return os.path.join(self.dir, f"sweep-{key[:32]}.pkl")
+
+  def record(self, key: str, state: Dict[str, object]) -> None:
+    payload = {"version": JOURNAL_VERSION, "key": key, "state": state}
+    tmp = self.path(key) + ".tmp"
+    with open(tmp, "wb") as f:
+      pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+      f.flush()
+      os.fsync(f.fileno())
+    os.replace(tmp, self.path(key))
+
+  def load(self, key: str) -> Optional[Dict[str, object]]:
+    try:
+      with open(self.path(key), "rb") as f:
+        payload = pickle.load(f)
+    except FileNotFoundError:
+      return None
+    except Exception:  # truncated/corrupt record -> fresh start
+      return None
+    if (payload.get("version") != JOURNAL_VERSION
+        or payload.get("key") != key):
+      return None
+    return payload.get("state")

@@ -53,6 +53,10 @@ import numpy as np
 from repro.core.seeding import derive_seed
 from repro.core.table import ConfigTable
 from repro.explore.frame import _MAXIMIZE_COLUMNS, ResultFrame, pareto_mask
+from repro.explore.resilience import (ChunkError, ChunkTask,
+                                      ResiliencePolicy, Rung, SweepJournal,
+                                      reducers_fingerprint,
+                                      space_fingerprint, sweep_key)
 from repro.explore.space import DesignSpace
 from repro.explore.streaming import (ParetoAccumulator, Reducer,
                                      StreamResult)
@@ -346,7 +350,10 @@ def guided_search(space: DesignSpace,
                   crossover_rate: float = 0.9,
                   mutation_rate: Optional[float] = None,
                   n_archs: Optional[int] = None,
-                  reducers: Optional[Dict[str, Reducer]] = None
+                  reducers: Optional[Dict[str, Reducer]] = None,
+                  policy: Optional[ResiliencePolicy] = None,
+                  resume_from=None,
+                  checkpoint_every: int = 1
                   ) -> StreamResult:
   """NSGA-II-style search over a DesignSpace, one generation per chunk.
 
@@ -368,6 +375,17 @@ def guided_search(space: DesignSpace,
   Returns a :class:`StreamResult`; ``meta`` carries evaluations /
   generations / hypervolume (+ its reference point) alongside the usual
   run stats.  Same seed, same inputs -> bit-identical result.
+
+  A generation is the search's chunk: ``policy`` retries a failing
+  ``evaluate`` under the resilience ladder, and ``resume_from`` (a
+  :class:`SweepJournal` or its directory) checkpoints the complete loop
+  state — archive, surrogate training set, population, reducers — after
+  every generation, restoring it on re-entry.  Each generation's RNG is
+  ``derive_seed("search-gen", seed, g)``, a pure function of ``(seed,
+  g)``, so the resumed trajectory (and final front) is bit-identical to
+  an uninterrupted run.  ``generations`` is deliberately *not* part of
+  the journal key: resuming with a larger budget extends a finished run
+  from its last durable generation.
   """
   objectives = tuple(objectives)
   if not objectives:
@@ -394,7 +412,65 @@ def guided_search(space: DesignSpace,
   pop_obj = None
   offset = 0
   gens_run = 0
-  for g in range(generations):
+  g_start = 0
+  n_resumed = 0
+  base_retries = 0
+  base_demotions = 0
+  journal = None
+  jkey = ""
+  if resume_from is not None:
+    journal = resume_from if isinstance(resume_from, SweepJournal) \
+        else SweepJournal(resume_from)
+    jkey = sweep_key(
+        "guided-search", space_fingerprint(space),
+        reducers_fingerprint(reducers),
+        {"objectives": objectives,
+         "maximize": None if maximize is None else tuple(maximize),
+         "population": population, "seed": seed, "surrogate": surrogate,
+         "surrogate_pool": surrogate_pool,
+         "crossover_rate": crossover_rate, "mutation_rate": mutation_rate,
+         "n_archs": n_archs})
+    state = journal.load(jkey)
+    if state is not None:
+      g_start = state["g_next"]
+      seen = set(state["seen"])
+      xs = list(state["xs"])
+      ys = list(state["ys"])
+      pop_genome = state["pop_genome"]
+      pop_obj = state["pop_obj"]
+      offset = state["offset"]
+      gens_run = state["gens_run"]
+      base_retries = state.get("n_retries", 0)
+      base_demotions = state.get("n_demotions", 0)
+      n_resumed = gens_run
+      for name, r in reducers.items():
+        if name in state["reducers"]:
+          r.restore(state["reducers"][name])
+      if surrogate and xs:
+        # surrogate models refit deterministically from the journaled
+        # training set — no fitted state needs serializing
+        models = _fit_surrogates(np.concatenate(xs), np.concatenate(ys))
+  since_ckpt = 0
+
+  def checkpoint(g_next: int, force: bool = False) -> None:
+    nonlocal since_ckpt
+    if journal is None:
+      return
+    since_ckpt += 1
+    if not force and since_ckpt < max(int(checkpoint_every), 1):
+      return
+    extra_r = policy.n_retries if policy is not None else 0
+    extra_d = policy.n_demotions if policy is not None else 0
+    journal.record(jkey, {
+        "g_next": g_next, "seen": set(seen), "xs": list(xs),
+        "ys": list(ys), "pop_genome": pop_genome, "pop_obj": pop_obj,
+        "offset": offset, "gens_run": gens_run,
+        "n_retries": base_retries + extra_r,
+        "n_demotions": base_demotions + extra_d,
+        "reducers": {name: r.snapshot() for name, r in reducers.items()}})
+    since_ckpt = 0
+
+  for g in range(g_start, generations):
     rng = np.random.RandomState(derive_seed("search-gen", seed, g))
     screening = surrogate and models is not None
     if pop_genome is None:
@@ -421,9 +497,22 @@ def guided_search(space: DesignSpace,
     table = _decode_table(space, cand)
     arch = cand[:, -1].copy() if n_archs is not None else None
     idx = np.arange(offset, offset + len(cand), dtype=np.int64)
-    out = evaluate(table, idx, arch)
-    if hasattr(out, "resolve"):
-      out = out.resolve()
+    try:
+      if policy is not None:
+        out = policy.execute(ChunkTask(index=g, rungs=(
+            Rung("evaluate", lambda: evaluate(table, idx, arch),
+                 layer="backend"),)))
+      else:
+        out = evaluate(table, idx, arch)
+      if hasattr(out, "resolve"):
+        out = out.resolve()
+    except Exception as e:
+      # surface the failing generation; the journal already holds every
+      # completed generation, so a re-run with resume_from continues here
+      checkpoint(g, force=True)
+      if isinstance(e, ChunkError):
+        raise
+      raise ChunkError(g, f"{type(e).__name__}: {e}") from e
     frame, idx = out
     offset += len(frame)
     for r in reducers.values():
@@ -446,8 +535,13 @@ def guided_search(space: DesignSpace,
       keep = np.sort(order[:population])
       pop_genome, pop_obj = allg[keep], allo[keep]
     gens_run += 1
+    checkpoint(g + 1)
 
+  checkpoint(generations, force=True)
   seconds = time.perf_counter() - t0
+  n_retries = base_retries + (policy.n_retries if policy is not None else 0)
+  n_demotions = base_demotions \
+      + (policy.n_demotions if policy is not None else 0)
   all_obj = np.concatenate(ys) if ys else np.zeros((0, len(objectives)))
   meta = {"seconds": seconds, "workers": 1.0,
           "n_chunks": float(gens_run),
@@ -456,7 +550,10 @@ def guided_search(space: DesignSpace,
           "evaluations": float(offset),
           "generations": float(gens_run),
           "population": float(population),
-          "surrogate": float(bool(surrogate))}
+          "surrogate": float(bool(surrogate)),
+          "n_retries": float(n_retries),
+          "n_demotions": float(n_demotions),
+          "n_resumed_chunks": float(n_resumed)}
   if all_obj.shape[0]:
     front, ref = _screen_front(all_obj)
     meta["hypervolume"] = hypervolume(

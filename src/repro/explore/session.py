@@ -70,7 +70,8 @@ class ExplorationSession:
               method: str = "random", measure_oracle: int = 0,
               vectorized: Union[bool, str] = "auto", stream: bool = False,
               reducers: Optional[Dict[str, Reducer]] = None,
-              chunk_size: int = 65536, workers: Optional[int] = None
+              chunk_size: int = 65536, workers: Optional[int] = None,
+              policy=None, resume_from=None, checkpoint_every: int = 1
               ) -> Union[ResultFrame, StreamResult]:
     """Sample the space, evaluate `network`; optionally time the oracle on
     the first `measure_oracle` configs for the paper's speedup claim.
@@ -91,9 +92,16 @@ class ExplorationSession:
 
     frame.meta carries: eval_seconds, eval_us_per_design, and (when
     measured) oracle_seconds_per_design + speedup.
+
+    ``policy`` / ``resume_from`` / ``checkpoint_every`` (stream=True
+    only) enable chunk retry + graceful degradation and journaled
+    resume — see :mod:`repro.explore.resilience`.
     """
     if reducers is not None and not stream:
       raise ValueError("reducers only apply to the streaming engine; "
+                       "pass stream=True")
+    if (policy is not None or resume_from is not None) and not stream:
+      raise ValueError("policy/resume_from apply to the streaming engine; "
                        "pass stream=True")
     if stream:
       if measure_oracle:
@@ -102,7 +110,9 @@ class ExplorationSession:
       return stream_explore(self.backend, self.space, layers, network,
                             n_per_type=n_per_type, seed=seed, method=method,
                             reducers=reducers, chunk_size=chunk_size,
-                            workers=workers)
+                            workers=workers, policy=policy,
+                            resume_from=resume_from,
+                            checkpoint_every=checkpoint_every)
     if vectorized == "auto":
       use_table = bool(getattr(self.backend, "prefers_table", False))
     else:
@@ -166,7 +176,8 @@ class ExplorationSession:
                image_size: int = 32, surrogate: bool = False,
                surrogate_pool: int = 4, crossover_rate: float = 0.9,
                mutation_rate: Optional[float] = None,
-               reducers: Optional[Dict[str, Reducer]] = None
+               reducers: Optional[Dict[str, Reducer]] = None,
+               policy=None, resume_from=None, checkpoint_every: int = 1
                ) -> StreamResult:
     """Guided multi-objective search (:mod:`repro.explore.search`) instead
     of enumeration: an NSGA-II-style optimizer whose generations evaluate
@@ -219,7 +230,8 @@ class ExplorationSession:
           population=population, generations=generations, seed=seed,
           surrogate=surrogate, surrogate_pool=surrogate_pool,
           crossover_rate=crossover_rate, mutation_rate=mutation_rate,
-          reducers=reducers)
+          reducers=reducers, policy=policy, resume_from=resume_from,
+          checkpoint_every=checkpoint_every)
 
     from repro.core.supernet import arch_to_layers  # deferred: pulls jax
     if objectives is None:
@@ -272,14 +284,16 @@ class ExplorationSession:
         surrogate=surrogate, surrogate_pool=surrogate_pool,
         features=features, crossover_rate=crossover_rate,
         mutation_rate=mutation_rate, n_archs=len(archs),
-        reducers=reducers)
+        reducers=reducers, policy=policy, resume_from=resume_from,
+        checkpoint_every=checkpoint_every)
 
   def co_explore(self, arch_accs: Sequence[Tuple[object, float]],
                  n_hw_per_type: int = 20, seed: int = 3,
                  image_size: int = 32, method: str = "random",
                  vectorized: Union[bool, str] = "auto", stream: bool = False,
                  reducers: Optional[Dict[str, Reducer]] = None,
-                 chunk_size: int = 65536, workers: Optional[int] = None
+                 chunk_size: int = 65536, workers: Optional[int] = None,
+                 policy=None, resume_from=None, checkpoint_every: int = 1
                  ) -> Union[ResultFrame, StreamResult]:
     """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
 
@@ -313,6 +327,9 @@ class ExplorationSession:
     if reducers is not None and not stream:
       raise ValueError("reducers only apply to the streaming engine; "
                        "pass stream=True")
+    if (policy is not None or resume_from is not None) and not stream:
+      raise ValueError("policy/resume_from apply to the streaming engine; "
+                       "pass stream=True")
     if stream:
       if not hasattr(self.backend, "co_evaluate_table"):
         raise ValueError(f"backend {self.backend.name!r} has no "
@@ -321,7 +338,9 @@ class ExplorationSession:
                                n_hw_per_type=n_hw_per_type, seed=seed,
                                image_size=image_size, method=method,
                                reducers=reducers, chunk_size=chunk_size,
-                               workers=workers)
+                               workers=workers, policy=policy,
+                               resume_from=resume_from,
+                               checkpoint_every=checkpoint_every)
     from repro.core.supernet import arch_to_layers  # deferred: pulls jax
     if vectorized == "auto":
       use_joint = bool(getattr(self.backend, "prefers_table", False)) \

@@ -46,6 +46,7 @@ reducers=...)`` / ``co_explore(..., stream=True)``, or the
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import os
 import time
@@ -58,6 +59,11 @@ import numpy as np
 
 from repro.explore.frame import (_MAXIMIZE_COLUMNS, ResultFrame, pareto_mask,
                                  stable_topk_indices)
+from repro.explore.resilience import (ChunkError, ChunkTask, ResiliencePolicy,
+                                      Rung, SweepJournal,
+                                      arch_accs_fingerprint,
+                                      reducers_fingerprint, space_fingerprint,
+                                      sweep_key)
 from repro.explore.space import DesignSpace
 
 # explore/co_explore(vectorized="auto") switch to the parallel streaming
@@ -135,6 +141,31 @@ class Reducer:
       raise ValueError(f"{type(self).__name__} cannot fold {kind!r}")
     self.fold(frame, indices)
 
+  def snapshot(self) -> Dict[str, object]:
+    """Journal-serializable copy of the accumulator state (see
+    :class:`repro.explore.resilience.SweepJournal`).  The default deep
+    copies ``__dict__`` wholesale — accumulator state is numpy arrays,
+    scalars, frames and lists, all picklable and all isolated from
+    later in-place folds by the copy.  Override for reducers holding
+    live handles."""
+    return {"cls": type(self).__name__,
+            "state": copy.deepcopy(self.__dict__)}
+
+  def restore(self, snap: Dict[str, object]) -> None:
+    """Adopt a :meth:`snapshot`; folding the not-yet-journaled chunks on
+    top is bit-identical to an uninterrupted run (chunk-order
+    invariance quantifies over *every* partition, including the
+    before/after-restore one)."""
+    if snap.get("cls") != type(self).__name__:
+      raise ValueError(f"snapshot of {snap.get('cls')!r} cannot restore "
+                       f"a {type(self).__name__}")
+    self.__dict__.update(copy.deepcopy(snap["state"]))
+
+  def fingerprint(self) -> str:
+    """Content key for the journal's reducer-plan component: two
+    reducers with equal fingerprints accept each other's snapshots."""
+    return type(self).__name__
+
 
 class ParetoAccumulator(Reducer):
   """Online non-dominated front over the given columns.
@@ -186,6 +217,10 @@ class ParetoAccumulator(Reducer):
     return ParetoSpec(self.cols,
                       tuple(c for c in self.cols if c in self._mx))
 
+  def fingerprint(self) -> str:
+    mx = ",".join(sorted(c for c in self.cols if c in self._mx))
+    return f"Pareto(cols={','.join(self.cols)};mx={mx})"
+
   def result(self) -> ResultFrame:
     if self._frame is None:
       return _empty_frame()
@@ -233,6 +268,9 @@ class TopKAccumulator(Reducer):
   def device_spec(self):
     from repro.explore.device import TopKSpec
     return TopKSpec(self.by, self.k, self.maximize)
+
+  def fingerprint(self) -> str:
+    return f"TopK(k={self.k};by={self.by};mx={self.maximize})"
 
   def result(self) -> ResultFrame:
     # state is already (key, global id)-ordered best-first
@@ -289,6 +327,9 @@ class StatsAccumulator(Reducer):
     from repro.explore.device import StatsSpec
     return StatsSpec(self.col)
 
+  def fingerprint(self) -> str:
+    return f"Stats(col={self.col})"
+
   def fold_payload(self, payload) -> None:
     kind, data = payload[0], payload[1]
     if kind != "stats":
@@ -335,6 +376,10 @@ class HistogramAccumulator(Reducer):
     from repro.explore.device import HistSpec
     return HistSpec(self.col, float(self.edges[0]), float(self.edges[-1]),
                     len(self.counts))
+
+  def fingerprint(self) -> str:
+    return (f"Hist(col={self.col};lo={self.edges[0]!r};"
+            f"hi={self.edges[-1]!r};bins={len(self.counts)})")
 
   def fold_payload(self, payload) -> None:
     kind, data = payload[0], payload[1]
@@ -404,8 +449,10 @@ class StreamResult:
 
 
 def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
-               workers: int = 1,
-               dispatch_ahead: int = DISPATCH_AHEAD) -> StreamResult:
+               workers: int = 1, dispatch_ahead: int = DISPATCH_AHEAD,
+               policy: Optional[ResiliencePolicy] = None,
+               resume_from=None, journal_key: str = "",
+               checkpoint_every: int = 1) -> StreamResult:
   """Drain ``tasks`` (each producing one evaluated chunk), folding every
   reducer as chunks complete.
 
@@ -422,64 +469,169 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
   folds happen on the submitting thread only.  Completion order is
   nondeterministic — reducers are chunk-order invariant, so results are
   not.
+
+  Failure semantics (see :mod:`repro.explore.resilience` and
+  docs/explore.md "Failure semantics & resume"):
+
+  * ``policy`` — a :class:`ResiliencePolicy` executing each
+    :class:`ChunkTask` through retry + the degradation ladder; its
+    retry/demotion totals land in ``meta``.
+  * a fatally failing chunk cancels all not-yet-started work and raises
+    :class:`ChunkError` carrying the chunk's *global index* (the
+    previous behavior lost both the index and the in-flight window).
+  * ``resume_from`` — a :class:`SweepJournal` (or its directory path).
+    Reducer snapshots plus the set of folded chunk indices are recorded
+    under ``journal_key`` every ``checkpoint_every`` folds *and* on the
+    way out of a fatal error; on entry, a matching record restores the
+    reducers and already-folded chunks are skipped before dispatch.
+    Chunk-order invariance makes the resumed final reductions
+    bit-identical to an uninterrupted run.
   """
   workers = max(1, int(workers))
   t0 = time.perf_counter()
-  n_rows = 0
-  n_chunks = 0
-  n_transferred = 0
+  journal = None
+  done_chunks: set = set()
+  counters = {"n_rows": 0, "n_chunks": 0, "n_transferred": 0,
+              "n_overflows": 0, "n_retries": 0, "n_demotions": 0}
+  n_resumed = 0
+  if resume_from is not None:
+    journal = resume_from if isinstance(resume_from, SweepJournal) \
+        else SweepJournal(resume_from)
+    state = journal.load(journal_key)
+    if state is not None:
+      done_chunks = set(state["done"])
+      for name, r in reducers.items():
+        r.restore(state["reducers"][name])
+      counters.update(state["counters"])
+      n_resumed = len(done_chunks)
+  base_retries = counters["n_retries"]
+  base_demotions = counters["n_demotions"]
+  since_ckpt = 0
+
+  def totals() -> Tuple[int, int]:
+    extra_r = policy.n_retries if policy is not None else 0
+    extra_d = policy.n_demotions if policy is not None else 0
+    return base_retries + extra_r, base_demotions + extra_d
+
+  def checkpoint(force: bool = False) -> None:
+    nonlocal since_ckpt
+    if journal is None:
+      return
+    since_ckpt += 1
+    if not force and since_ckpt < max(int(checkpoint_every), 1):
+      return
+    counters["n_retries"], counters["n_demotions"] = totals()
+    journal.record(journal_key, {
+        "done": set(done_chunks),
+        "reducers": {name: r.snapshot() for name, r in reducers.items()},
+        "counters": dict(counters)})
+    since_ckpt = 0
+
+  def execute(task):
+    if policy is not None:
+      return policy.execute(task)
+    return task()
+
+  def fail(index, exc):
+    """Flush the journal, then surface the failing chunk's global
+    index (a bare re-raise would lose it)."""
+    checkpoint(force=True)
+    if isinstance(exc, ChunkError):
+      raise exc
+    raise ChunkError(index, f"{type(exc).__name__}: {exc}") from exc
 
   def fold(result) -> None:
-    nonlocal n_rows, n_chunks, n_transferred
     if hasattr(result, "resolve"):
       result = result.resolve()
-    n_chunks += 1
+    counters["n_chunks"] += 1
     payloads = getattr(result, "payloads", None)
     if payloads is not None:  # a device FusedChunk (duck-typed: keeps
-      n_rows += result.n_rows  # the numpy path free of device imports)
-      n_transferred += result.n_transferred
+      counters["n_rows"] += result.n_rows  # numpy path device-import-free
+      counters["n_transferred"] += result.n_transferred
+      counters["n_overflows"] += getattr(result, "n_overflows", 0)
       for name, payload in payloads.items():
         reducers[name].fold_payload(payload)
       return
     frame, indices = result
-    n_rows += len(frame)
-    n_transferred += len(frame)
+    counters["n_rows"] += len(frame)
+    counters["n_transferred"] += len(frame)
     for r in reducers.values():
       r.fold(frame, indices)
 
+  def finish(index, result) -> None:
+    try:
+      fold(result)
+    except Exception as e:
+      fail(index, e)
+    done_chunks.add(index)
+    checkpoint()
+
+  def indexed(ts) -> Iterator[Tuple[int, Task]]:
+    """(global chunk index, task) pairs, skipping already-folded chunks
+    before they are materialized or dispatched."""
+    for i, t in enumerate(ts):
+      index = getattr(t, "index", i)
+      if index in done_chunks:
+        continue
+      yield index, t
+
   if workers == 1:
     window: "deque" = deque()
-    for task in tasks:
-      res = task()
+    for index, task in indexed(tasks):
+      try:
+        res = execute(task)
+      except Exception as e:
+        fail(index, e)
       if hasattr(res, "resolve"):
-        window.append(res)
+        window.append((index, res))
         if len(window) > max(int(dispatch_ahead), 0):
-          fold(window.popleft())
+          finish(*window.popleft())
       else:
-        fold(res)
+        finish(index, res)
     while window:
-      fold(window.popleft())
+      finish(*window.popleft())
   else:
     with ThreadPoolExecutor(max_workers=workers) as pool:
-      pending = set()
-      for task in tasks:
-        pending.add(pool.submit(task))
-        if len(pending) >= 2 * workers:
-          done, pending = wait(pending, return_when=FIRST_COMPLETED)
-          for fut in done:
-            fold(fut.result())
-      while pending:
-        done, pending = wait(pending, return_when=FIRST_COMPLETED)
-        for fut in done:
-          fold(fut.result())
+      pending: Dict = {}  # future -> global chunk index
+
+      def drain(ready) -> None:
+        for fut in ready:
+          index = pending.pop(fut)
+          try:
+            res = fut.result()
+          except Exception as e:
+            fail(index, e)
+          finish(index, res)
+
+      try:
+        for index, task in indexed(tasks):
+          pending[pool.submit(execute, task)] = index
+          if len(pending) >= 2 * workers:
+            ready, _ = wait(set(pending), return_when=FIRST_COMPLETED)
+            drain(ready)
+        while pending:
+          ready, _ = wait(set(pending), return_when=FIRST_COMPLETED)
+          drain(ready)
+      except Exception:
+        # fatal: drop queued chunks so the pool shuts down promptly
+        # instead of grinding through the whole in-flight window
+        for fut in pending:
+          fut.cancel()
+        raise
+  checkpoint(force=True)
   seconds = time.perf_counter() - t0
+  n_retries, n_demotions = totals()
   return StreamResult(
       results={name: r.result() for name, r in reducers.items()},
-      n_rows=n_rows, seconds=seconds,
+      n_rows=counters["n_rows"], seconds=seconds,
       meta={"seconds": seconds, "workers": float(workers),
-            "n_chunks": float(n_chunks),
-            "rows_transferred": float(n_transferred),
-            "rows_per_sec": n_rows / max(seconds, 1e-12)})
+            "n_chunks": float(counters["n_chunks"]),
+            "rows_transferred": float(counters["n_transferred"]),
+            "rows_per_sec": counters["n_rows"] / max(seconds, 1e-12),
+            "n_retries": float(n_retries),
+            "n_demotions": float(n_demotions),
+            "n_resumed_chunks": float(n_resumed),
+            "n_overflows": float(counters["n_overflows"])})
 
 
 # ---------------------------------------------------------------------------
@@ -491,7 +643,10 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
                    method: str = "random",
                    reducers: Optional[Dict[str, Reducer]] = None,
                    chunk_size: int = 65536,
-                   workers: Optional[int] = None) -> StreamResult:
+                   workers: Optional[int] = None,
+                   policy: Optional[ResiliencePolicy] = None,
+                   resume_from=None,
+                   checkpoint_every: int = 1) -> StreamResult:
   """Sample -> evaluate -> reduce a plain HW sweep in bounded memory.
 
   Chunks come from ``space.iter_tables`` (bit-identical concatenation to
@@ -505,6 +660,14 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
   fuses into one jitted program per chunk (see
   :mod:`repro.explore.device`), so only O(survivors) floats come back
   per chunk instead of full metric arrays.
+
+  Each chunk carries the full fallback ladder ``fused-device ->
+  unfused-device -> numpy`` (whichever rungs the backend supports); a
+  ``policy`` walks it on failures, and ``resume_from`` journals /
+  restores the sweep under a content-addressed key derived from the
+  space, oracle version, reducer plan, and the sampling parameters —
+  the backend itself is *not* part of the key (parity makes checkpoints
+  portable across the numpy and device paths).
   """
   if not hasattr(backend, "evaluate_table"):
     raise ValueError(f"backend {backend.name!r} has no evaluate_table; "
@@ -517,26 +680,50 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
   if device_mode:
     from repro.explore.device import build_plan
     plan = build_plan(reducers, joint=False)
+  # the terminal numpy rung: bypasses jit even on a device backend
+  host_eval = getattr(backend, "host_evaluate_table", None)
+  if host_eval is None:
+    host_eval = backend.evaluate_table
 
-  def make_task(chunk, idx) -> Task:
+  def make_task(chunk, idx, ci) -> ChunkTask:
+    rungs = []
     if plan is not None:
-      return lambda: backend.fused_eval_pending(chunk, layers, network,
-                                                plan, idx)
+      rungs.append(Rung(
+          "fused-device",
+          lambda: backend.fused_eval_pending(chunk, layers, network, plan,
+                                             idx),
+          layer="device"))
     if device_mode:
-      return lambda: backend.eval_pending(chunk, layers, network, idx)
-    return lambda: (backend.evaluate_table(chunk, layers, network), idx)
+      rungs.append(Rung(
+          "device",
+          lambda: backend.eval_pending(chunk, layers, network, idx),
+          layer="device"))
+    rungs.append(Rung("numpy",
+                      lambda: (host_eval(chunk, layers, network), idx),
+                      layer="backend"))
+    return ChunkTask(index=ci, rungs=tuple(rungs))
 
   def tasks() -> Iterator[Task]:
     offset = 0
-    for chunk in space.iter_tables(n_per_type, seed=seed, method=method,
-                                   chunk_size=chunk_size):
+    for ci, chunk in enumerate(
+        space.iter_tables(n_per_type, seed=seed, method=method,
+                          chunk_size=chunk_size)):
       idx = np.arange(offset, offset + len(chunk), dtype=np.int64)
       offset += len(chunk)
-      yield make_task(chunk, idx)
+      yield make_task(chunk, idx, ci)
 
+  key = ""
+  if resume_from is not None:
+    key = sweep_key("explore", space_fingerprint(space),
+                    reducers_fingerprint(reducers),
+                    {"n_per_type": n_per_type, "seed": seed,
+                     "method": method, "chunk_size": chunk_size,
+                     "network": network})
   return run_stream(tasks(), reducers,
                     workers=default_workers(backend) if workers is None
-                    else workers)
+                    else workers,
+                    policy=policy, resume_from=resume_from,
+                    journal_key=key, checkpoint_every=checkpoint_every)
 
 
 def stream_co_explore(backend, space: DesignSpace, arch_accs,
@@ -544,7 +731,10 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
                       image_size: int = 32, method: str = "random",
                       reducers: Optional[Dict[str, Reducer]] = None,
                       chunk_size: int = 65536,
-                      workers: Optional[int] = None) -> StreamResult:
+                      workers: Optional[int] = None,
+                      policy: Optional[ResiliencePolicy] = None,
+                      resume_from=None,
+                      checkpoint_every: int = 1) -> StreamResult:
   """Joint HW x NN co-exploration in bounded memory: the arch x HW cross
   product is visited as ``JointTable.block_slices`` blocks (HW sampled
   once per PE type — the small input side; the 100M-pair product never
@@ -578,28 +768,41 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
     # same unique rows, so one compiled program serves the whole sweep
     unique_cols, slot_ids = stack.dedup_slots()
     dedup = lambda a_sl: (unique_cols, slot_ids[a_sl])  # noqa: E731
+  # the terminal numpy rung: bypasses jit even on a device backend
+  host_co = getattr(backend, "host_co_evaluate_table", None)
+  if host_co is None:
+    host_co = backend.co_evaluate_table
 
-  def make_task(hw_sub, sub_stack, a_sl, idx) -> Task:
+  def make_task(hw_sub, sub_stack, a_sl, idx, ci) -> ChunkTask:
     a_lo = a_sl.start
+    rungs = []
     if plan is not None:
-      return lambda: backend.fused_co_eval_pending(
-          hw_sub, sub_stack, "coexplore", plan, idx, a_lo, accs[a_sl],
-          archs, dedup=dedup(a_sl))
+      rungs.append(Rung(
+          "fused-device",
+          lambda: backend.fused_co_eval_pending(
+              hw_sub, sub_stack, "coexplore", plan, idx, a_lo, accs[a_sl],
+              archs, dedup=dedup(a_sl)),
+          layer="device"))
     if device_mode:
-      return lambda: backend.co_eval_pending(
-          hw_sub, sub_stack, "coexplore", idx, a_lo, accs[a_sl], archs,
-          dedup=dedup(a_sl))
+      rungs.append(Rung(
+          "device",
+          lambda: backend.co_eval_pending(
+              hw_sub, sub_stack, "coexplore", idx, a_lo, accs[a_sl], archs,
+              dedup=dedup(a_sl)),
+          layer="device"))
 
     def run():
-      f = backend.co_evaluate_table(hw_sub, sub_stack, network="coexplore")
+      f = host_co(hw_sub, sub_stack, network="coexplore")
       f.extra["arch_id"] = f.extra["arch_id"] + a_lo
       f.extra["top1"] = accs[f.extra["arch_id"]]
       f.arch_lookup = archs
       return f, idx
-    return run
+    rungs.append(Rung("numpy", run, layer="backend"))
+    return ChunkTask(index=ci, rungs=tuple(rungs))
 
   def tasks() -> Iterator[Task]:
     offset = 0
+    ci = 0
     for ti, pe_type in enumerate(space.pe_types):
       hw = space.sample_type_table(pe_type, n_hw_per_type,
                                    seed=seed + 17 * ti, method=method)
@@ -608,9 +811,20 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
         idx = offset + joint.block_indices(a_sl, h_sl)
         yield make_task(hw.select(h_sl),
                         stack.slice_archs(a_sl.start, a_sl.stop),
-                        a_sl, idx)
+                        a_sl, idx, ci)
+        ci += 1
       offset += len(joint)
 
+  key = ""
+  if resume_from is not None:
+    key = sweep_key("co-explore", space_fingerprint(space),
+                    reducers_fingerprint(reducers),
+                    {"n_hw_per_type": n_hw_per_type, "seed": seed,
+                     "image_size": image_size, "method": method,
+                     "chunk_size": chunk_size,
+                     "archs": arch_accs_fingerprint(archs, accs)})
   return run_stream(tasks(), reducers,
                     workers=default_workers(backend) if workers is None
-                    else workers)
+                    else workers,
+                    policy=policy, resume_from=resume_from,
+                    journal_key=key, checkpoint_every=checkpoint_every)

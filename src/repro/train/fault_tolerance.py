@@ -132,8 +132,17 @@ class StepFailure(RuntimeError):
 
 def retrying(step_fn: Callable, max_retries: int = 2,
              on_failure: Optional[Callable[[int, Exception], None]] = None,
-             retry_exceptions: Tuple = (RuntimeError,)) -> Callable:
-  """Wrap a step function with bounded retries on transient errors."""
+             retry_exceptions: Tuple = (RuntimeError,),
+             sleep: Callable[[float], None] = time.sleep,
+             base_delay: float = 0.01, backoff: float = 2.0) -> Callable:
+  """Wrap a step function with bounded retries on transient errors.
+
+  The single retry primitive for both trainer steps and sweep chunks
+  (:mod:`repro.explore.resilience` builds its ``RetryPolicy`` on it).
+  ``sleep`` is injectable so unit tests never wall-wait; the delay before
+  retry ``attempt`` is ``base_delay * backoff**attempt``, and no sleep
+  happens after the final attempt (there is nothing left to wait for).
+  """
 
   def wrapped(*args, **kwargs):
     last: Optional[Exception] = None
@@ -144,7 +153,8 @@ def retrying(step_fn: Callable, max_retries: int = 2,
         last = e
         if on_failure:
           on_failure(attempt, e)
-        time.sleep(0.01 * (2 ** attempt))
+        if attempt < max_retries:
+          sleep(base_delay * (backoff ** attempt))
     raise StepFailure(
         f"step failed after {max_retries + 1} attempts") from last
 

@@ -311,6 +311,58 @@ class TestContract:
 
 
 # ---------------------------------------------------------------------------
+# robustness pack
+# ---------------------------------------------------------------------------
+
+class TestRobustness:
+
+  def test_bare_except_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/eng.py":
+                              "def f():\n"
+                              "  try:\n"
+                              "    work()\n"
+                              "  except:\n"
+                              "    cleanup()\n"},
+                   rules=["ROB001"])
+    assert codes(rep) == ["ROB001"]
+
+  def test_swallowed_exception_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/eng.py":
+                              "def f():\n"
+                              "  try:\n"
+                              "    work()\n"
+                              "  except ValueError:\n"
+                              "    pass\n"},
+                   rules=["ROB001"])
+    assert codes(rep) == ["ROB001"]
+
+  def test_handler_that_acts_clean(self, tmp_path):
+    # re-raising, returning a sentinel, or recording the failure all
+    # keep the error visible — none of these are swallowing
+    rep = run_tree(tmp_path, {"explore/eng.py":
+                              "def f():\n"
+                              "  try:\n"
+                              "    return work()\n"
+                              "  except ValueError:\n"
+                              "    return None\n"
+                              "  except RuntimeError as e:\n"
+                              "    raise KeyError(str(e)) from e\n"},
+                   rules=["ROB001"])
+    assert codes(rep) == []
+
+  def test_scoped_to_explore(self, tmp_path):
+    # train/ and launch/ are outside the fault-tolerance contract
+    rep = run_tree(tmp_path, {"train/loop.py":
+                              "def f():\n"
+                              "  try:\n"
+                              "    work()\n"
+                              "  except:\n"
+                              "    pass\n"},
+                   rules=["ROB001"])
+    assert codes(rep) == []
+
+
+# ---------------------------------------------------------------------------
 # engine mechanics: suppressions, baseline, fingerprints, parse errors
 # ---------------------------------------------------------------------------
 

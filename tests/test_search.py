@@ -430,3 +430,85 @@ class TestSessionOptimize:
       session.optimize()
     with pytest.raises(ValueError, match="exactly one"):
       session.optimize(layers, arch_accs=[(None, 0.5)])
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: generation-as-chunk kill/resume bit-identity
+# ---------------------------------------------------------------------------
+
+class TestSearchResume:
+  GENS = 6
+
+  def run(self, **kw):
+    return guided_search(unit_space(), zdt1, OBJ2, population=12,
+                         generations=self.GENS, seed=3, **kw)
+
+  def test_kill_at_every_generation_resumes_bit_identically(self, tmp_path):
+    from repro.explore import (ChunkError, Fault, FaultPlan,
+                               ResiliencePolicy, RetryPolicy)
+    ref = self.run()
+    for g in range(self.GENS):
+      jdir = tmp_path / f"kill-{g}"
+      pol = ResiliencePolicy(
+          retry=RetryPolicy(sleep=lambda s: None),
+          fault_plan=FaultPlan([Fault("kill", g, "task")]))
+      with pytest.raises(ChunkError) as err:
+        self.run(policy=pol, resume_from=jdir)
+      assert err.value.chunk_index == g
+      res = self.run(resume_from=jdir)
+      for col in OBJ2:
+        assert np.array_equal(res["pareto"].column(col),
+                              ref["pareto"].column(col)), (g, col)
+      assert res.meta["n_resumed_chunks"] == float(g)
+      assert res.meta["evaluations"] == ref.meta["evaluations"]
+
+  def test_finished_run_extends_from_journal(self, tmp_path):
+    # `generations` is excluded from the journal key: a finished run's
+    # record seeds a longer one, which replays no evaluations
+    short = guided_search(unit_space(), zdt1, OBJ2, population=12,
+                          generations=3, seed=3, resume_from=tmp_path)
+    longer = guided_search(unit_space(), zdt1, OBJ2, population=12,
+                           generations=self.GENS, seed=3,
+                           resume_from=tmp_path)
+    ref = self.run()
+    assert longer.meta["n_resumed_chunks"] == 3.0
+    assert longer.meta["evaluations"] == ref.meta["evaluations"]
+    for col in OBJ2:
+      assert np.array_equal(longer["pareto"].column(col),
+                            ref["pareto"].column(col)), col
+    del short
+
+  def test_unexpected_failure_wrapped_with_generation(self):
+    from repro.explore import ChunkError
+    calls = {"n": 0}
+
+    def evaluate(table, idx, arch):
+      if calls["n"] == 2:
+        raise OSError("device fell off the bus")
+      calls["n"] += 1
+      return zdt1(table, idx, arch)
+
+    with pytest.raises(ChunkError) as err:
+      guided_search(unit_space(), evaluate, OBJ2, population=12,
+                    generations=4, seed=3)
+    assert err.value.chunk_index == 2
+    assert "OSError" in str(err.value)
+
+  def test_surrogate_resume_bit_identical(self, tmp_path):
+    from repro.explore import (ChunkError, Fault, FaultPlan,
+                               ResiliencePolicy, RetryPolicy)
+    kw = dict(population=12, generations=self.GENS, seed=3,
+              surrogate=True, surrogate_pool=2)
+    ref = guided_search(unit_space(), zdt1, OBJ2, **kw)
+    pol = ResiliencePolicy(
+        retry=RetryPolicy(sleep=lambda s: None),
+        fault_plan=FaultPlan([Fault("kill", 3, "task")]))
+    with pytest.raises(ChunkError):
+      guided_search(unit_space(), zdt1, OBJ2, policy=pol,
+                    resume_from=tmp_path, **kw)
+    res = guided_search(unit_space(), zdt1, OBJ2, resume_from=tmp_path,
+                        **kw)
+    for col in OBJ2:
+      assert np.array_equal(res["pareto"].column(col),
+                            ref["pareto"].column(col)), col
+    assert res.meta["n_resumed_chunks"] == 3.0

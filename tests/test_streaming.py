@@ -527,3 +527,51 @@ class TestSessionStreaming:
     with pytest.raises(ValueError, match="one-shot"):
       sess.explore(small_layers, "net", n_per_type=2, stream=True,
                    measure_oracle=1)
+
+
+# ---------------------------------------------------------------------------
+# failure semantics: chunk-indexed errors, pool cancellation, accounting
+# ---------------------------------------------------------------------------
+
+class TestFailureSemantics:
+
+  @staticmethod
+  def tasks_with_bomb(n_chunks, bomb_at, rng_seed=0, rows=6):
+    from repro.explore import ChunkTask, Rung
+    rng = np.random.RandomState(rng_seed)
+    frames = [random_frame(rng, rows) for _ in range(n_chunks)]
+
+    def make(ci):
+      def run():
+        if ci == bomb_at:
+          raise ValueError(f"chunk {ci} exploded")
+        idx = np.arange(ci * rows, (ci + 1) * rows, dtype=np.int64)
+        return frames[ci], idx
+      return ChunkTask(index=ci, rungs=(Rung("numpy", run),))
+    return [make(ci) for ci in range(n_chunks)]
+
+  def test_serial_error_carries_chunk_index(self):
+    from repro.explore import ChunkError
+    from repro.explore.streaming import run_stream
+    with pytest.raises(ChunkError) as err:
+      run_stream(self.tasks_with_bomb(8, bomb_at=5),
+                 {"pareto": ParetoAccumulator(("latency_s", "power_mw"))})
+    assert err.value.chunk_index == 5
+    assert "ValueError" in str(err.value)
+
+  def test_pool_error_carries_chunk_index_and_cancels(self):
+    from repro.explore import ChunkError
+    from repro.explore.streaming import run_stream
+    with pytest.raises(ChunkError) as err:
+      run_stream(self.tasks_with_bomb(24, bomb_at=7),
+                 {"pareto": ParetoAccumulator(("latency_s", "power_mw"))},
+                 workers=3)
+    assert err.value.chunk_index == 7
+
+  def test_meta_failure_accounting_keys(self, small_layers):
+    sess = ExplorationSession(VectorOracleBackend(chunk_size=64))
+    res = sess.explore(small_layers, "net", n_per_type=20, seed=4,
+                       stream=True, chunk_size=16)
+    for key in ("n_retries", "n_demotions", "n_resumed_chunks",
+                "n_overflows"):
+      assert res.meta[key] == 0.0, key  # healthy run: all zero, all present
