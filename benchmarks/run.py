@@ -28,7 +28,8 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--suite", default="all",
                   choices=("paper", "accuracy", "framework", "coexplore",
-                           "streaming", "search", "resilience", "all"),
+                           "streaming", "search", "resilience", "service",
+                           "all"),
                   help="benchmark module to run (default: all); "
                        "'coexplore' runs just the joint-sweep perf record, "
                        "'streaming' the constant-memory sweep-engine record "
@@ -36,7 +37,9 @@ def main() -> None:
                        "'search' the guided-search front-quality record "
                        "(SEARCH_BENCH_SCALE=smoke shrinks it for CI), "
                        "'resilience' the kill-and-resume / fault-healing "
-                       "record (RESILIENCE_BENCH_SCALE=smoke for CI)")
+                       "record (RESILIENCE_BENCH_SCALE=smoke for CI), "
+                       "'service' the store-hit / delta-sweep amortization "
+                       "record (SERVICE_BENCH_SCALE=smoke for CI)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -51,7 +54,7 @@ def main() -> None:
     common.JSON_DIR = args.json_dir
 
   from benchmarks import (accuracy_experiments, framework_perf,
-                          paper_figures, search_perf)
+                          paper_figures, search_perf, service_perf)
   suites = {
       "paper": paper_figures.ALL,
       "accuracy": accuracy_experiments.ALL,
@@ -60,11 +63,13 @@ def main() -> None:
       "streaming": [framework_perf.streaming_perf],
       "search": search_perf.ALL,
       "resilience": [framework_perf.resilience_perf],
+      "service": service_perf.ALL,
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL
                                        + framework_perf.ALL
-                                       + search_perf.ALL)
+                                       + search_perf.ALL
+                                       + service_perf.ALL)
   print("name,us_per_call,derived")
   failures = 0
   for fn in benches:

@@ -1,0 +1,178 @@
+"""Exploration-service perf record: store-hit and delta-sweep
+amortization on an overlapping-query workload, plus a concurrent-session
+chaos check.
+
+The service's value proposition is that overlapping exploration requests
+stop paying for evaluation: an identical resubmission is a store hit
+(restore, no evaluation), and a one-axis-edited full-grid sweep is a
+delta-sweep (only the new subgrid runs).  This benchmark measures both
+against full recomputation on a ~1M-pair grid workload and asserts the
+amortized paths stay bit-identical and >= 5x faster.  Results land in
+``results/BENCH_service.json``; SERVICE_BENCH_SCALE=smoke (CI) shrinks
+the grid while still exercising every phase.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def service_perf() -> None:
+  import os
+  import tempfile
+
+  from benchmarks.common import emit, write_bench_json
+  from repro.core.workloads import get_network
+  from repro.explore import (CircuitBreaker, DesignSpace,
+                             ExplorationService, FaultPlan,
+                             ParetoAccumulator, RetryPolicy,
+                             TopKAccumulator, VectorOracleBackend,
+                             stream_explore)
+  from repro.explore.space import AXIS_ORDER, HW_RANGES
+
+  smoke = os.environ.get("SERVICE_BENCH_SCALE") == "smoke"
+  # grid sized so the edited space is ~1M design points at full scale
+  # (the "overlapping queries over a 1M-pair workload" claim); pe_rows
+  # is the edited axis — base takes n-1 of its values, the edit adds
+  # the last one, so the delta subgrid is ~1/8 of the base grid
+  if smoke:
+    take = {"pe_rows": 3, "pe_cols": 3, "sp_if": 2, "sp_fw": 2,
+            "sp_ps": 2, "gbuf_kb": 1, "bandwidth_gbps": 1}
+  else:
+    take = {"pe_rows": 8, "pe_cols": 9, "sp_if": 8, "sp_fw": 8,
+            "sp_ps": 7, "gbuf_kb": 7, "bandwidth_gbps": 1}
+  axes = {name: HW_RANGES[name][:take[name]] for name in AXIS_ORDER}
+  base_space = DesignSpace(axes=axes)
+  edited_axes = dict(axes)
+  edited_axes["pe_rows"] = HW_RANGES["pe_rows"][:take["pe_rows"] + 1]
+  edited_space = DesignSpace(axes=edited_axes)
+
+  chunk_size = 512 if smoke else 65536
+  layers = get_network("resnet20")[:4]
+  metric_cols = ("latency_s", "power_mw", "area_mm2")
+
+  def reducers():
+    return {"pareto": ParetoAccumulator(("latency_s", "power_mw")),
+            "top": TopKAccumulator(50, by="power_mw")}
+
+  def identical(got, want) -> bool:
+    return all(
+        np.array_equal(getattr(got["pareto"], c), getattr(want["pareto"], c))
+        and np.array_equal(getattr(got["top"], c), getattr(want["top"], c))
+        for c in metric_cols)
+
+  def backend():
+    return VectorOracleBackend(chunk_size=chunk_size)
+
+  def grid_submit(svc, space):
+    return svc.submit_explore(space, layers, "resnet20",
+                              n_per_type=space.per_type_grid_size(),
+                              method="grid", chunk_size=chunk_size,
+                              reducers=reducers())
+
+  with tempfile.TemporaryDirectory() as sdir:
+    svc = ExplorationService(backend(), slots=2, store=sdir)
+
+    # phase 1: cold full-grid sweep (populates the store)
+    t0 = time.perf_counter()
+    h_cold = grid_submit(svc, base_space)
+    svc.drain()
+    cold = h_cold.result()
+    cold_s = time.perf_counter() - t0
+
+    # phase 2: identical resubmission -> store hit, no evaluation
+    t0 = time.perf_counter()
+    h_hit = grid_submit(svc, base_space)
+    hit = h_hit.result()
+    hit_s = time.perf_counter() - t0
+    hit_identical = identical(hit, cold)
+    store_hit = hit.meta.get("store_hit") == 1.0
+
+    # phase 3: one-axis edit -> delta-sweep over just the new subgrid
+    t0 = time.perf_counter()
+    h_delta = grid_submit(svc, edited_space)
+    svc.drain()
+    delta = h_delta.result()
+    delta_s = time.perf_counter() - t0
+    delta_ran = delta.meta.get("delta_sweep") == 1.0
+
+    # the honest baseline: the same edited space from scratch
+    t0 = time.perf_counter()
+    scratch = stream_explore(backend(), edited_space, layers,
+                             network="resnet20",
+                             n_per_type=edited_space.per_type_grid_size(),
+                             method="grid", reducers=reducers(),
+                             chunk_size=chunk_size)
+    scratch_s = time.perf_counter() - t0
+    delta_identical = identical(delta, scratch) \
+        and delta.n_rows == scratch.n_rows
+    service_stats = svc.service_meta()
+
+  # phase 4: chaos mini-run — concurrent sessions under injected faults
+  # (and a sick-device breaker) still match solo healthy runs
+  space = DesignSpace()
+  n_rand = 500 if smoke else 5000
+  refs = {s: stream_explore(backend(), space, layers, network="resnet20",
+                            n_per_type=n_rand, seed=s,
+                            reducers=reducers(), chunk_size=chunk_size)
+          for s in (1, 2)}
+  plan = FaultPlan.seeded(seed=5, n_chunks=16, p_raise=0.5, layer="task",
+                          times=2)
+  chaos = ExplorationService(backend(), slots=2,
+                             retry=RetryPolicy(sleep=lambda s: None),
+                             fault_plan=plan,
+                             breaker=CircuitBreaker(threshold=2))
+  t0 = time.perf_counter()
+  handles = {s: chaos.submit_explore(space, layers, "resnet20",
+                                     n_per_type=n_rand, seed=s,
+                                     chunk_size=chunk_size,
+                                     reducers=reducers())
+             for s in (1, 2)}
+  chaos.drain()
+  chaos_s = time.perf_counter() - t0
+  chaos_identical = all(identical(handles[s].result(), refs[s])
+                        for s in (1, 2))
+
+  hit_speedup = cold_s / max(hit_s, 1e-9)
+  delta_speedup = scratch_s / max(delta_s, 1e-9)
+  record = {
+      "n_pairs": int(scratch.n_rows),
+      "base_rows": int(cold.n_rows),
+      "delta_rows": int(delta.meta.get("n_delta_rows", 0)),
+      "cold_seconds": round(cold_s, 4),
+      "store_hit_seconds": round(hit_s, 4),
+      "store_hit_speedup": round(hit_speedup, 2),
+      "store_hit_taken": bool(store_hit),
+      "store_hit_bit_identical": bool(hit_identical),
+      "delta_seconds": round(delta_s, 4),
+      "scratch_seconds": round(scratch_s, 4),
+      "delta_speedup": round(delta_speedup, 2),
+      "delta_sweep_taken": bool(delta_ran),
+      "delta_bit_identical": bool(delta_identical),
+      "chaos_sessions": 2,
+      "chaos_seconds": round(chaos_s, 4),
+      "chaos_faults_fired": int(plan.n_fired),
+      "chaos_bit_identical": bool(chaos_identical),
+      "service": {k: v for k, v in service_stats.items()
+                  if isinstance(v, (int, float))},
+  }
+  path = write_bench_json("service_smoke" if smoke else "service", record)
+  emit("service_perf", cold_s / max(cold.n_rows, 1) * 1e6,
+       f"pairs={record['n_pairs']};hit_x={record['store_hit_speedup']};"
+       f"delta_x={record['delta_speedup']};"
+       f"delta_identical={delta_identical};"
+       f"chaos_identical={chaos_identical};json={path}")
+  if not (store_hit and hit_identical):
+    raise AssertionError("store hit missing or diverged from cold sweep")
+  if not (delta_ran and delta_identical):
+    raise AssertionError("delta-sweep missing or diverged from scratch")
+  if not chaos_identical:
+    raise AssertionError("chaos sessions diverged from solo healthy runs")
+  if not smoke and (hit_speedup < 5.0 or delta_speedup < 5.0):
+    raise AssertionError(
+        f"amortization regressed: hit {hit_speedup:.1f}x, "
+        f"delta {delta_speedup:.1f}x (need >= 5x)")
+
+
+ALL = [service_perf]

@@ -66,3 +66,52 @@ class BareExcept(Rule):
             "(body is only pass/...); re-raise, degrade to a fallback "
             "rung, or return an explicit sentinel so the failure stays "
             "visible to retry/demotion accounting")
+
+
+def _has_timeout(call: ast.Call) -> bool:
+  return any(kw.arg == "timeout" for kw in call.keywords)
+
+
+@register
+class UnboundedJoin(Rule):
+  id = "ROB002"
+  pack = "robustness"
+  summary = ("unbounded thread/executor join or wait in the exploration "
+             "stack")
+
+  def check_module(self, mod, ctx):
+    """Flags waits that can block forever in ``explore/``:
+
+    * zero-argument ``.join()`` — a hung worker (the exact failure the
+      resilience watchdog exists for) wedges the caller with it; pass a
+      timeout and handle the still-alive case,
+    * zero-argument ``.wait()`` — an ``Event``/``Condition`` wait with
+      no timeout never re-checks cancellation or deadlines,
+    * ``wait(futures)`` (the ``concurrent.futures`` form) without a
+      ``timeout=``/second positional — one lost future stalls the whole
+      dispatch loop.
+
+    String/path ``.join(parts)`` calls carry an argument, so only the
+    thread-shaped zero-argument form is flagged.
+    """
+    if not _in_robustness_scope(mod.rel):
+      return
+    for node in ast.walk(mod.tree):
+      if not isinstance(node, ast.Call):
+        continue
+      fn = node.func
+      if isinstance(fn, ast.Attribute) and fn.attr in ("join", "wait") \
+          and not node.args and not _has_timeout(node):
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            f"zero-argument .{fn.attr}() blocks forever if the other "
+            "side hangs — the resilience layer's watchdog/cancellation "
+            "never gets a chance; pass a timeout and re-check "
+            "deadline/cancel state in a loop")
+      elif (isinstance(fn, ast.Name) and fn.id == "wait"
+            and len(node.args) < 2 and not _has_timeout(node)):
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            "concurrent.futures.wait without timeout= stalls the "
+            "dispatch loop on a single lost future; use "
+            "timeout=POOL_WAIT_SECONDS in a re-arming loop")

@@ -53,6 +53,16 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        (SweepJournal + ``resume_from=``), deterministic
                        fault injection (FaultPlan) — results stay
                        bit-identical through all of it        [resilience]
+  exploration service  concurrent sessions over one shared executor:
+                       admission control + typed backpressure, per-request
+                       deadlines and cooperative cancellation, a shared
+                       device circuit breaker, fair round-robin
+                       interleaving (ExplorationService)         [service]
+  result store         content-addressed crash-safe cache of finished
+                       sweeps (atomic writes, sha256 self-checksums,
+                       quarantine) + delta-sweeps re-evaluating only an
+                       edited axis' new subgrid (ResultStore,
+                       cached_stream_explore)                     [store]
 
 Quickstart::
 
@@ -97,9 +107,14 @@ from repro.explore.resilience import (ChunkError, ChunkTask, Fault,
                                       FaultInjected, FaultPlan, InjectedHang,
                                       ResiliencePolicy, RetryPolicy, Rung,
                                       SweepJournal, SweepKilled, sweep_key)
+from repro.explore.resilience import CircuitBreaker
 from repro.explore.search import (crowding_distance, guided_search,
                                   hypervolume, nondominated_ranks,
                                   objective_matrix)
+from repro.explore.service import (AdmissionRejected, BudgetExhausted,
+                                   Deadline, DeadlineExceeded,
+                                   ExplorationService, SessionCancelled,
+                                   SessionHandle)
 from repro.explore.session import ExplorationSession
 from repro.explore.space import (AXIS_ORDER, Axis, DesignSpace,
                                  VectorConstraint, vector_constraint)
@@ -109,17 +124,23 @@ from repro.explore.streaming import (STREAM_AUTO_MIN_ROWS,
                                      Reducer, StatsAccumulator, StreamResult,
                                      TopKAccumulator, stream_co_explore,
                                      stream_explore)
+from repro.explore.store import (ResultStore, cached_stream_co_explore,
+                                 cached_stream_explore)
 
 __all__ = [
-    "AXIS_ORDER", "Axis", "ChunkError", "ChunkTask", "CollectAccumulator",
-    "ConfigTable", "DesignPoint", "DesignSpace", "EvaluationBackend",
+    "AXIS_ORDER", "AdmissionRejected", "Axis", "BudgetExhausted",
+    "ChunkError", "ChunkTask", "CircuitBreaker", "CollectAccumulator",
+    "ConfigTable", "Deadline", "DeadlineExceeded", "DesignPoint",
+    "DesignSpace", "EvaluationBackend", "ExplorationService",
     "ExplorationSession", "Fault", "FaultInjected", "FaultPlan",
     "HistogramAccumulator", "InjectedHang", "JointTable", "LayerStack",
     "Normalized", "OracleBackend", "ParetoAccumulator", "PolynomialBackend",
-    "Reducer", "ResiliencePolicy", "ResultFrame", "RetryPolicy", "Rung",
-    "STREAM_AUTO_MIN_ROWS", "StatsAccumulator", "StreamResult",
-    "SweepJournal", "SweepKilled", "TopKAccumulator", "VectorConstraint",
-    "VectorOracleBackend", "crowding_distance", "gbuf_overheads",
+    "Reducer", "ResiliencePolicy", "ResultFrame", "ResultStore",
+    "RetryPolicy", "Rung", "STREAM_AUTO_MIN_ROWS", "SessionCancelled",
+    "SessionHandle", "StatsAccumulator", "StreamResult", "SweepJournal",
+    "SweepKilled", "TopKAccumulator", "VectorConstraint",
+    "VectorOracleBackend", "cached_stream_co_explore",
+    "cached_stream_explore", "crowding_distance", "gbuf_overheads",
     "gbuf_overheads_table", "guided_search", "hypervolume",
     "nondominated_ranks", "objective_matrix", "pareto_mask",
     "stable_topk_indices", "stream_co_explore", "stream_explore",

@@ -46,9 +46,10 @@ import dataclasses
 import hashlib
 import os
 import pickle
+import struct
 import threading
 import time
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -242,6 +243,125 @@ class ChunkTask:
     return self.rungs[0].fn()
 
 
+BREAKER_STATES = ("closed", "open", "half-open")
+
+
+class CircuitBreaker:
+  """Device-rung circuit breaker for the degradation ladder.
+
+  The per-chunk ladder already heals individual device failures by
+  demotion, but when the device rung is *persistently* sick (a wedged
+  runtime, a driver in a crash loop) every chunk still pays the full
+  retry + watchdog budget before falling back.  The breaker converts
+  that into a fleet-level decision: after ``threshold`` consecutive
+  device-rung failures it **opens** and new chunks skip the device rungs
+  entirely (straight to the terminal numpy rung — bit-identical by the
+  parity contract).  After a seeded cooldown — ``cooldown`` chunks plus
+  a deterministic jitter drawn from ``seed`` so concurrent services
+  don't re-probe in lockstep — it goes **half-open** and lets exactly
+  one probe chunk try the device rung; success closes the breaker,
+  failure re-opens it.  Every transition is recorded (and surfaced in
+  ``StreamResult.meta``) as ``(event_count, from_state, to_state)``.
+
+  Thread-safe; one breaker is shared by all sessions multiplexed over a
+  device executor so the open/closed decision reflects the device, not
+  any single session's luck.
+  """
+
+  def __init__(self, threshold: int = 3, cooldown: int = 8,
+               jitter: int = 2, seed: int = 0):
+    if threshold < 1:
+      raise ValueError(f"threshold must be >= 1, got {threshold}")
+    if cooldown < 1:
+      raise ValueError(f"cooldown must be >= 1, got {cooldown}")
+    if jitter < 0:
+      raise ValueError(f"jitter must be >= 0, got {jitter}")
+    self.threshold = int(threshold)
+    self.cooldown = int(cooldown)
+    self.jitter = int(jitter)
+    self._rng = np.random.RandomState(derive_seed("circuit-breaker", seed))
+    self.state = "closed"
+    self.n_opens = 0
+    self.n_short_circuits = 0
+    self.n_probes = 0
+    self.transitions: List[Tuple[int, str, str]] = []
+    self._failures = 0
+    self._cooldown_left = 0
+    self._probing = False
+    self._events = 0
+    self._lock = threading.Lock()
+
+  def _to(self, state: str) -> None:
+    self.transitions.append((self._events, self.state, state))
+    self.state = state
+
+  def _arm_cooldown(self) -> None:
+    extra = int(self._rng.randint(0, self.jitter + 1)) if self.jitter else 0
+    self._cooldown_left = self.cooldown + extra
+
+  def allow_device(self) -> bool:
+    """Consulted once per chunk ladder that has device rungs: may this
+    chunk dispatch on the device?  While open, each refusal counts down
+    the cooldown; when it reaches zero the breaker turns half-open and
+    admits a single probe."""
+    with self._lock:
+      self._events += 1
+      if self.state == "closed":
+        return True
+      if self.state == "open":
+        self._cooldown_left -= 1
+        if self._cooldown_left > 0:
+          self.n_short_circuits += 1
+          return False
+        self._to("half-open")
+        self._probing = False
+      # half-open: one probe in flight at a time
+      if self._probing:
+        self.n_short_circuits += 1
+        return False
+      self._probing = True
+      self.n_probes += 1
+      return True
+
+  def record_failure(self) -> None:
+    """A device-rung dispatch or resolution failed (demotion/timeout)."""
+    with self._lock:
+      self._events += 1
+      if self.state == "half-open":
+        self._probing = False
+        self._to("open")
+        self.n_opens += 1
+        self._arm_cooldown()
+      elif self.state == "closed":
+        self._failures += 1
+        if self._failures >= self.threshold:
+          self._to("open")
+          self.n_opens += 1
+          self._arm_cooldown()
+
+  def record_success(self) -> None:
+    """A device-rung chunk completed (dispatch + resolution)."""
+    with self._lock:
+      self._events += 1
+      if self.state == "half-open":
+        self._probing = False
+        self._failures = 0
+        self._to("closed")
+      elif self.state == "closed":
+        self._failures = 0
+
+  def meta(self) -> Dict[str, object]:
+    """Snapshot for ``StreamResult.meta`` merging."""
+    with self._lock:
+      return {
+          "breaker_state": self.state,
+          "n_breaker_opens": float(self.n_opens),
+          "n_breaker_short_circuits": float(self.n_short_circuits),
+          "n_breaker_probes": float(self.n_probes),
+          "breaker_transitions": list(self.transitions),
+      }
+
+
 class ResiliencePolicy:
   """Executes :class:`ChunkTask` ladders with retry, demotion, and an
   optional resolution watchdog.
@@ -258,10 +378,16 @@ class ResiliencePolicy:
 
   def __init__(self, retry: Optional[RetryPolicy] = None,
                fault_plan: Optional[FaultPlan] = None,
-               resolve_timeout: Optional[float] = None):
+               resolve_timeout: Union[None, float,
+                                      Callable[[], Optional[float]]] = None,
+               breaker: Optional[CircuitBreaker] = None):
     self.retry = RetryPolicy() if retry is None else retry
     self.fault_plan = fault_plan
+    # either a fixed budget or a callable evaluated at each resolve —
+    # the service layer passes ``lambda: min(base, deadline.remaining())``
+    # so per-request deadlines reach the watchdog without new plumbing
     self.resolve_timeout = resolve_timeout
+    self.breaker = breaker
     self.n_retries = 0
     self.n_demotions = 0
     self.demotions: List[Tuple[int, str, str]] = []  # (chunk, rung, why)
@@ -298,12 +424,20 @@ class ResiliencePolicy:
 
   def _run_ladder(self, task: ChunkTask, start: int):
     last: Optional[Exception] = None
+    skip_device = False
+    if (self.breaker is not None and start == 0
+        and any(r.layer == "device" for r in task.rungs)):
+      skip_device = not self.breaker.allow_device()
     for r in range(start, len(task.rungs)):
       rung = task.rungs[r]
+      if skip_device and rung.layer == "device" and r + 1 < len(task.rungs):
+        continue  # breaker open: route straight past the device rungs
       try:
         out = self.retry.call(self._attempt(task, rung),
                               on_retry=lambda a, e: self._note_retry())
       except StepFailure as e:
+        if rung.layer == "device" and self.breaker is not None:
+          self.breaker.record_failure()
         if r + 1 < len(task.rungs):
           self._note_demotion(task.index, rung.name, "dispatch")
           last = e
@@ -311,6 +445,8 @@ class ResiliencePolicy:
         raise
       if hasattr(out, "resolve") and r + 1 < len(task.rungs):
         return _GuardedPending(self, task, r, out)
+      if rung.layer == "device" and self.breaker is not None:
+        self.breaker.record_success()
       return out
     raise StepFailure(f"chunk {task.index}: every ladder rung "
                       "exhausted") from last  # pragma: no cover
@@ -320,8 +456,13 @@ class ResiliencePolicy:
     on a daemon helper thread and a bounded join decides whether it hung
     (the abandoned thread keeps draining the device queue harmlessly —
     its result is discarded and the chunk recomputed on a lower rung)."""
-    if self.resolve_timeout is None:
+    timeout = (self.resolve_timeout() if callable(self.resolve_timeout)
+               else self.resolve_timeout)
+    if timeout is None:
       return handle.resolve()
+    if timeout <= 0.0:
+      # deadline already spent: abandon without starting a helper thread
+      raise ChunkTimeout("resolution budget exhausted before resolve")
     box: List[Tuple[str, object]] = []
 
     def run():
@@ -332,10 +473,10 @@ class ResiliencePolicy:
 
     t = threading.Thread(target=run, daemon=True)
     t.start()
-    t.join(self.resolve_timeout)
+    t.join(timeout)
     if not box:
       raise ChunkTimeout(
-          f"resolution exceeded the {self.resolve_timeout}s watchdog")
+          f"resolution exceeded the {timeout}s watchdog")
     tag, val = box[0]
     if tag == "err":
       raise val
@@ -361,18 +502,23 @@ class _GuardedPending:
     try:
       if policy.fault_plan is not None:
         policy.fault_plan.check_resolve(rung.layer, task.index)
-      return policy._timed_resolve(self._handle)
+      val = policy._timed_resolve(self._handle)
     except SweepKilled:
       raise
     except demotable:
       # hung or failed resolution: recompute on the remaining rungs —
       # the chunk is a pure function of its index, so whichever rung
       # finishes it, the folded rows are bit-identical
+      if rung.layer == "device" and policy.breaker is not None:
+        policy.breaker.record_failure()
       policy._note_demotion(task.index, rung.name, "resolve")
       out = policy._run_ladder(task, self._pos + 1)
       if hasattr(out, "resolve"):
         out = out.resolve()
       return out
+    if rung.layer == "device" and policy.breaker is not None:
+      policy.breaker.record_success()
+    return val
 
 
 # ---------------------------------------------------------------------------
@@ -470,3 +616,83 @@ class SweepJournal:
         or payload.get("key") != key):
       return None
     return payload.get("state")
+
+  # -- append-log records ---------------------------------------------------
+  #
+  # ``record``/``load`` replace the whole snapshot atomically — safe, but
+  # one fsync'd rewrite of the entire reducer state per checkpoint.  The
+  # exploration service checkpoints many interleaved sessions, so it uses
+  # an append-only log instead: each entry is a complete snapshot framed
+  # as ``magic | u64 length | sha256(payload) | payload``, appended and
+  # fsync'd.  A kill mid-append leaves at most one partial trailing frame;
+  # ``replay`` detects it (short frame, bad digest, or bad magic),
+  # truncates the file back to the last valid record, and returns the
+  # surviving entries — recovery, never an exception.
+
+  _LOG_MAGIC = b"SWPJ"
+  _LOG_HEADER = len(_LOG_MAGIC) + 8 + 32  # magic + length + sha256 digest
+
+  def log_path(self, key: str) -> str:
+    return os.path.join(self.dir, f"sweep-{key[:32]}.log")
+
+  def append(self, key: str, state: Dict[str, object]) -> None:
+    payload = pickle.dumps(
+        {"version": JOURNAL_VERSION, "key": key, "state": state},
+        protocol=pickle.HIGHEST_PROTOCOL)
+    frame = (self._LOG_MAGIC + struct.pack("<Q", len(payload))
+             + hashlib.sha256(payload).digest() + payload)
+    with open(self.log_path(key), "ab") as f:
+      f.write(frame)
+      f.flush()
+      os.fsync(f.fileno())
+
+  def replay(self, key: str) -> List[Dict[str, object]]:
+    """All valid states in append order, truncating trailing garbage."""
+    try:
+      with open(self.log_path(key), "rb") as f:
+        data = f.read()
+    except FileNotFoundError:
+      return []
+    states: List[Dict[str, object]] = []
+    off = 0
+    good_end = 0
+    n_magic = len(self._LOG_MAGIC)
+    while off < len(data):
+      header = data[off:off + self._LOG_HEADER]
+      if len(header) < self._LOG_HEADER or header[:n_magic] != self._LOG_MAGIC:
+        break
+      (length,) = struct.unpack("<Q", header[n_magic:n_magic + 8])
+      digest = header[n_magic + 8:self._LOG_HEADER]
+      payload = data[off + self._LOG_HEADER:off + self._LOG_HEADER + length]
+      if (len(payload) < length
+          or hashlib.sha256(payload).digest() != digest):
+        break
+      try:
+        rec = pickle.loads(payload)
+      except Exception:
+        break
+      if rec.get("version") != JOURNAL_VERSION or rec.get("key") != key:
+        break
+      states.append(rec["state"])
+      off += self._LOG_HEADER + length
+      good_end = off
+    if good_end < len(data):
+      with open(self.log_path(key), "r+b") as f:
+        f.truncate(good_end)
+    return states
+
+  def load_last(self, key: str) -> Optional[Dict[str, object]]:
+    """Latest valid append-log state for ``key`` (None if none)."""
+    states = self.replay(key)
+    return states[-1] if states else None
+
+  def load_state(self, key: str) -> Optional[Dict[str, object]]:
+    """Best available checkpoint across both storage styles: the atomic
+    snapshot (``record``) and the append log (``append``).  When both
+    exist — e.g. a sweep started under ``run_stream`` and continued in
+    the service — the one with more folded chunks wins."""
+    candidates = [s for s in (self.load(key), self.load_last(key))
+                  if s is not None]
+    if not candidates:
+      return None
+    return max(candidates, key=lambda s: len(s.get("done", ())))

@@ -71,8 +71,8 @@ class ExplorationSession:
               vectorized: Union[bool, str] = "auto", stream: bool = False,
               reducers: Optional[Dict[str, Reducer]] = None,
               chunk_size: int = 65536, workers: Optional[int] = None,
-              policy=None, resume_from=None, checkpoint_every: int = 1
-              ) -> Union[ResultFrame, StreamResult]:
+              policy=None, resume_from=None, checkpoint_every: int = 1,
+              store=None) -> Union[ResultFrame, StreamResult]:
     """Sample the space, evaluate `network`; optionally time the oracle on
     the first `measure_oracle` configs for the paper's speedup claim.
 
@@ -103,10 +103,23 @@ class ExplorationSession:
     if (policy is not None or resume_from is not None) and not stream:
       raise ValueError("policy/resume_from apply to the streaming engine; "
                        "pass stream=True")
+    if store is not None and not stream:
+      raise ValueError("store applies to the streaming engine; "
+                       "pass stream=True")
     if stream:
       if measure_oracle:
         raise ValueError("measure_oracle is a one-shot feature; "
                          "pass stream=False")
+      if store is not None:
+        from repro.explore.store import cached_stream_explore
+        return cached_stream_explore(self.backend, self.space, layers,
+                                     network, n_per_type=n_per_type,
+                                     seed=seed, method=method,
+                                     reducers=reducers,
+                                     chunk_size=chunk_size, workers=workers,
+                                     policy=policy,
+                                     checkpoint_every=checkpoint_every,
+                                     store=store)
       return stream_explore(self.backend, self.space, layers, network,
                             n_per_type=n_per_type, seed=seed, method=method,
                             reducers=reducers, chunk_size=chunk_size,
@@ -293,8 +306,8 @@ class ExplorationSession:
                  vectorized: Union[bool, str] = "auto", stream: bool = False,
                  reducers: Optional[Dict[str, Reducer]] = None,
                  chunk_size: int = 65536, workers: Optional[int] = None,
-                 policy=None, resume_from=None, checkpoint_every: int = 1
-                 ) -> Union[ResultFrame, StreamResult]:
+                 policy=None, resume_from=None, checkpoint_every: int = 1,
+                 store=None) -> Union[ResultFrame, StreamResult]:
     """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
 
     Rows carry a ``top1`` float column and an integer ``arch_id`` column
@@ -330,10 +343,23 @@ class ExplorationSession:
     if (policy is not None or resume_from is not None) and not stream:
       raise ValueError("policy/resume_from apply to the streaming engine; "
                        "pass stream=True")
+    if store is not None and not stream:
+      raise ValueError("store applies to the streaming engine; "
+                       "pass stream=True")
     if stream:
       if not hasattr(self.backend, "co_evaluate_table"):
         raise ValueError(f"backend {self.backend.name!r} has no "
                          "co_evaluate_table; streaming needs the joint path")
+      if store is not None:
+        from repro.explore.store import cached_stream_co_explore
+        return cached_stream_co_explore(self.backend, self.space, arch_accs,
+                                        n_hw_per_type=n_hw_per_type,
+                                        seed=seed, image_size=image_size,
+                                        method=method, reducers=reducers,
+                                        chunk_size=chunk_size,
+                                        workers=workers, policy=policy,
+                                        checkpoint_every=checkpoint_every,
+                                        store=store)
       return stream_co_explore(self.backend, self.space, arch_accs,
                                n_hw_per_type=n_hw_per_type, seed=seed,
                                image_size=image_size, method=method,

@@ -128,10 +128,88 @@ class DesignSpace:
     per_type = math.prod(len(a.values) for a in self.axes)
     return per_type * len(self.pe_types)
 
+  def per_type_grid_size(self) -> int:
+    """Cardinality of one PE type's unconstrained axis grid."""
+    return math.prod(len(a.values) for a in self.axes)
+
   def __repr__(self) -> str:
     dims = "x".join(str(len(a.values)) for a in self.axes)
     return (f"DesignSpace({len(self.pe_types)} PE types x {dims} grid, "
             f"{len(self.constraints)} constraints, size={self.size():,})")
+
+  # -- subgrid diffing (delta-sweep support, see repro.explore.store) --------
+
+  def with_axes(self, **overrides) -> "DesignSpace":
+    """A copy of this space with the given axes' value tuples replaced
+    (PE types and constraints carried over)."""
+    axes = {a.name: a.values for a in self.axes}
+    axes.update({name: tuple(vals) for name, vals in overrides.items()})
+    return DesignSpace(self.pe_types, axes, self.constraints)
+
+  def axis_delta(self, base) -> Optional[Tuple[str, Tuple[float, ...]]]:
+    """The single-axis edit turning ``base`` into this space, if any.
+
+    Returns ``(axis_name, added_values)`` when exactly one axis differs
+    and the base axis' values appear in this axis' values in the same
+    relative order (an in-order supersequence).  That order condition is
+    what makes the :meth:`grid_rank` remap of base points strictly
+    monotone — the soundness requirement for merging a cached sweep into
+    an edited space (selections and tie-breaks are order-determined).
+    ``base`` may be another DesignSpace or a ``{axis: values}`` mapping
+    (a stored manifest; PE-type/constraint compatibility is then the
+    caller's check).  None when the spaces are identical, differ on more
+    than one axis, drop values, or break the order condition.
+    """
+    if isinstance(base, DesignSpace):
+      if (self.pe_types != base.pe_types
+          or len(self.constraints) != len(base.constraints)):
+        return None
+      base_axes = {a.name: a.values for a in base.axes}
+    else:
+      base_axes = {name: tuple(vals) for name, vals in dict(base).items()}
+      if set(base_axes) != {a.name for a in self.axes}:
+        return None
+    diff: Optional[Tuple[str, Tuple[float, ...]]] = None
+    for a in self.axes:
+      bv = base_axes[a.name]
+      if tuple(a.values) == bv:
+        continue
+      if diff is not None:
+        return None  # more than one axis edited
+      it = iter(a.values)
+      if not all(any(v == w for w in it) for v in bv):
+        return None  # a base value was dropped or reordered
+      base_set = set(bv)
+      added = tuple(v for v in a.values if v not in base_set)
+      if len(added) + len(bv) != len(a.values):
+        return None  # duplicated values
+      diff = (a.name, added)
+    return diff
+
+  def grid_rank(self, table: ConfigTable) -> np.ndarray:
+    """Canonical global row ids: each row's mixed-radix rank in this
+    space's full-grid enumeration (PE-type-major, axes in AXIS_ORDER
+    with the last axis fastest — exactly the ``method="grid"`` visit
+    order).  Unlike the engine's compacted ``arange`` ids, these ranks
+    are a pure function of the row's *values*, so points keep an
+    order-isomorphic addressing when an axis gains values: delta-sweeps
+    re-rank cached survivors here before folding the new subgrid."""
+    try:
+      code_to_type = np.asarray(
+          [self.pe_types.index(nm) for nm in table.pe_type_names], np.int64)
+    except ValueError:
+      raise ValueError("table contains PE types outside this space")
+    rank = code_to_type[np.asarray(table.pe_code, np.int64)]
+    for a in self.axes:
+      vals = np.asarray(a.values)
+      col = np.asarray(getattr(table, a.name))
+      order = np.argsort(vals, kind="stable")
+      pos = np.clip(np.searchsorted(vals[order], col), 0, len(vals) - 1)
+      ai = order[pos]
+      if not np.array_equal(vals[ai], col.astype(vals.dtype)):
+        raise ValueError(f"axis {a.name!r}: table values outside this space")
+      rank = rank * len(vals) + ai
+    return rank.astype(np.int64)
 
   # -- construction helpers ------------------------------------------------
 

@@ -166,6 +166,16 @@ class Reducer:
     reducers with equal fingerprints accept each other's snapshots."""
     return type(self).__name__
 
+  def remap_indices(self, ranker: Callable[[ResultFrame], np.ndarray]) -> None:
+    """Rewrite the retained survivors' global row ids via ``ranker``
+    (a frame -> int64 ids function).  Delta-sweeps (see
+    :mod:`repro.explore.store`) restore a cached accumulator whose ids
+    were assigned under the *base* space's enumeration and re-address
+    them in the edited space before folding the new subgrid; as long as
+    the remap is strictly monotone over the old points, every selection
+    and tie-break is unchanged.  Default: no retained ids, nothing to
+    do (stats/histogram state is id-free)."""
+
 
 class ParetoAccumulator(Reducer):
   """Online non-dominated front over the given columns.
@@ -216,6 +226,10 @@ class ParetoAccumulator(Reducer):
     from repro.explore.device import ParetoSpec
     return ParetoSpec(self.cols,
                       tuple(c for c in self.cols if c in self._mx))
+
+  def remap_indices(self, ranker) -> None:
+    if self._frame is not None and len(self._frame):
+      self._idx = np.asarray(ranker(self._frame), np.int64)
 
   def fingerprint(self) -> str:
     mx = ",".join(sorted(c for c in self.cols if c in self._mx))
@@ -268,6 +282,10 @@ class TopKAccumulator(Reducer):
   def device_spec(self):
     from repro.explore.device import TopKSpec
     return TopKSpec(self.by, self.k, self.maximize)
+
+  def remap_indices(self, ranker) -> None:
+    if self._frame is not None and len(self._frame):
+      self._idx = np.asarray(ranker(self._frame), np.int64)
 
   def fingerprint(self) -> str:
     return f"TopK(k={self.k};by={self.by};mx={self.maximize})"
@@ -422,6 +440,9 @@ class CollectAccumulator(Reducer):
     self._frames.append(frame)
     self._idx.append(np.asarray(indices, np.int64))
 
+  def remap_indices(self, ranker) -> None:
+    self._idx = [np.asarray(ranker(f), np.int64) for f in self._frames]
+
   def result(self) -> ResultFrame:
     if not self._frames:
       return _empty_frame()
@@ -446,6 +467,41 @@ class StreamResult:
 
   def __getitem__(self, name: str):
     return self.results[name]
+
+
+def new_counters() -> Dict[str, int]:
+  """A fresh run-stats dict in the shape the journal checkpoints."""
+  return {"n_rows": 0, "n_chunks": 0, "n_transferred": 0,
+          "n_overflows": 0, "n_retries": 0, "n_demotions": 0}
+
+
+def fold_chunk(reducers: Dict[str, Reducer], counters: Dict[str, int],
+               result) -> None:
+  """Resolve (if pending) and fold one completed chunk into every
+  reducer, updating ``counters``.  Shared by :func:`run_stream` and the
+  exploration service's session scheduler so both fold identically."""
+  if hasattr(result, "resolve"):
+    result = result.resolve()
+  counters["n_chunks"] += 1
+  payloads = getattr(result, "payloads", None)
+  if payloads is not None:  # a device FusedChunk (duck-typed: keeps
+    counters["n_rows"] += result.n_rows  # numpy path device-import-free
+    counters["n_transferred"] += result.n_transferred
+    counters["n_overflows"] += getattr(result, "n_overflows", 0)
+    for name, payload in payloads.items():
+      reducers[name].fold_payload(payload)
+    return
+  frame, indices = result
+  counters["n_rows"] += len(frame)
+  counters["n_transferred"] += len(frame)
+  for r in reducers.values():
+    r.fold(frame, indices)
+
+
+# ROB002: every wait in explore/ must carry a bounded timeout (the
+# watchdog idiom) — the pool waits below re-arm in a loop, so a slow
+# chunk never wedges the submitting thread invisibly
+POOL_WAIT_SECONDS = 60.0
 
 
 def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
@@ -491,13 +547,12 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
   t0 = time.perf_counter()
   journal = None
   done_chunks: set = set()
-  counters = {"n_rows": 0, "n_chunks": 0, "n_transferred": 0,
-              "n_overflows": 0, "n_retries": 0, "n_demotions": 0}
+  counters = new_counters()
   n_resumed = 0
   if resume_from is not None:
     journal = resume_from if isinstance(resume_from, SweepJournal) \
         else SweepJournal(resume_from)
-    state = journal.load(journal_key)
+    state = journal.load_state(journal_key)
     if state is not None:
       done_chunks = set(state["done"])
       for name, r in reducers.items():
@@ -540,27 +595,9 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
       raise exc
     raise ChunkError(index, f"{type(exc).__name__}: {exc}") from exc
 
-  def fold(result) -> None:
-    if hasattr(result, "resolve"):
-      result = result.resolve()
-    counters["n_chunks"] += 1
-    payloads = getattr(result, "payloads", None)
-    if payloads is not None:  # a device FusedChunk (duck-typed: keeps
-      counters["n_rows"] += result.n_rows  # numpy path device-import-free
-      counters["n_transferred"] += result.n_transferred
-      counters["n_overflows"] += getattr(result, "n_overflows", 0)
-      for name, payload in payloads.items():
-        reducers[name].fold_payload(payload)
-      return
-    frame, indices = result
-    counters["n_rows"] += len(frame)
-    counters["n_transferred"] += len(frame)
-    for r in reducers.values():
-      r.fold(frame, indices)
-
   def finish(index, result) -> None:
     try:
-      fold(result)
+      fold_chunk(reducers, counters, result)
     except Exception as e:
       fail(index, e)
     done_chunks.add(index)
@@ -606,11 +643,13 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
       try:
         for index, task in indexed(tasks):
           pending[pool.submit(execute, task)] = index
-          if len(pending) >= 2 * workers:
-            ready, _ = wait(set(pending), return_when=FIRST_COMPLETED)
+          while len(pending) >= 2 * workers:
+            ready, _ = wait(set(pending), timeout=POOL_WAIT_SECONDS,
+                            return_when=FIRST_COMPLETED)
             drain(ready)
         while pending:
-          ready, _ = wait(set(pending), return_when=FIRST_COMPLETED)
+          ready, _ = wait(set(pending), timeout=POOL_WAIT_SECONDS,
+                          return_when=FIRST_COMPLETED)
           drain(ready)
       except Exception:
         # fatal: drop queued chunks so the pool shuts down promptly
@@ -621,59 +660,79 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
   checkpoint(force=True)
   seconds = time.perf_counter() - t0
   n_retries, n_demotions = totals()
+  meta = {"seconds": seconds, "workers": float(workers),
+          "n_chunks": float(counters["n_chunks"]),
+          "rows_transferred": float(counters["n_transferred"]),
+          "rows_per_sec": counters["n_rows"] / max(seconds, 1e-12),
+          "n_retries": float(n_retries),
+          "n_demotions": float(n_demotions),
+          "n_resumed_chunks": float(n_resumed),
+          "n_overflows": float(counters["n_overflows"])}
+  if policy is not None and policy.breaker is not None:
+    meta.update(policy.breaker.meta())
   return StreamResult(
       results={name: r.result() for name, r in reducers.items()},
-      n_rows=counters["n_rows"], seconds=seconds,
-      meta={"seconds": seconds, "workers": float(workers),
-            "n_chunks": float(counters["n_chunks"]),
-            "rows_transferred": float(counters["n_transferred"]),
-            "rows_per_sec": counters["n_rows"] / max(seconds, 1e-12),
-            "n_retries": float(n_retries),
-            "n_demotions": float(n_demotions),
-            "n_resumed_chunks": float(n_resumed),
-            "n_overflows": float(counters["n_overflows"])})
+      n_rows=counters["n_rows"], seconds=seconds, meta=meta)
 
 
 # ---------------------------------------------------------------------------
 # drivers: plain DSE + joint co-exploration
 # ---------------------------------------------------------------------------
 
-def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
-                   n_per_type: int = 200, seed: int = 17,
-                   method: str = "random",
-                   reducers: Optional[Dict[str, Reducer]] = None,
-                   chunk_size: int = 65536,
-                   workers: Optional[int] = None,
-                   policy: Optional[ResiliencePolicy] = None,
-                   resume_from=None,
-                   checkpoint_every: int = 1) -> StreamResult:
-  """Sample -> evaluate -> reduce a plain HW sweep in bounded memory.
+def default_explore_reducers() -> Dict[str, Reducer]:
+  """The paper's default plain-sweep reduction plan."""
+  return {"pareto": ParetoAccumulator()}
 
-  Chunks come from ``space.iter_tables`` (bit-identical concatenation to
-  ``sample_table``), evaluate through ``backend.evaluate_table``, and
-  fold into ``reducers`` (default: one ParetoAccumulator on the paper's
-  (perf_per_area, energy) axes).  Global row ids follow the one-shot
-  sample order, so survivors match the one-shot frame row for row.
 
-  On a ``jit=True`` backend chunks dispatch asynchronously; when every
-  reducer is device-fusable the evaluate+reduce pipeline additionally
-  fuses into one jitted program per chunk (see
-  :mod:`repro.explore.device`), so only O(survivors) floats come back
-  per chunk instead of full metric arrays.
+def default_co_reducers() -> Dict[str, Reducer]:
+  """The paper's default 3-objective joint-front reduction plan."""
+  return {"pareto": ParetoAccumulator(("top1_err", "energy_mj",
+                                       "area_mm2"))}
 
-  Each chunk carries the full fallback ladder ``fused-device ->
-  unfused-device -> numpy`` (whichever rungs the backend supports); a
-  ``policy`` walks it on failures, and ``resume_from`` journals /
-  restores the sweep under a content-addressed key derived from the
-  space, oracle version, reducer plan, and the sampling parameters —
-  the backend itself is *not* part of the key (parity makes checkpoints
-  portable across the numpy and device paths).
+
+def explore_sweep_key(space: DesignSpace, reducers: Dict[str, Reducer], *,
+                      n_per_type: int, seed: int, method: str,
+                      chunk_size: int, network: str) -> str:
+  """The content-addressed journal key of a plain streamed sweep."""
+  return sweep_key("explore", space_fingerprint(space),
+                   reducers_fingerprint(reducers),
+                   {"n_per_type": n_per_type, "seed": seed,
+                    "method": method, "chunk_size": chunk_size,
+                    "network": network})
+
+
+def co_explore_sweep_key(space: DesignSpace, reducers: Dict[str, Reducer],
+                         arch_accs, *, n_hw_per_type: int, seed: int,
+                         image_size: int, method: str,
+                         chunk_size: int) -> str:
+  """The content-addressed journal key of a streamed co-exploration."""
+  archs = tuple(arch for arch, _ in arch_accs)
+  accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
+  return sweep_key("co-explore", space_fingerprint(space),
+                   reducers_fingerprint(reducers),
+                   {"n_hw_per_type": n_hw_per_type, "seed": seed,
+                    "image_size": image_size, "method": method,
+                    "chunk_size": chunk_size,
+                    "archs": arch_accs_fingerprint(archs, accs)})
+
+
+def explore_tasks(backend, space: DesignSpace, layers, network: str,
+                  n_per_type: int, seed: int, method: str, chunk_size: int,
+                  reducers: Dict[str, Reducer],
+                  row_ids: Optional[Callable[[object, int], np.ndarray]]
+                  = None) -> Iterator[ChunkTask]:
+  """The ladder-carrying chunk tasks of a plain streamed sweep.
+
+  Extracted from :func:`stream_explore` so the exploration service (and
+  the delta-sweep driver in :mod:`repro.explore.store`) consume the
+  exact same task generators and ladders as the standalone driver.
+  ``row_ids`` overrides the global row-id assignment — default is the
+  one-shot sample order ``arange(offset, offset+len)``; delta-sweeps
+  pass the parent space's canonical grid ranks instead.
   """
   if not hasattr(backend, "evaluate_table"):
     raise ValueError(f"backend {backend.name!r} has no evaluate_table; "
                      "streaming requires the columnar path")
-  if reducers is None:
-    reducers = {"pareto": ParetoAccumulator()}
   plan = None
   device_mode = getattr(backend, "jit", False) \
       and hasattr(backend, "fused_eval_pending")
@@ -703,56 +762,33 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
                       layer="backend"))
     return ChunkTask(index=ci, rungs=tuple(rungs))
 
-  def tasks() -> Iterator[Task]:
+  def gen() -> Iterator[ChunkTask]:
     offset = 0
     for ci, chunk in enumerate(
         space.iter_tables(n_per_type, seed=seed, method=method,
                           chunk_size=chunk_size)):
-      idx = np.arange(offset, offset + len(chunk), dtype=np.int64)
+      if row_ids is None:
+        idx = np.arange(offset, offset + len(chunk), dtype=np.int64)
+      else:
+        idx = np.asarray(row_ids(chunk, offset), np.int64)
       offset += len(chunk)
       yield make_task(chunk, idx, ci)
 
-  key = ""
-  if resume_from is not None:
-    key = sweep_key("explore", space_fingerprint(space),
-                    reducers_fingerprint(reducers),
-                    {"n_per_type": n_per_type, "seed": seed,
-                     "method": method, "chunk_size": chunk_size,
-                     "network": network})
-  return run_stream(tasks(), reducers,
-                    workers=default_workers(backend) if workers is None
-                    else workers,
-                    policy=policy, resume_from=resume_from,
-                    journal_key=key, checkpoint_every=checkpoint_every)
+  return gen()
 
 
-def stream_co_explore(backend, space: DesignSpace, arch_accs,
-                      n_hw_per_type: int = 20, seed: int = 3,
-                      image_size: int = 32, method: str = "random",
-                      reducers: Optional[Dict[str, Reducer]] = None,
-                      chunk_size: int = 65536,
-                      workers: Optional[int] = None,
-                      policy: Optional[ResiliencePolicy] = None,
-                      resume_from=None,
-                      checkpoint_every: int = 1) -> StreamResult:
-  """Joint HW x NN co-exploration in bounded memory: the arch x HW cross
-  product is visited as ``JointTable.block_slices`` blocks (HW sampled
-  once per PE type — the small input side; the 100M-pair product never
-  materializes), each block evaluated via ``backend.co_evaluate_table``
-  on an arch-sliced LayerStack.  Chunk frames carry the same ``top1`` /
-  ``arch_id`` / ``arch_lookup`` columns as the one-shot joint frame, and
-  global row ids replicate its (pe_type, arch, hw) order exactly.
-  Default reducers: a ParetoAccumulator on the paper's 3-objective
-  (top1_err, energy_mj, area_mm2) joint front.
-  """
+def co_explore_tasks(backend, space: DesignSpace, arch_accs,
+                     n_hw_per_type: int, seed: int, image_size: int,
+                     method: str, chunk_size: int,
+                     reducers: Dict[str, Reducer]) -> Iterator[ChunkTask]:
+  """The ladder-carrying chunk tasks of a streamed co-exploration —
+  extracted from :func:`stream_co_explore` for the same service/driver
+  sharing as :func:`explore_tasks`."""
   from repro.core.dataflow import LayerStack  # deferred: keep header lean
   from repro.core.supernet import arch_to_layers  # deferred: pulls jax
   if not hasattr(backend, "co_evaluate_table"):
     raise ValueError(f"backend {backend.name!r} has no co_evaluate_table; "
                      "streaming requires the joint columnar path")
-  if reducers is None:
-    reducers = {"pareto": ParetoAccumulator(("top1_err", "energy_mj",
-                                             "area_mm2"))}
   archs = tuple(arch for arch, _ in arch_accs)
   accs = np.asarray([float(acc) for _, acc in arch_accs], np.float64)
   stack = LayerStack.from_layer_lists(
@@ -800,7 +836,7 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
     rungs.append(Rung("numpy", run, layer="backend"))
     return ChunkTask(index=ci, rungs=tuple(rungs))
 
-  def tasks() -> Iterator[Task]:
+  def gen() -> Iterator[ChunkTask]:
     offset = 0
     ci = 0
     for ti, pe_type in enumerate(space.pe_types):
@@ -815,15 +851,86 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
         ci += 1
       offset += len(joint)
 
+  return gen()
+
+
+def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
+                   n_per_type: int = 200, seed: int = 17,
+                   method: str = "random",
+                   reducers: Optional[Dict[str, Reducer]] = None,
+                   chunk_size: int = 65536,
+                   workers: Optional[int] = None,
+                   policy: Optional[ResiliencePolicy] = None,
+                   resume_from=None,
+                   checkpoint_every: int = 1) -> StreamResult:
+  """Sample -> evaluate -> reduce a plain HW sweep in bounded memory.
+
+  Chunks come from ``space.iter_tables`` (bit-identical concatenation to
+  ``sample_table``), evaluate through ``backend.evaluate_table``, and
+  fold into ``reducers`` (default: one ParetoAccumulator on the paper's
+  (perf_per_area, energy) axes).  Global row ids follow the one-shot
+  sample order, so survivors match the one-shot frame row for row.
+
+  On a ``jit=True`` backend chunks dispatch asynchronously; when every
+  reducer is device-fusable the evaluate+reduce pipeline additionally
+  fuses into one jitted program per chunk (see
+  :mod:`repro.explore.device`), so only O(survivors) floats come back
+  per chunk instead of full metric arrays.
+
+  Each chunk carries the full fallback ladder ``fused-device ->
+  unfused-device -> numpy`` (whichever rungs the backend supports); a
+  ``policy`` walks it on failures, and ``resume_from`` journals /
+  restores the sweep under a content-addressed key derived from the
+  space, oracle version, reducer plan, and the sampling parameters —
+  the backend itself is *not* part of the key (parity makes checkpoints
+  portable across the numpy and device paths).
+  """
+  if reducers is None:
+    reducers = default_explore_reducers()
+  tasks = explore_tasks(backend, space, layers, network, n_per_type, seed,
+                        method, chunk_size, reducers)
   key = ""
   if resume_from is not None:
-    key = sweep_key("co-explore", space_fingerprint(space),
-                    reducers_fingerprint(reducers),
-                    {"n_hw_per_type": n_hw_per_type, "seed": seed,
-                     "image_size": image_size, "method": method,
-                     "chunk_size": chunk_size,
-                     "archs": arch_accs_fingerprint(archs, accs)})
-  return run_stream(tasks(), reducers,
+    key = explore_sweep_key(space, reducers, n_per_type=n_per_type,
+                            seed=seed, method=method, chunk_size=chunk_size,
+                            network=network)
+  return run_stream(tasks, reducers,
+                    workers=default_workers(backend) if workers is None
+                    else workers,
+                    policy=policy, resume_from=resume_from,
+                    journal_key=key, checkpoint_every=checkpoint_every)
+
+
+def stream_co_explore(backend, space: DesignSpace, arch_accs,
+                      n_hw_per_type: int = 20, seed: int = 3,
+                      image_size: int = 32, method: str = "random",
+                      reducers: Optional[Dict[str, Reducer]] = None,
+                      chunk_size: int = 65536,
+                      workers: Optional[int] = None,
+                      policy: Optional[ResiliencePolicy] = None,
+                      resume_from=None,
+                      checkpoint_every: int = 1) -> StreamResult:
+  """Joint HW x NN co-exploration in bounded memory: the arch x HW cross
+  product is visited as ``JointTable.block_slices`` blocks (HW sampled
+  once per PE type — the small input side; the 100M-pair product never
+  materializes), each block evaluated via ``backend.co_evaluate_table``
+  on an arch-sliced LayerStack.  Chunk frames carry the same ``top1`` /
+  ``arch_id`` / ``arch_lookup`` columns as the one-shot joint frame, and
+  global row ids replicate its (pe_type, arch, hw) order exactly.
+  Default reducers: a ParetoAccumulator on the paper's 3-objective
+  (top1_err, energy_mj, area_mm2) joint front.
+  """
+  if reducers is None:
+    reducers = default_co_reducers()
+  tasks = co_explore_tasks(backend, space, arch_accs, n_hw_per_type, seed,
+                           image_size, method, chunk_size, reducers)
+  key = ""
+  if resume_from is not None:
+    key = co_explore_sweep_key(space, reducers, arch_accs,
+                               n_hw_per_type=n_hw_per_type, seed=seed,
+                               image_size=image_size, method=method,
+                               chunk_size=chunk_size)
+  return run_stream(tasks, reducers,
                     workers=default_workers(backend) if workers is None
                     else workers,
                     policy=policy, resume_from=resume_from,

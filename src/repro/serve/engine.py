@@ -6,6 +6,11 @@ A deliberately production-shaped (if compact) continuous-batching engine:
   * prompt prefill runs right-padded at a fixed bucket length
   * KV caches optionally int8-quantized (cfg.kv_quant) — QUIDAM's
     precision axis applied to the decode memory roofline.
+  * per-request deadlines (the exploration service's
+    :class:`~repro.explore.service.Deadline` type): expired queued
+    requests are evicted before prefill, expired active requests release
+    their slot mid-decode — an overloaded engine sheds late work instead
+    of serving answers nobody is waiting for.
 
 The engine is single-host here; the mesh-parallel path shards the slot
 batch over ("pod","data") and heads over "model" exactly like training.
@@ -14,12 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.explore.service import Deadline
 from repro.models.model import Model
 
 
@@ -32,6 +38,8 @@ class Request:
   done: bool = False
   submitted_at: float = 0.0
   finished_at: float = 0.0
+  deadline: Optional[Deadline] = None
+  expired: bool = False
 
 
 @dataclasses.dataclass
@@ -56,31 +64,52 @@ class ServeEngine:
     self._prefill = jax.jit(
         lambda p, b: model.prefill(p, b, ecfg.max_len))
     self._uid = 0
+    self.n_evicted = 0
 
   # -- client API ---------------------------------------------------------
-  def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+  def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+             deadline: Optional[Union[Deadline, float]] = None) -> int:
+    """Enqueue a request; ``deadline`` (a Deadline, or seconds from now)
+    bounds its total queue + decode time."""
+    if deadline is not None and not isinstance(deadline, Deadline):
+      deadline = Deadline(float(deadline))
     self._uid += 1
     self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                              max_new_tokens, submitted_at=time.time()))
+                              max_new_tokens, submitted_at=time.time(),
+                              deadline=deadline))
     return self._uid
 
   def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+    """Generated tokens per finished uid; evicted requests appear with
+    whatever partial generation they had (``request.expired`` marks
+    them — an eviction is an answer, not a hang)."""
     out: Dict[int, List[int]] = {}
     for _ in range(max_steps):
       if not self.queue and all(r is None for r in self.active):
         break
-      self._admit()
-      finished = self._step()
+      finished = self._admit() + self._step()
       for r in finished:
         out[r.uid] = list(r.generated)
     return out
 
   # -- internals ----------------------------------------------------------
-  def _admit(self):
+  def _evict(self, req: Request) -> Request:
+    req.done = True
+    req.expired = True
+    req.finished_at = time.time()
+    self.n_evicted += 1
+    return req
+
+  def _admit(self) -> List[Request]:
+    evicted = []
     for slot in range(self.ecfg.batch_slots):
       if self.active[slot] is not None or not self.queue:
         continue
       req = self.queue.pop(0)
+      if req.deadline is not None and req.deadline.expired():
+        # expired while queued: never spend prefill on it
+        evicted.append(self._evict(req))
+        continue
       bucket = self.ecfg.prompt_bucket
       prompt = req.prompt[-bucket:]
       pad = bucket - len(prompt)
@@ -94,11 +123,18 @@ class ServeEngine:
       req.generated.append(first)
       self.active[slot] = req
       self.caches[slot] = cache
+    return evicted
 
   def _step(self) -> List[Request]:
     finished = []
     for slot, req in enumerate(self.active):
       if req is None:
+        continue
+      if req.deadline is not None and req.deadline.expired():
+        # mid-decode expiry: release the slot, keep the partial output
+        finished.append(self._evict(req))
+        self.active[slot] = None
+        self.caches[slot] = None
         continue
       tok = jnp.asarray([req.generated[-1]], jnp.int32)
       logits, cache = self._decode(self.params, tok, self.caches[slot])

@@ -361,6 +361,49 @@ class TestRobustness:
                    rules=["ROB001"])
     assert codes(rep) == []
 
+  def test_unbounded_join_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/svc.py":
+                              "def f(t, ev, cond):\n"
+                              "  t.join()\n"
+                              "  ev.wait()\n"
+                              "  cond.wait()\n"},
+                   rules=["ROB002"])
+    assert codes(rep) == ["ROB002"] * 3
+
+  def test_bounded_join_clean(self, tmp_path):
+    # timeouts (positional or keyword) and string joins are fine
+    rep = run_tree(tmp_path, {"explore/svc.py":
+                              "def f(t, ev, parts):\n"
+                              "  t.join(5.0)\n"
+                              "  ev.wait(timeout=0.05)\n"
+                              "  return ','.join(parts)\n"},
+                   rules=["ROB002"])
+    assert codes(rep) == []
+
+  def test_futures_wait_without_timeout_flagged(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/pool.py":
+                              "from concurrent.futures import wait\n"
+                              "def f(pending):\n"
+                              "  wait(pending)\n"},
+                   rules=["ROB002"])
+    assert codes(rep) == ["ROB002"]
+
+  def test_futures_wait_with_timeout_clean(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/pool.py":
+                              "from concurrent.futures import wait\n"
+                              "def f(pending):\n"
+                              "  wait(pending, timeout=60.0)\n"
+                              "  wait(pending, 60.0)\n"},
+                   rules=["ROB002"])
+    assert codes(rep) == []
+
+  def test_join_scoped_to_explore(self, tmp_path):
+    rep = run_tree(tmp_path, {"serve/loop.py":
+                              "def f(t):\n"
+                              "  t.join()\n"},
+                   rules=["ROB002"])
+    assert codes(rep) == []
+
 
 # ---------------------------------------------------------------------------
 # engine mechanics: suppressions, baseline, fingerprints, parse errors

@@ -177,6 +177,49 @@ class TestServeEngine:
     assert set(out) == set(uids)
     assert all(len(v) == 5 for v in out.values())
 
+  def test_deadline_evicts_queued_and_active(self):
+    from repro.explore.service import Deadline
+    from repro.serve.engine import EngineConfig, ServeEngine
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, EngineConfig(
+        batch_slots=1, max_len=64, prompt_bucket=16))
+    rng = np.random.RandomState(0)
+    t = {"now": 0.0}
+    # u1 has a deadline that expires while it decodes; u2's expires
+    # while it sits behind u1 in the queue; u3 is unconstrained
+    u1 = eng.submit(rng.randint(0, cfg.vocab_size, size=8),
+                    max_new_tokens=50,
+                    deadline=Deadline(1.0, clock=lambda: t["now"]))
+    u2 = eng.submit(rng.randint(0, cfg.vocab_size, size=8),
+                    max_new_tokens=5,
+                    deadline=Deadline(1.0, clock=lambda: t["now"]))
+    u3 = eng.submit(rng.randint(0, cfg.vocab_size, size=8),
+                    max_new_tokens=5)
+    eng._admit()        # u1 takes the slot while the deadline is live
+    t["now"] = 2.0      # both deadlines expire
+    out = eng.run_until_drained()
+    assert set(out) == {u1, u2, u3}
+    assert 0 < len(out[u1]) < 50   # partial generation kept
+    assert out[u2] == []           # evicted before any prefill
+    assert len(out[u3]) == 5       # neighbor unaffected
+    assert eng.n_evicted == 2
+
+  def test_seconds_deadline_coerced(self):
+    from repro.explore.service import Deadline
+    from repro.serve.engine import EngineConfig, ServeEngine
+    cfg = reduce_for_smoke(get_config("olmo-1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, EngineConfig(
+        batch_slots=1, max_len=64, prompt_bucket=16))
+    uid = eng.submit(np.arange(8) % cfg.vocab_size, max_new_tokens=3,
+                     deadline=30.0)
+    assert isinstance(eng.queue[0].deadline, Deadline)
+    out = eng.run_until_drained()
+    assert len(out[uid]) == 3
+
   def test_greedy_determinism(self):
     from repro.serve.engine import EngineConfig, ServeEngine
     cfg = reduce_for_smoke(get_config("olmo-1b"))

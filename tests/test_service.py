@@ -1,0 +1,783 @@
+"""Exploration service + result store: admission, deadlines, breaker,
+crash-safe store, delta-sweeps, concurrent-session chaos.
+
+The load-bearing invariant everywhere: any path through the service —
+interleaved sessions, store hits, delta merges, breaker reroutes,
+kill-resume — produces reductions bit-identical to a healthy solo run
+(Pareto/TopK frames exactly; stats count/min/max exactly, mean/std to
+the documented float tolerance, matching tests/test_streaming.py).
+"""
+import os
+import pickle
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.cnn import SEARCH_SPACE, ArchChoice
+from repro.core.workloads import get_network
+from repro.explore import (AdmissionRejected, BudgetExhausted, ChunkTask,
+                           CircuitBreaker, Deadline, DeadlineExceeded,
+                           DesignSpace, ExplorationService,
+                           ExplorationSession, Fault, FaultPlan,
+                           HistogramAccumulator, ParetoAccumulator,
+                           ResiliencePolicy, ResultStore, RetryPolicy, Rung,
+                           SessionCancelled, StatsAccumulator, SweepJournal,
+                           SweepKilled, TopKAccumulator,
+                           VectorOracleBackend, cached_stream_explore,
+                           stream_explore)
+from repro.explore.space import AXIS_ORDER, HW_RANGES
+from repro.explore.streaming import default_explore_reducers
+
+METRICS = ("latency_s", "power_mw", "area_mm2")
+NETWORK = "resnet20"
+
+
+def no_wait() -> RetryPolicy:
+  return RetryPolicy(sleep=lambda s: None)
+
+
+@pytest.fixture(scope="module")
+def layers():
+  return get_network(NETWORK)[:4]
+
+
+@pytest.fixture(scope="module")
+def arch_accs():
+  rng = np.random.RandomState(7)
+  archs = [ArchChoice(tuple((int(rng.choice(r)), int(rng.choice(c)))
+                            for r, c in SEARCH_SPACE)) for _ in range(4)]
+  return list(zip(archs, rng.uniform(0.5, 0.95, len(archs))))
+
+
+def backend():
+  return VectorOracleBackend(chunk_size=256)
+
+
+def sweep_reducers():
+  return {"pareto": ParetoAccumulator(("latency_s", "power_mw")),
+          "top": TopKAccumulator(9, by="power_mw"),
+          "stats": StatsAccumulator("latency_s"),
+          "hist": HistogramAccumulator("power_mw", 0.0, 5e4, bins=32)}
+
+
+def small_grid_space(extra_on=None):
+  """A few-hundred-point grid space; ``extra_on`` grows one axis by one
+  value (an in-order supersequence — the delta-sweep precondition)."""
+  axes = {name: HW_RANGES[name][:2] for name in AXIS_ORDER}
+  axes[AXIS_ORDER[0]] = HW_RANGES[AXIS_ORDER[0]][:3]
+  if extra_on is not None:
+    axes[extra_on] = HW_RANGES[extra_on][:len(axes[extra_on]) + 1]
+  return DesignSpace(axes=axes)
+
+
+def assert_frames_equal(got, want):
+  for name in ("pareto", "top"):
+    for col in METRICS[:2]:
+      assert np.array_equal(getattr(got[name], col),
+                            getattr(want[name], col)), (name, col)
+
+
+def assert_stats_equal(got, want):
+  # the repo-wide streaming contract: count/min/max exact, mean/std to
+  # float tolerance across different chunk partitions
+  gs, ws = got["stats"], want["stats"]
+  assert gs["count"] == ws["count"]
+  assert gs["min"] == ws["min"] and gs["max"] == ws["max"]
+  assert_allclose(gs["mean"], ws["mean"], rtol=1e-12)
+  assert_allclose(gs["std"], ws["std"], rtol=1e-9)
+  assert np.array_equal(got["hist"]["counts"], want["hist"]["counts"])
+
+
+# ---------------------------------------------------------------------------
+# Deadline
+# ---------------------------------------------------------------------------
+
+class TestDeadline:
+
+  def test_fake_clock(self):
+    t = {"now": 100.0}
+    dl = Deadline(5.0, clock=lambda: t["now"])
+    assert dl.remaining() == 5.0 and not dl.expired()
+    t["now"] = 104.0
+    assert dl.remaining() == pytest.approx(1.0)
+    t["now"] = 105.0
+    assert dl.expired()
+
+  def test_real_clock_counts_down(self):
+    dl = Deadline(60.0)
+    assert 0.0 < dl.remaining() <= 60.0
+    assert not dl.expired()
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (unit level, fake rungs)
+# ---------------------------------------------------------------------------
+
+def device_task(index, device_fn, host="host"):
+  return ChunkTask(index, (Rung("device", device_fn, layer="device"),
+                           Rung("numpy", lambda: host)))
+
+
+class TestCircuitBreaker:
+
+  def test_opens_after_consecutive_failures(self):
+    br = CircuitBreaker(threshold=2, cooldown=3, jitter=0)
+    br.allow_device(); br.record_failure()
+    assert br.state == "closed"
+    br.allow_device(); br.record_failure()
+    assert br.state == "open" and br.n_opens == 1
+
+  def test_success_resets_failure_streak(self):
+    br = CircuitBreaker(threshold=2, cooldown=3, jitter=0)
+    br.record_failure()
+    br.record_success()
+    br.record_failure()
+    assert br.state == "closed"  # streak broken: 1+1 non-consecutive
+
+  def test_open_short_circuits_device_rung(self):
+    br = CircuitBreaker(threshold=1, cooldown=10, jitter=0)
+    pol = ResiliencePolicy(retry=no_wait(), breaker=br)
+    calls = {"n": 0}
+
+    def dead():
+      calls["n"] += 1
+      raise RuntimeError("wedged")
+
+    assert pol.execute(device_task(0, dead)) == "host"
+    assert br.state == "open"
+    n_after_open = calls["n"]
+    # while open, the device fn is never invoked again
+    assert pol.execute(device_task(1, dead)) == "host"
+    assert calls["n"] == n_after_open
+    assert pol.n_demotions == 1  # only the opening chunk paid a demotion
+
+  def test_cooldown_probe_success_closes(self):
+    br = CircuitBreaker(threshold=1, cooldown=2, jitter=0)
+    br.allow_device(); br.record_failure()
+    assert br.state == "open"
+    assert not br.allow_device()      # cooldown 2 -> 1
+    assert br.allow_device()          # cooldown exhausted: the probe
+    assert br.state == "half-open" and br.n_probes == 1
+    br.record_success()
+    assert br.state == "closed"
+
+  def test_probe_failure_reopens(self):
+    br = CircuitBreaker(threshold=1, cooldown=1, jitter=0)
+    br.allow_device(); br.record_failure()
+    assert br.allow_device()          # immediate half-open probe
+    br.record_failure()
+    assert br.state == "open" and br.n_opens == 2
+
+  def test_transitions_and_meta(self):
+    br = CircuitBreaker(threshold=1, cooldown=1, jitter=0)
+    br.allow_device(); br.record_failure()
+    br.allow_device(); br.record_success()
+    states = [(f, t) for _, f, t in br.transitions]
+    assert states == [("closed", "open"), ("open", "half-open"),
+                      ("half-open", "closed")]
+    meta = br.meta()
+    assert meta["breaker_state"] == "closed"
+    assert meta["n_breaker_opens"] == 1.0
+    assert meta["n_breaker_probes"] == 1.0
+
+  def test_seeded_jitter_is_deterministic(self):
+    def opens(seed):
+      br = CircuitBreaker(threshold=1, cooldown=2, jitter=3, seed=seed)
+      br.record_failure()
+      n = 0
+      while not br.allow_device():
+        n += 1
+      return n
+    assert opens(0) == opens(0)
+
+  def test_validation(self):
+    with pytest.raises(ValueError):
+      CircuitBreaker(threshold=0)
+    with pytest.raises(ValueError):
+      CircuitBreaker(cooldown=0)
+
+
+# ---------------------------------------------------------------------------
+# result store: atomic writes, checksums, quarantine
+# ---------------------------------------------------------------------------
+
+class TestResultStore:
+
+  def test_roundtrip(self, tmp_path):
+    store = ResultStore(tmp_path)
+    store.put("k1", {"done": {1, 2}, "n_rows": 7})
+    assert "k1" in store
+    assert store.get("k1") == {"done": {1, 2}, "n_rows": 7}
+    assert store.stats()["n_hits"] == 1
+
+  def test_miss_counts(self, tmp_path):
+    store = ResultStore(tmp_path)
+    assert store.get("nope") is None
+    assert store.stats() == {"n_hits": 0, "n_misses": 1,
+                             "n_quarantined": 0}
+
+  def test_no_tmp_file_left(self, tmp_path):
+    store = ResultStore(tmp_path)
+    store.put("k1", {"x": 1})
+    assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+
+  @pytest.mark.parametrize("damage", ["truncate", "flip", "garbage"])
+  def test_corruption_quarantined(self, tmp_path, damage):
+    store = ResultStore(tmp_path)
+    store.put("k1", {"x": list(range(100))})
+    path = store.path("k1")
+    blob = open(path, "rb").read()
+    if damage == "truncate":
+      open(path, "wb").write(blob[:len(blob) // 2])
+    elif damage == "flip":
+      open(path, "wb").write(blob[:-3] + bytes([blob[-3] ^ 0xFF])
+                             + blob[-2:])
+    else:
+      open(path, "wb").write(b"not a store entry at all")
+    assert store.get("k1") is None       # detected, not trusted
+    assert "k1" not in store             # moved aside
+    assert store.stats()["n_quarantined"] == 1
+    assert os.listdir(store.quarantine_dir)  # evidence preserved
+    store.put("k1", {"x": 1})            # recompute path works
+    assert store.get("k1") == {"x": 1}
+
+  def test_wrong_key_payload_rejected(self, tmp_path):
+    # an entry whose embedded key disagrees with its filename slot is
+    # not served (defends against file-level tampering/misplacement)
+    store = ResultStore(tmp_path)
+    store.put("aaaa", {"x": 1})
+    os.replace(store.path("aaaa"), store.path("bbbb"))
+    assert store.get("bbbb") is None
+
+  def test_manifest_index(self, tmp_path):
+    store = ResultStore(tmp_path)
+    store.put_final("k1", {"x": 1}, manifest={"kind": "explore", "v": 1})
+    store.put_final("k2", {"x": 2}, manifest={"kind": "explore", "v": 2})
+    store.put_final("k1", {"x": 3}, manifest={"kind": "explore", "v": 3})
+    entries = store.manifests()
+    assert [e["key"] for e in entries] == ["k1", "k2"]
+    assert entries[0]["v"] == 3  # last write wins per key
+
+
+# ---------------------------------------------------------------------------
+# append-log journal: kill-mid-append recovery
+# ---------------------------------------------------------------------------
+
+def _state(n):
+  return {"done": set(range(n)), "reducers": {}, "counters": {"n_rows": n}}
+
+
+class TestJournalLog:
+
+  def test_append_replay_roundtrip(self, tmp_path):
+    j = SweepJournal(tmp_path)
+    for n in (1, 2, 3):
+      j.append("k", _state(n))
+    states = j.replay("k")
+    assert [len(s["done"]) for s in states] == [1, 2, 3]
+    assert j.load_last("k")["counters"]["n_rows"] == 3
+
+  def test_kill_mid_append_recovers_prefix(self, tmp_path):
+    # simulate a process killed partway through an append: a valid log
+    # followed by a torn frame.  Recovery = every complete record, the
+    # torn tail truncated, and the log writable again.
+    j = SweepJournal(tmp_path)
+    j.append("k", _state(1))
+    j.append("k", _state(2))
+    intact = os.path.getsize(j.log_path("k"))
+    with open(j.log_path("k"), "ab") as f:
+      f.write(b"SWPJ" + b"\x99")  # header torn mid-write
+    states = j.replay("k")
+    assert [len(s["done"]) for s in states] == [1, 2]
+    assert os.path.getsize(j.log_path("k")) == intact  # tail truncated
+    j.append("k", _state(3))  # appending after recovery works
+    assert len(j.replay("k")) == 3
+
+  @pytest.mark.parametrize("tear", ["payload", "digest", "garbage"])
+  def test_torn_tail_variants(self, tmp_path, tear):
+    j = SweepJournal(tmp_path)
+    j.append("k", _state(1))
+    good = open(j.log_path("k"), "rb").read()
+    if tear == "payload":
+      torn = good + good[:len(good) - 5]   # header ok, payload short
+    elif tear == "digest":
+      bad = bytearray(good)
+      bad[len(b"SWPJ") + 8] ^= 0xFF        # digest byte flipped
+      torn = good + bytes(bad)
+    else:
+      torn = good + b"\x00" * 7
+    open(j.log_path("k"), "wb").write(torn)
+    states = j.replay("k")
+    assert len(states) == 1
+    assert os.path.getsize(j.log_path("k")) == len(good)
+
+  def test_corruption_mid_log_drops_suffix(self, tmp_path):
+    # a bad record invalidates everything after it (framing is lost) —
+    # the valid prefix is still a safe resume point
+    j = SweepJournal(tmp_path)
+    for n in (1, 2, 3):
+      j.append("k", _state(n))
+    blob = bytearray(open(j.log_path("k"), "rb").read())
+    blob[len(blob) // 3] ^= 0xFF
+    open(j.log_path("k"), "wb").write(bytes(blob))
+    states = j.replay("k")
+    assert 0 < len(states) < 3
+
+  def test_load_state_prefers_more_progress(self, tmp_path):
+    j = SweepJournal(tmp_path)
+    j.record("k", _state(5))     # pkl snapshot: 5 chunks
+    j.append("k", _state(2))     # log lags behind
+    assert len(j.load_state("k")["done"]) == 5
+    j.append("k", _state(9))     # log pulls ahead
+    assert len(j.load_state("k")["done"]) == 9
+
+
+# ---------------------------------------------------------------------------
+# the service: admission, fairness, deadlines, budgets, store hits
+# ---------------------------------------------------------------------------
+
+def submit_sweep(svc, space, layers, seed=1, n=1200, **kw):
+  return svc.submit_explore(space, layers, NETWORK, n_per_type=n,
+                            seed=seed, chunk_size=256,
+                            reducers=sweep_reducers(), **kw)
+
+
+def solo_sweep(space, layers, seed=1, n=1200):
+  return stream_explore(backend(), space, layers, network=NETWORK,
+                        n_per_type=n, seed=seed, chunk_size=256,
+                        reducers=sweep_reducers(), workers=2)
+
+
+class TestService:
+
+  def test_concurrent_sessions_match_solo(self, layers):
+    space = DesignSpace()
+    refs = [solo_sweep(space, layers, seed=s) for s in (1, 2, 3)]
+    svc = ExplorationService(backend(), slots=3)
+    handles = [submit_sweep(svc, space, layers, seed=s) for s in (1, 2, 3)]
+    assert svc.drain() == 3
+    for h, ref in zip(handles, refs):
+      res = h.result()
+      assert_frames_equal(res, ref)
+      assert_stats_equal(res, ref)
+      assert res.n_rows == ref.n_rows
+
+  def test_fair_interleaving(self, layers):
+    # with fewer slots than sessions the queue drains through the slots;
+    # every session still completes with full results
+    space = DesignSpace()
+    ref = solo_sweep(space, layers, seed=1)
+    svc = ExplorationService(backend(), slots=2, max_queued=8)
+    handles = [submit_sweep(svc, space, layers, seed=1) for _ in range(4)]
+    assert svc.drain() == 4
+    for h in handles:
+      assert_frames_equal(h.result(), ref)
+
+  def test_admission_rejected_typed(self, layers):
+    space = DesignSpace()
+    svc = ExplorationService(backend(), slots=1, max_queued=1)
+    submit_sweep(svc, space, layers, seed=1)
+    submit_sweep(svc, space, layers, seed=2)
+    with pytest.raises(AdmissionRejected) as err:
+      submit_sweep(svc, space, layers, seed=3)
+    assert err.value.queued == 1 and err.value.max_queued == 1
+    assert svc.service_meta()["n_rejected"] == 1
+    assert svc.drain() == 2  # admitted work unaffected
+
+  def test_budget_exhausted_then_resumed(self, layers, tmp_path):
+    space = DesignSpace()
+    ref = solo_sweep(space, layers, seed=1, n=3000)
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    h = submit_sweep(svc, space, layers, seed=1, n=3000, chunk_budget=3)
+    svc.drain()
+    with pytest.raises(BudgetExhausted):
+      h.result()
+    assert h.status == "failed"
+    # resubmit without the budget: resumes from the journal
+    svc2 = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    h2 = submit_sweep(svc2, space, layers, seed=1, n=3000)
+    svc2.drain()
+    res = h2.result()
+    assert res.meta["n_resumed_chunks"] == 3.0
+    assert_frames_equal(res, ref)
+    assert_stats_equal(res, ref)
+
+  def test_deadline_expiry_spares_neighbors(self, layers):
+    space = DesignSpace()
+    ref = solo_sweep(space, layers, seed=2)
+    t = {"now": 0.0}
+    svc = ExplorationService(backend(), slots=2)
+    doomed = submit_sweep(svc, space, layers, seed=1, n=3000,
+                          deadline=Deadline(5.0, clock=lambda: t["now"]))
+    healthy = submit_sweep(svc, space, layers, seed=2)
+    t["now"] = 10.0
+    svc.drain()
+    with pytest.raises(DeadlineExceeded):
+      doomed.result()
+    assert doomed.status == "expired"
+    assert_frames_equal(healthy.result(), ref)  # neighbor unpoisoned
+
+  def test_deadline_threads_into_resolve_timeout(self):
+    # the per-session policy's watchdog budget is min(base, remaining)
+    t = {"now": 0.0}
+    svc = ExplorationService(backend(), resolve_timeout=60.0)
+    pol = svc._session_policy(Deadline(5.0, clock=lambda: t["now"]))
+    assert pol.resolve_timeout() == 5.0
+    t["now"] = 3.0
+    assert pol.resolve_timeout() == pytest.approx(2.0)
+    t["now"] = 99.0
+    assert pol.resolve_timeout() == 0.0  # expired: watchdog fires at once
+
+  def test_cancel_is_cooperative(self, layers):
+    space = DesignSpace()
+    svc = ExplorationService(backend(), slots=1)
+    h = submit_sweep(svc, space, layers, seed=1)
+    h.cancel()
+    svc.drain()
+    with pytest.raises(SessionCancelled):
+      h.result()
+    assert h.status == "cancelled"
+
+  def test_store_hit_bit_identical(self, layers, tmp_path):
+    space = DesignSpace()
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    h1 = submit_sweep(svc, space, layers, seed=1)
+    svc.drain()
+    ref = h1.result()
+    h2 = submit_sweep(svc, space, layers, seed=1)  # no drain needed
+    res = h2.result()
+    assert res.meta["store_hit"] == 1.0
+    assert_frames_equal(res, ref)
+    assert_stats_equal(res, ref)
+    assert svc.service_meta()["n_store_hits"] == 1
+
+  def test_store_hits_bypass_admission(self, layers, tmp_path):
+    # a hit consumes no executor time, so it is never queue-rejected
+    space = DesignSpace()
+    svc = ExplorationService(backend(), slots=1, max_queued=1,
+                             store=str(tmp_path))
+    h = submit_sweep(svc, space, layers, seed=1)
+    svc.drain()
+    h.result()
+    submit_sweep(svc, space, layers, seed=2)
+    submit_sweep(svc, space, layers, seed=3)  # queue now full
+    hit = submit_sweep(svc, space, layers, seed=1)
+    assert hit.status == "done"
+
+  def test_background_thread_mode(self, layers):
+    space = DesignSpace()
+    ref = solo_sweep(space, layers, seed=1)
+    svc = ExplorationService(backend(), slots=2)
+    svc.start()
+    try:
+      h = submit_sweep(svc, space, layers, seed=1)
+      assert_frames_equal(h.result(timeout=120.0), ref)
+    finally:
+      svc.stop()
+
+  def test_result_timeout_is_bounded(self, layers):
+    space = DesignSpace()
+    svc = ExplorationService(backend(), slots=1)
+    h = submit_sweep(svc, space, layers, seed=1)  # nothing drives it
+    with pytest.raises(TimeoutError):
+      h.result(timeout=0.2)
+
+  def test_search_session_matches_solo(self, layers):
+    space = DesignSpace()
+    sess = ExplorationSession(backend(), space)
+    ref = sess.optimize(layers=layers, network=NETWORK, population=12,
+                        generations=3, seed=9)
+    svc = ExplorationService(backend(), slots=2)
+    hs = svc.submit_search(space, layers, network=NETWORK, population=12,
+                           generations=3, seed=9)
+    he = submit_sweep(svc, space, layers, seed=1)
+    svc.drain()
+    res = hs.result()
+    for col in METRICS[:2]:
+      assert np.array_equal(getattr(res["pareto"], col),
+                            getattr(ref["pareto"], col)), col
+    assert he.result().n_rows > 0
+
+  def test_search_deadline_cancels_cooperatively(self, layers):
+    space = DesignSpace()
+    t = {"now": 0.0}
+    svc = ExplorationService(backend(), slots=1)
+    h = svc.submit_search(space, layers, network=NETWORK, population=12,
+                          generations=50, seed=9,
+                          deadline=Deadline(5.0, clock=lambda: t["now"]))
+    t["now"] = 10.0
+    svc.drain()
+    with pytest.raises(DeadlineExceeded):
+      h.result()
+    assert h.status == "expired"
+
+  def test_co_explore_sessions(self, layers, arch_accs, tmp_path):
+    from repro.explore.streaming import stream_co_explore
+    space = DesignSpace()
+    cols = ("top1_err", "energy_mj", "area_mm2")
+    co_red = lambda: {"pareto": ParetoAccumulator(cols)}  # noqa: E731
+    ref = stream_co_explore(backend(), space, arch_accs, n_hw_per_type=10,
+                            seed=3, image_size=16, reducers=co_red(),
+                            chunk_size=64, workers=2)
+    svc = ExplorationService(backend(), slots=2, store=str(tmp_path))
+    h = svc.submit_co_explore(space, arch_accs, n_hw_per_type=10, seed=3,
+                              image_size=16, reducers=co_red(),
+                              chunk_size=64)
+    svc.drain()
+    res = h.result()
+    for col in METRICS:
+      assert np.array_equal(getattr(res["pareto"], col),
+                            getattr(ref["pareto"], col)), col
+    assert np.array_equal(res["pareto"].extra["arch_id"],
+                          ref["pareto"].extra["arch_id"])
+    # and a store hit on resubmission
+    h2 = svc.submit_co_explore(space, arch_accs, n_hw_per_type=10, seed=3,
+                               image_size=16, reducers=co_red(),
+                               chunk_size=64)
+    assert h2.result().meta["store_hit"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# delta-sweeps: one-axis edits evaluate only the new subgrid
+# ---------------------------------------------------------------------------
+
+GRID_N = 10**9  # "the whole grid", whatever its size
+
+
+def grid_sweep(svc, space, layers, chunk_size=128):
+  return svc.submit_explore(space, layers, NETWORK, n_per_type=GRID_N,
+                            method="grid", chunk_size=chunk_size,
+                            reducers=sweep_reducers())
+
+
+class TestDeltaSweep:
+
+  @pytest.mark.parametrize("axis,chunks", [
+      (AXIS_ORDER[1], (128, 64, 256)),
+      (AXIS_ORDER[4], (96, 128, 32)),    # different axis position
+      (AXIS_ORDER[6], (64, 32, 128)),    # last (fastest-varying) axis
+  ])
+  def test_delta_bit_identical_across_partitions(self, layers, tmp_path,
+                                                 axis, chunks):
+    """The acceptance property: base-sweep + delta over the new subgrid
+    == from-scratch over the edited space, bit-identically, regardless
+    of how any of the three sweeps was chunked."""
+    c_base, c_delta, c_scratch = chunks
+    base, edited = small_grid_space(), small_grid_space(extra_on=axis)
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    grid_sweep(svc, base, layers, chunk_size=c_base)
+    svc.drain()
+    hd = grid_sweep(svc, edited, layers, chunk_size=c_delta)
+    svc.drain()
+    res = hd.result()
+    assert res.meta["delta_sweep"] == 1.0
+    assert res.meta["n_delta_rows"] < res.n_rows  # only the subgrid ran
+    scratch = stream_explore(backend(), edited, layers, network=NETWORK,
+                             n_per_type=GRID_N, method="grid",
+                             reducers=sweep_reducers(),
+                             chunk_size=c_scratch, workers=2)
+    assert res.n_rows == scratch.n_rows
+    assert_frames_equal(res, scratch)
+    assert_stats_equal(res, scratch)
+
+  def test_delta_result_is_stored_and_chains(self, layers, tmp_path):
+    # a delta-sweep's merged result is itself a stored full-grid sweep:
+    # a second axis edit deltas off the *merged* entry
+    a1, a2 = AXIS_ORDER[1], AXIS_ORDER[5]
+    base = small_grid_space()
+    edited1 = small_grid_space(extra_on=a1)
+    axes2 = {a.name: a.values for a in edited1.axes}
+    axes2[a2] = tuple(HW_RANGES[a2][:len(axes2[a2]) + 1])
+    edited2 = DesignSpace(axes=axes2)
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    grid_sweep(svc, base, layers)
+    svc.drain()
+    grid_sweep(svc, edited1, layers)
+    svc.drain()
+    h = grid_sweep(svc, edited2, layers)
+    svc.drain()
+    res = h.result()
+    assert res.meta["delta_sweep"] == 1.0
+    scratch = stream_explore(backend(), edited2, layers, network=NETWORK,
+                             n_per_type=GRID_N, method="grid",
+                             reducers=sweep_reducers(), chunk_size=128)
+    assert_frames_equal(res, scratch)
+    assert_stats_equal(res, scratch)
+
+  def test_corrupt_base_falls_back_to_full_sweep(self, layers, tmp_path):
+    axis = AXIS_ORDER[1]
+    base, edited = small_grid_space(), small_grid_space(extra_on=axis)
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    grid_sweep(svc, base, layers)
+    svc.drain()
+    # corrupt every stored result: the delta base is discovered via the
+    # manifest but fails verification -> quarantined -> full sweep
+    for name in os.listdir(tmp_path):
+      if name.startswith("result-"):
+        open(os.path.join(tmp_path, name), "wb").write(b"rot")
+    h = grid_sweep(svc, edited, layers)
+    svc.drain()
+    res = h.result()
+    assert "delta_sweep" not in res.meta
+    scratch = stream_explore(backend(), edited, layers, network=NETWORK,
+                             n_per_type=GRID_N, method="grid",
+                             reducers=sweep_reducers(), chunk_size=128)
+    assert_frames_equal(res, scratch)
+
+  def test_unrelated_spaces_do_not_delta(self, layers, tmp_path):
+    # two axes changed: not a single-axis edit, no delta
+    base = small_grid_space()
+    edited = small_grid_space(extra_on=AXIS_ORDER[1])
+    axes = {a.name: a.values for a in edited.axes}
+    axes[AXIS_ORDER[2]] = tuple(HW_RANGES[AXIS_ORDER[2]][:3])
+    both = DesignSpace(axes=axes)
+    svc = ExplorationService(backend(), slots=1, store=str(tmp_path))
+    grid_sweep(svc, base, layers)
+    svc.drain()
+    h = grid_sweep(svc, both, layers)
+    svc.drain()
+    assert "delta_sweep" not in h.result().meta
+
+  def test_cached_driver_and_session_wiring(self, layers, tmp_path):
+    """The standalone cached driver and the ``store=`` session argument
+    route through the same store semantics as the service."""
+    axis = AXIS_ORDER[1]
+    base, edited = small_grid_space(), small_grid_space(extra_on=axis)
+    store = ResultStore(tmp_path)
+    r1 = cached_stream_explore(backend(), base, layers, network=NETWORK,
+                               n_per_type=GRID_N, method="grid",
+                               reducers=sweep_reducers(), chunk_size=128,
+                               workers=2, store=store)
+    assert "store_hit" not in r1.meta or r1.meta.get("store_hit") != 1.0
+    sess = ExplorationSession(backend(), edited)
+    r2 = sess.explore(layers, NETWORK, n_per_type=GRID_N, method="grid",
+                      stream=True, reducers=sweep_reducers(),
+                      chunk_size=96, store=store)
+    assert r2.meta["delta_sweep"] == 1.0
+    scratch = stream_explore(backend(), edited, layers, network=NETWORK,
+                             n_per_type=GRID_N, method="grid",
+                             reducers=sweep_reducers(), chunk_size=128)
+    assert_frames_equal(r2, scratch)
+    assert_stats_equal(r2, scratch)
+    # and the session store= path serves hits
+    r3 = sess.explore(layers, NETWORK, n_per_type=GRID_N, method="grid",
+                      stream=True, reducers=sweep_reducers(),
+                      chunk_size=96, store=store)
+    assert r3.meta["store_hit"] == 1.0
+    assert_frames_equal(r3, scratch)
+
+  def test_store_requires_stream(self, layers, tmp_path):
+    sess = ExplorationSession(backend())
+    with pytest.raises(ValueError, match="stream=True"):
+      sess.explore(layers, NETWORK, store=ResultStore(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# chaos: concurrent sessions under injected faults, kills, sick devices
+# ---------------------------------------------------------------------------
+
+class _DeadDeviceBackend:
+  """A jit-shaped backend whose device rungs always fail — numpy path
+  delegates to the real vector oracle, so demoted results stay exact."""
+
+  name = "dead-device"
+  jit = True
+  prefers_table = True
+
+  def __init__(self):
+    self._inner = VectorOracleBackend(chunk_size=256)
+    self.n_device_calls = 0
+
+  def evaluate_table(self, table, layers, network="net"):
+    return self._inner.evaluate_table(table, layers, network)
+
+  def fused_eval_pending(self, chunk, layers, network, plan, idx):
+    self.n_device_calls += 1
+    raise RuntimeError("device runtime wedged")
+
+  def eval_pending(self, chunk, layers, network, idx):
+    self.n_device_calls += 1
+    raise RuntimeError("device runtime wedged")
+
+
+class TestServiceChaos:
+
+  def test_sessions_race_under_faults_bit_identical(self, layers):
+    space = DesignSpace()
+    refs = {s: solo_sweep(space, layers, seed=s) for s in (1, 2, 3)}
+    # times=2 < the retry budget's 3 attempts: every fault heals in place
+    plan = FaultPlan.seeded(seed=11, n_chunks=12, p_raise=0.4,
+                            layer="task", times=2)
+    svc = ExplorationService(backend(), slots=3, retry=no_wait(),
+                             fault_plan=plan)
+    handles = {s: submit_sweep(svc, space, layers, seed=s)
+               for s in (1, 2, 3)}
+    assert svc.drain() == 3
+    for s, h in handles.items():
+      res = h.result()
+      assert_frames_equal(res, refs[s])
+      assert_stats_equal(res, refs[s])
+    assert plan.n_fired > 0  # the chaos actually happened
+
+  def test_kill_mid_drain_then_resume(self, layers, tmp_path):
+    space = DesignSpace()
+    refs = {s: solo_sweep(space, layers, seed=s, n=2500)
+            for s in (1, 2)}
+    plan = FaultPlan([Fault("kill", 4, "task")])
+    svc = ExplorationService(backend(), slots=2, store=str(tmp_path),
+                             fault_plan=plan)
+    h1 = submit_sweep(svc, space, layers, seed=1, n=2500)
+    h2 = submit_sweep(svc, space, layers, seed=2, n=2500)
+    with pytest.raises(SweepKilled):
+      svc.drain()
+    assert h1.status == "failed" and h2.status == "failed"
+    # a fresh service over the same store replays the journaled chunks
+    svc2 = ExplorationService(backend(), slots=2, store=str(tmp_path))
+    g1 = submit_sweep(svc2, space, layers, seed=1, n=2500)
+    g2 = submit_sweep(svc2, space, layers, seed=2, n=2500)
+    svc2.drain()
+    for g, s in ((g1, 1), (g2, 2)):
+      res = g.result()
+      assert res.meta["n_resumed_chunks"] > 0
+      assert_frames_equal(res, refs[s])
+      assert_stats_equal(res, refs[s])
+
+  def test_sick_device_opens_breaker(self, layers):
+    """Persistently failing device rungs open the shared breaker: later
+    chunks route straight to numpy (no more device calls, no more
+    demotion spend) and results stay bit-identical."""
+    space = DesignSpace()
+    ref = solo_sweep(space, layers, seed=1, n=4000)
+    dead = _DeadDeviceBackend()
+    br = CircuitBreaker(threshold=2, cooldown=1000, jitter=0)
+    svc = ExplorationService(dead, slots=1, retry=no_wait(), breaker=br)
+    h = submit_sweep(svc, space, layers, seed=1, n=4000)
+    svc.drain()
+    res = h.result()
+    assert res.meta["breaker_state"] == "open"
+    assert res.meta["n_breaker_opens"] == 1.0
+    assert res.meta["n_breaker_short_circuits"] > 0
+    assert any(f == "closed" and t == "open"
+               for _, f, t in res.meta["breaker_transitions"])
+    # the breaker bounded the blast radius: device calls stop after the
+    # opening chunks instead of failing once per chunk
+    assert dead.n_device_calls < res.meta["n_chunks"] * 2
+    assert res.meta["n_demotions"] < res.meta["n_chunks"]
+    assert_frames_equal(res, ref)
+    assert_stats_equal(res, ref)
+
+  def test_breaker_shared_across_sessions(self, layers):
+    # session B inherits the breaker state session A's failures opened
+    space = DesignSpace()
+    dead = _DeadDeviceBackend()
+    br = CircuitBreaker(threshold=2, cooldown=10_000, jitter=0)
+    svc = ExplorationService(dead, slots=1, retry=no_wait(), breaker=br)
+    ha = submit_sweep(svc, space, layers, seed=1)
+    svc.drain()
+    calls_after_a = dead.n_device_calls
+    hb = submit_sweep(svc, space, layers, seed=2)
+    svc.drain()
+    assert dead.n_device_calls == calls_after_a  # B never touched it
+    assert hb.result().meta["breaker_state"] == "open"
+    assert_frames_equal(ha.result(), solo_sweep(space, layers, seed=1))
