@@ -51,11 +51,17 @@ def bench_provenance() -> Dict[str, object]:
   }
   try:
     import jax
+
+    from repro.explore.fleet import device_topology
     prov["jax_version"] = jax.__version__
-    prov["jax_device_kind"] = jax.devices()[0].device_kind
+    topo = device_topology()
+    prov["jax_device_kind"] = (topo["device_kinds"] or ["none"])[0]
+    prov["device_topology"] = topo
   except Exception:  # noqa: BLE001 - jax is optional for numpy-only runs
     prov["jax_version"] = "unavailable"
     prov["jax_device_kind"] = "none"
+    prov["device_topology"] = {"platform": "none", "n_devices": 0,
+                               "device_kinds": []}
   return prov
 
 

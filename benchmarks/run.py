@@ -29,7 +29,7 @@ def main() -> None:
   ap.add_argument("--suite", default="all",
                   choices=("paper", "accuracy", "framework", "coexplore",
                            "streaming", "search", "resilience", "service",
-                           "all"),
+                           "fleet", "all"),
                   help="benchmark module to run (default: all); "
                        "'coexplore' runs just the joint-sweep perf record, "
                        "'streaming' the constant-memory sweep-engine record "
@@ -39,7 +39,11 @@ def main() -> None:
                        "'resilience' the kill-and-resume / fault-healing "
                        "record (RESILIENCE_BENCH_SCALE=smoke for CI), "
                        "'service' the store-hit / delta-sweep amortization "
-                       "record (SERVICE_BENCH_SCALE=smoke for CI)")
+                       "record (SERVICE_BENCH_SCALE=smoke for CI), "
+                       "'fleet' the multi-device scaling + chaos "
+                       "bit-identity record (FLEET_BENCH_SCALE=smoke for "
+                       "CI; each point is a child process with its own "
+                       "forced XLA host-device count)")
   ap.add_argument("--only", default=None,
                   help="run only benchmarks whose name contains this")
   ap.add_argument("--json-dir", default=None,
@@ -53,7 +57,7 @@ def main() -> None:
     from benchmarks import common
     common.JSON_DIR = args.json_dir
 
-  from benchmarks import (accuracy_experiments, framework_perf,
+  from benchmarks import (accuracy_experiments, fleet_perf, framework_perf,
                           paper_figures, search_perf, service_perf)
   suites = {
       "paper": paper_figures.ALL,
@@ -64,12 +68,14 @@ def main() -> None:
       "search": search_perf.ALL,
       "resilience": [framework_perf.resilience_perf],
       "service": service_perf.ALL,
+      "fleet": fleet_perf.ALL,
   }
   benches = suites.get(args.suite) or (paper_figures.ALL
                                        + accuracy_experiments.ALL
                                        + framework_perf.ALL
                                        + search_perf.ALL
-                                       + service_perf.ALL)
+                                       + service_perf.ALL
+                                       + fleet_perf.ALL)
   print("name,us_per_call,derived")
   failures = 0
   for fn in benches:

@@ -87,6 +87,12 @@ HOST_COERCION_CALLS = frozenset({"device_get"})
 # re-raised as a typed ChunkError — never silently swallowed (ROB001).
 ROBUSTNESS_DIRS = ("explore/",)
 
+# The one sanctioned device-enumeration call site (ROB003): every other
+# module must reach devices through repro.explore.fleet, so the fleet's
+# health registry / quarantine cannot be bypassed.  Scanned tree-wide.
+DEVICE_ENUM_MODULE = "explore/fleet.py"
+DEVICE_ENUM_CALLS = frozenset({"devices", "local_devices"})
+
 # -- contract pack -----------------------------------------------------------
 
 KERNEL_PATH_RE = re.compile(r"(?:^|/)kernels/([A-Za-z0-9_]+)/kernel\.py$")

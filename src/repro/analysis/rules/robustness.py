@@ -115,3 +115,35 @@ class UnboundedJoin(Rule):
             "concurrent.futures.wait without timeout= stalls the "
             "dispatch loop on a single lost future; use "
             "timeout=POOL_WAIT_SECONDS in a re-arming loop")
+
+
+@register
+class DirectDeviceEnumeration(Rule):
+  id = "ROB003"
+  pack = "robustness"
+  summary = ("direct jax.devices()/jax.local_devices() outside the fleet "
+             "module")
+
+  def check_module(self, mod, ctx):
+    """Flags ``jax.devices()`` / ``jax.local_devices()`` anywhere but
+    ``explore/fleet.py`` (tree-wide, not just ``explore/``).  Direct
+    enumeration hands code a device the fleet layer may have quarantined
+    — a lost or silently-corrupting device looks exactly like a healthy
+    one to ``jax.devices()``.  Go through
+    ``repro.explore.fleet.visible_devices()`` (or a ``DevicePool``) so
+    placement stays health-aware.
+    """
+    if mod.rel == config.DEVICE_ENUM_MODULE:
+      return
+    for node in ast.walk(mod.tree):
+      if not isinstance(node, ast.Call):
+        continue
+      fn = node.func
+      if (isinstance(fn, ast.Attribute)
+          and fn.attr in config.DEVICE_ENUM_CALLS
+          and isinstance(fn.value, ast.Name) and fn.value.id == "jax"):
+        yield Finding(
+            self.id, mod.rel, node.lineno, node.col_offset,
+            f"direct jax.{fn.attr}() bypasses the fleet health registry "
+            "(quarantined/lost devices look healthy); use "
+            "repro.explore.fleet.visible_devices() or a DevicePool")

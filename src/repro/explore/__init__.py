@@ -53,6 +53,13 @@ fit-once / evaluate-many DSE and HW x NN co-exploration:
                        (SweepJournal + ``resume_from=``), deterministic
                        fault injection (FaultPlan) — results stay
                        bit-identical through all of it        [resilience]
+  fleet execution      elastic device-fleet sweeps: one shared DevicePool
+                       health registry (per-device EWMA latency +
+                       circuit breakers), straggler speculation, elastic
+                       resharding on device loss, and a silent-data-
+                       corruption sentinel built on the exact-parity
+                       contract — ``run_stream(..., pool=DevicePool())``
+                       or ``stream_explore(..., pool=...)``       [fleet]
   exploration service  concurrent sessions over one shared executor:
                        admission control + typed backpressure, per-request
                        deadlines and cooperative cancellation, a shared
@@ -100,6 +107,8 @@ from repro.explore.backend import (EvaluationBackend, OracleBackend,
 # loads automatically when a VectorOracleBackend(jit=True) is built or a
 # streaming sweep hits the device path; import it explicitly (before any
 # jax compilation) when you need the flags earlier.
+from repro.explore.fleet import (DevicePool, device_topology, run_fleet,
+                                 visible_devices)
 from repro.explore.frame import (DesignPoint, Normalized, ResultFrame,
                                  pareto_mask, stable_topk_indices,
                                  summary_stats)
@@ -131,7 +140,7 @@ __all__ = [
     "AXIS_ORDER", "AdmissionRejected", "Axis", "BudgetExhausted",
     "ChunkError", "ChunkTask", "CircuitBreaker", "CollectAccumulator",
     "ConfigTable", "Deadline", "DeadlineExceeded", "DesignPoint",
-    "DesignSpace", "EvaluationBackend", "ExplorationService",
+    "DesignSpace", "DevicePool", "EvaluationBackend", "ExplorationService",
     "ExplorationSession", "Fault", "FaultInjected", "FaultPlan",
     "HistogramAccumulator", "InjectedHang", "JointTable", "LayerStack",
     "Normalized", "OracleBackend", "ParetoAccumulator", "PolynomialBackend",
@@ -140,9 +149,10 @@ __all__ = [
     "SessionHandle", "StatsAccumulator", "StreamResult", "SweepJournal",
     "SweepKilled", "TopKAccumulator", "VectorConstraint",
     "VectorOracleBackend", "cached_stream_co_explore",
-    "cached_stream_explore", "crowding_distance", "gbuf_overheads",
-    "gbuf_overheads_table", "guided_search", "hypervolume",
-    "nondominated_ranks", "objective_matrix", "pareto_mask",
-    "stable_topk_indices", "stream_co_explore", "stream_explore",
-    "summary_stats", "sweep_key", "vector_constraint",
+    "cached_stream_explore", "crowding_distance", "device_topology",
+    "gbuf_overheads", "gbuf_overheads_table", "guided_search",
+    "hypervolume", "nondominated_ranks", "objective_matrix", "pareto_mask",
+    "run_fleet", "stable_topk_indices", "stream_co_explore",
+    "stream_explore", "summary_stats", "sweep_key", "vector_constraint",
+    "visible_devices",
 ]

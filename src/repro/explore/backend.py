@@ -367,7 +367,8 @@ class VectorOracleBackend:
     comes from the dispatch-ahead window instead."""
     import jax
     import jax.numpy as jnp
-    devices = jax.devices()
+    from repro.explore.fleet import visible_devices
+    devices = visible_devices()
     if len(devices) <= 1:
       return fn
     from jax.experimental.shard_map import shard_map
@@ -396,27 +397,49 @@ class VectorOracleBackend:
 
     return padded
 
-  def _eval_fn(self, layers: Tuple[ConvLayer, ...], plan=None):
+  @staticmethod
+  def _pinned():
+    """The fleet layer's thread-local device pin (None: default
+    placement) — see :func:`repro.explore.fleet.pin`."""
+    from repro.explore import fleet
+    return fleet.pinned_device()
+
+  @staticmethod
+  def _place(inputs, dev):
+    """Commit a chunk's input arrays to the pinned device so the jitted
+    program executes there.  Must run inside the ``_x64`` context —
+    ``device_put`` canonicalizes dtypes, and float64 inputs would be
+    silently downcast outside it."""
+    if dev is None:
+      return inputs
+    import jax
+    return jax.device_put(inputs, dev)
+
+  def _eval_fn(self, layers: Tuple[ConvLayer, ...], plan=None,
+               pinned: bool = False):
     from repro.explore import device as device_lib
+    pinned = bool(pinned) and plan is None  # fused programs never shard
 
     def build():
       fn = device_lib.make_eval_fn(layers, plan)
-      if plan is None:
+      if plan is None and not pinned:
         fn = self._shard_rows(fn, joint=False)
       return self._jit(fn)
 
-    return self._cached_fn(("eval", layers, plan, self.precision), build)
+    return self._cached_fn(("eval", layers, plan, self.precision, pinned),
+                           build)
 
-  def _joint_fn(self, plan=None):
+  def _joint_fn(self, plan=None, pinned: bool = False):
     from repro.explore import device as device_lib
+    pinned = bool(pinned) and plan is None  # fused programs never shard
 
     def build():
       fn = device_lib.make_joint_fn(plan)
-      if plan is None:
+      if plan is None and not pinned:
         fn = self._shard_rows(fn, joint=True)
       return self._jit(fn)
 
-    return self._cached_fn(("joint", plan, self.precision), build)
+    return self._cached_fn(("joint", plan, self.precision, pinned), build)
 
   def _eval_chunk_jax(self, chunk: ConfigTable,
                       layers: Tuple[ConvLayer, ...]):
@@ -452,15 +475,17 @@ class VectorOracleBackend:
     from repro.explore import device as device_lib
     layers = tuple(layers)
     inputs = oracle.batch_inputs(table)
+    dev = self._pinned()
     with self._x64():
-      out = self._eval_fn(layers)(inputs)
+      inputs = self._place(inputs, dev)
+      out = self._eval_fn(layers, pinned=dev is not None)(inputs)
 
     def finalize():
       l, p, a = (np.asarray(jax.device_get(o), np.float64) for o in out)
       return ResultFrame(l, p, a, table.pe_type_strings(), (), network,
                          table=table), idx
 
-    return device_lib.PendingFrame(finalize)
+    return device_lib.PendingFrame(finalize, buffers=out)
 
   def co_eval_pending(self, hw: ConfigTable, stack: LayerStack, network: str,
                       idx: np.ndarray, arch_lo: int, accs: np.ndarray,
@@ -471,9 +496,11 @@ class VectorOracleBackend:
     from repro.explore import device as device_lib
     inputs = oracle.batch_inputs(hw)
     unique_cols, slot_ids = stack.dedup_slots() if dedup is None else dedup
+    dev = self._pinned()
     with self._x64():
-      out = self._joint_fn()(inputs, unique_cols, slot_ids, stack.valid,
-                             np.zeros(0))
+      inputs = self._place(inputs, dev)
+      out = self._joint_fn(pinned=dev is not None)(
+          inputs, unique_cols, slot_ids, stack.valid, np.zeros(0))
 
     def finalize():
       lat, pwr, area = (np.asarray(jax.device_get(o), np.float64)
@@ -481,7 +508,7 @@ class VectorOracleBackend:
       return device_lib.joint_chunk_frame(
           lat, pwr, area, hw, network, arch_lo, accs, arch_lookup), idx
 
-    return device_lib.PendingFrame(finalize)
+    return device_lib.PendingFrame(finalize, buffers=out)
 
   def fused_eval_pending(self, table: ConfigTable,
                          layers: Sequence[ConvLayer], network: str,
@@ -492,7 +519,9 @@ class VectorOracleBackend:
     from repro.explore import device as device_lib
     layers = tuple(layers)
     inputs = oracle.batch_inputs(table)
+    dev = self._pinned()
     with self._x64():
+      inputs = self._place(inputs, dev)
       outputs = self._eval_fn(layers, plan)(inputs)
     return device_lib.PendingFused(outputs, plan, table, idx, network)
 
@@ -505,7 +534,9 @@ class VectorOracleBackend:
     inputs = oracle.batch_inputs(hw)
     unique_cols, slot_ids = stack.dedup_slots() if dedup is None else dedup
     accs = np.asarray(accs, np.float64)
+    dev = self._pinned()
     with self._x64():
+      inputs = self._place(inputs, dev)
       outputs = self._joint_fn(plan)(inputs, unique_cols, slot_ids,
                                      stack.valid, accs)
     return device_lib.PendingFused(outputs, plan, hw, idx, network,

@@ -488,15 +488,31 @@ class _PendingBase:
   need.  The streaming engine keeps a small window of these in flight so
   host chunk materialization overlaps device execution."""
 
+  _buffers = None  # output pytree backing is_ready, when tracked
+
   def resolve(self):
     raise NotImplementedError
+
+  def is_ready(self) -> bool:
+    """Non-blocking readiness: True once every tracked device output
+    buffer has been computed (jax async dispatch exposes ``is_ready`` on
+    arrays) — the fleet layer's straggler polling.  Handles without
+    tracked buffers report False (unknown)."""
+    if self._buffers is None:
+      return False
+    import jax
+    return all(leaf.is_ready()
+               for leaf in jax.tree_util.tree_leaves(self._buffers)
+               if hasattr(leaf, "is_ready"))
 
 
 class PendingFrame(_PendingBase):
   """Non-fused device chunk: resolves to the ordinary (frame, idx)."""
 
-  def __init__(self, finalize: Callable[[], Tuple[ResultFrame, np.ndarray]]):
+  def __init__(self, finalize: Callable[[], Tuple[ResultFrame, np.ndarray]],
+               buffers=None):
     self._finalize = finalize
+    self._buffers = buffers
 
   def resolve(self) -> Tuple[ResultFrame, np.ndarray]:
     return self._finalize()
@@ -515,6 +531,7 @@ class PendingFused(_PendingBase):
                accs: Optional[np.ndarray] = None,
                arch_lookup: Tuple[object, ...] = ()):
     self._full, self._reduced = outputs
+    self._buffers = outputs
     self.plan = plan
     self.table = table
     self.indices = np.asarray(indices, np.int64)

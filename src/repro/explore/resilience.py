@@ -98,8 +98,19 @@ class ChunkError(RuntimeError):
 # deterministic fault injection
 # ---------------------------------------------------------------------------
 
-FAULT_KINDS = ("raise", "hang", "kill")
-FAULT_LAYERS = ("task", "device", "backend")
+FAULT_KINDS = ("raise", "hang", "kill", "slow", "corrupt", "device-lost")
+FAULT_LAYERS = ("task", "device", "backend", "fleet")
+
+# fleet-layer faults fire at shard granularity inside explore.fleet's
+# dispatch loop (not in the per-chunk ladder): a slow shard triggers
+# speculation, a corrupt shard exercises the SDC sentinel, a lost device
+# exercises elastic resharding
+FLEET_FAULT_KINDS = ("slow", "corrupt", "device-lost")
+
+# wildcard chunk for fleet faults: fires at ANY chunk dispatched on the
+# targeted device (until ``times`` is spent) — how a persistently sick
+# device is modeled
+ANY_CHUNK = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,11 +118,14 @@ class Fault:
   """One scheduled fault: ``kind`` fires at chunk ``chunk`` when the
   ladder touches ``layer``, at most ``times`` times (a transient with
   ``times <= max_retries`` is healed by retry alone; a larger budget
-  forces a demotion)."""
+  forces a demotion).  Fleet-layer faults additionally carry the
+  targeted pool ``device`` index (None: any device) and may use the
+  ``ANY_CHUNK`` wildcard."""
   kind: str
   chunk: int
   layer: str = "task"
   times: int = 1
+  device: Optional[int] = None
 
   def __post_init__(self):
     if self.kind not in FAULT_KINDS:
@@ -120,6 +134,15 @@ class Fault:
       raise ValueError(f"unknown fault layer {self.layer!r}")
     if self.times <= 0:
       raise ValueError(f"times must be positive, got {self.times}")
+    if (self.kind in FLEET_FAULT_KINDS) != (self.layer == "fleet"):
+      raise ValueError(f"fault kind {self.kind!r} and layer {self.layer!r} "
+                       "mismatch: slow/corrupt/device-lost are fleet-layer "
+                       "faults (and only those are)")
+    if self.layer != "fleet":
+      if self.device is not None:
+        raise ValueError("device targeting is fleet-layer only")
+      if self.chunk < 0:
+        raise ValueError("the ANY_CHUNK wildcard is fleet-layer only")
 
 
 class FaultPlan:
@@ -181,6 +204,46 @@ class FaultPlan:
     :class:`InjectedHang` instead of blocking."""
     if self._fire(layer, chunk, ("hang",)):
       raise InjectedHang(f"injected hang at {layer} layer, chunk {chunk}")
+
+  def check_fleet(self, device: int, chunk: int) -> Optional[str]:
+    """Shard-dispatch hook for the fleet layer: returns the fired fault
+    kind (``slow`` / ``corrupt`` / ``device-lost``) when a fleet fault
+    targets this (device, chunk) pair — device None and the
+    ``ANY_CHUNK`` wildcard match anything — else None.  The fleet
+    executor acts on the kind; nothing is raised here."""
+    with self._lock:
+      for i, f in enumerate(self.faults):
+        if f.layer != "fleet" or self._remaining[i] <= 0:
+          continue
+        if f.chunk not in (chunk, ANY_CHUNK):
+          continue
+        if f.device is not None and f.device != int(device):
+          continue
+        self._remaining[i] -= 1
+        self.n_fired += 1
+        return f.kind
+    return None
+
+  @classmethod
+  def seeded_fleet(cls, seed: int, n_chunks: int, n_devices: int,
+                   p_slow: float = 0.0, p_corrupt: float = 0.0,
+                   p_lost: float = 0.0, times: int = 1) -> "FaultPlan":
+    """Random-but-reproducible fleet chaos: at every chunk boundary,
+    independent draws decide whether a seeded random device is slowed,
+    corrupted, or lost at that chunk."""
+    rng = np.random.RandomState(derive_seed("fleet-fault-plan", seed))
+    faults: List[Fault] = []
+    for chunk in range(int(n_chunks)):
+      u = rng.random_sample(3)
+      dev = int(rng.randint(max(1, int(n_devices))))
+      if u[0] < p_slow:
+        faults.append(Fault("slow", chunk, "fleet", times, device=dev))
+      if u[1] < p_corrupt:
+        faults.append(Fault("corrupt", chunk, "fleet", times, device=dev))
+      if u[2] < p_lost:
+        faults.append(Fault("device-lost", chunk, "fleet", times,
+                            device=dev))
+    return cls(faults)
 
 
 # ---------------------------------------------------------------------------
@@ -339,6 +402,20 @@ class CircuitBreaker:
           self.n_opens += 1
           self._arm_cooldown()
 
+  def trip(self) -> None:
+    """Force the breaker open immediately — the fleet layer's verdicts
+    (device lost, SDC divergence) are not "consecutive failures" to be
+    counted but standing evidence; the device still rejoins through the
+    ordinary half-open probe after the seeded cooldown."""
+    with self._lock:
+      self._events += 1
+      self._failures = 0
+      self._probing = False
+      if self.state != "open":
+        self._to("open")
+        self.n_opens += 1
+      self._arm_cooldown()
+
   def record_success(self) -> None:
     """A device-rung chunk completed (dispatch + resolution)."""
     with self._lock:
@@ -360,6 +437,52 @@ class CircuitBreaker:
           "n_breaker_probes": float(self.n_probes),
           "breaker_transitions": list(self.transitions),
       }
+
+
+class WatchdogRegistry:
+  """Bookkeeping for the watchdog helper threads of
+  :meth:`ResiliencePolicy._timed_resolve`.
+
+  A watchdogged resolution that outlives its bounded join used to be
+  abandoned: the daemon thread kept running with no reference anywhere —
+  invisible to shutdown, impossible to count, a genuine leak under a
+  long-lived service that demotes often.  The registry keeps every live
+  watchdog referenced, reaps the ones that have since finished, and
+  reports the still-running remainder as ``n_leaked_watchdogs`` in
+  ``StreamResult.meta`` (0 on every healthy run — asserted in tests).
+  Thread-safe."""
+
+  def __init__(self):
+    self._threads: List[threading.Thread] = []
+    self._lock = threading.Lock()
+    self.n_spawned = 0
+    self.n_reaped = 0
+
+  def _reap_locked(self) -> None:
+    live = [t for t in self._threads if t.is_alive()]
+    self.n_reaped += len(self._threads) - len(live)
+    self._threads = live
+
+  def track(self, t: threading.Thread) -> None:
+    with self._lock:
+      self.n_spawned += 1
+      self._threads.append(t)
+      self._reap_locked()
+
+  def n_live(self) -> int:
+    """Reap finished watchdogs, then count the still-running ones."""
+    with self._lock:
+      self._reap_locked()
+      return len(self._threads)
+
+  def drain(self, timeout: float = 0.1) -> int:
+    """Bounded-join every live watchdog (service shutdown); returns how
+    many are still running afterwards."""
+    with self._lock:
+      threads = list(self._threads)
+    for t in threads:
+      t.join(timeout)
+    return self.n_live()
 
 
 class ResiliencePolicy:
@@ -388,6 +511,7 @@ class ResiliencePolicy:
     # so per-request deadlines reach the watchdog without new plumbing
     self.resolve_timeout = resolve_timeout
     self.breaker = breaker
+    self.watchdogs = WatchdogRegistry()
     self.n_retries = 0
     self.n_demotions = 0
     self.demotions: List[Tuple[int, str, str]] = []  # (chunk, rung, why)
@@ -412,6 +536,17 @@ class ResiliencePolicy:
     if not isinstance(task, ChunkTask):
       return task()
     return self._run_ladder(task, 0)
+
+  def execute_from(self, task, start: int):
+    """Run a task's ladder from rung ``start`` onward.  The fleet layer
+    uses this to route chunks straight to the terminal numpy rung when
+    every device is quarantined (and for the SDC sentinel's reference
+    evaluation) — the breaker is not consulted, matching demotion
+    semantics."""
+    if not isinstance(task, ChunkTask):
+      return task()
+    return self._run_ladder(task, max(0, min(int(start),
+                                             len(task.rungs) - 1)))
 
   def _attempt(self, task: ChunkTask, rung: Rung) -> Callable[[], object]:
     def attempt():
@@ -475,6 +610,9 @@ class ResiliencePolicy:
     t.start()
     t.join(timeout)
     if not box:
+      # the helper is still running: keep it referenced (and countable)
+      # instead of abandoning it — see WatchdogRegistry
+      self.watchdogs.track(t)
       raise ChunkTimeout(
           f"resolution exceeded the {timeout}s watchdog")
     tag, val = box[0]
@@ -494,6 +632,17 @@ class _GuardedPending:
     self._task = task
     self._pos = rung_pos
     self._handle = handle
+
+  def is_ready(self) -> bool:
+    """Non-blocking readiness (fleet straggler polling): delegates to
+    the wrapped handle; handles without readiness report False."""
+    fn = getattr(self._handle, "is_ready", None)
+    if fn is None:
+      return False
+    try:
+      return bool(fn())
+    except Exception:
+      return False
 
   def resolve(self):
     policy, task = self._policy, self._task
@@ -680,6 +829,23 @@ class SweepJournal:
       with open(self.log_path(key), "r+b") as f:
         f.truncate(good_end)
     return states
+
+  def rewrite(self, key: str, states: List[Dict[str, object]]) -> None:
+    """Atomically replace ``key``'s append log with ``states`` (in
+    order) — the compaction primitive: callers replay, drop superseded
+    entries, and rewrite.  Atomic tmp + ``os.replace`` like ``record``,
+    so a kill mid-compaction leaves the previous log intact."""
+    tmp = self.log_path(key) + ".tmp"
+    with open(tmp, "wb") as f:
+      for state in states:
+        payload = pickle.dumps(
+            {"version": JOURNAL_VERSION, "key": key, "state": state},
+            protocol=pickle.HIGHEST_PROTOCOL)
+        f.write(self._LOG_MAGIC + struct.pack("<Q", len(payload))
+                + hashlib.sha256(payload).digest() + payload)
+      f.flush()
+      os.fsync(f.fileno())
+    os.replace(tmp, self.log_path(key))
 
   def load_last(self, key: str) -> Optional[Dict[str, object]]:
     """Latest valid append-log state for ``key`` (None if none)."""

@@ -394,12 +394,15 @@ class ExplorationService:
                breaker: Optional[CircuitBreaker] = None,
                resolve_timeout: Optional[float] = None,
                dispatch_ahead: int = DISPATCH_AHEAD,
-               checkpoint_every: int = 1):
+               checkpoint_every: int = 1, pool=None):
     if slots < 1:
       raise ValueError(f"slots must be >= 1, got {slots}")
     if max_queued < 0:
       raise ValueError(f"max_queued must be >= 0, got {max_queued}")
     self.backend = backend
+    # one DevicePool shared by every session: quarantine decisions
+    # reflect the device, not any single session's luck
+    self.pool = pool
     self.store = (ResultStore(store)
                   if store is not None and not isinstance(store, ResultStore)
                   else store)
@@ -690,7 +693,12 @@ class ExplorationService:
 
   def _abandon_window(self, s: _SweepSession) -> None:
     # in-flight device work is simply dropped — like a watchdogged
-    # resolution, the abandoned dispatches drain harmlessly
+    # resolution, the abandoned dispatches drain harmlessly; checked-out
+    # pool devices must still be released
+    if self.pool is not None:
+      for _, _, dev, _ in s.window:
+        if dev is not None:
+          self.pool.checkin(dev)
     s.window.clear()
 
   def _step_sweep(self, s: _SweepSession) -> bool:
@@ -719,28 +727,58 @@ class ExplorationService:
       self._abandon_window(s)
       s.finalize("failed", error=BudgetExhausted(s.sid, s.chunk_budget))
       return True
+    dev = None
+    if self.pool is not None and \
+        any(r.layer == "device" for r in getattr(task, "rungs", ())):
+      dev = self.pool.checkout()
+    t_dispatch = time.perf_counter()
     try:
-      out = s.policy.execute(task)
+      if dev is not None:
+        from repro.explore import fleet
+        with fleet.pin(self.pool.device(dev)):
+          out = s.policy.execute(task)
+      else:
+        out = s.policy.execute(task)
     except SweepKilled:
+      if dev is not None:
+        self.pool.checkin(dev)
       s.checkpoint(force=True)
       raise
     except Exception as e:
+      if dev is not None:
+        self.pool.checkin(dev)
+        self.pool.record_failure(dev)
       self._fail_sweep(s, task.index, e)
       return True
     s.n_dispatched += 1
     if hasattr(out, "resolve"):
-      s.window.append((task.index, out))
+      s.window.append((task.index, out, dev, t_dispatch))
     else:
+      if dev is not None:
+        self._release(dev, t_dispatch, ok=True)
       self._fold(s, task.index, out)
     return True
 
+  def _release(self, dev: int, t_dispatch: float, ok: bool) -> None:
+    """Return a checked-out pool device, feeding the health registry."""
+    self.pool.checkin(dev)
+    if ok:
+      self.pool.record_latency(dev, time.perf_counter() - t_dispatch)
+      self.pool.record_success(dev)
+    else:
+      self.pool.record_failure(dev)
+
   def _finish_oldest(self, s: _SweepSession) -> bool:
-    index, pending = s.window.popleft()
+    index, pending, dev, t_dispatch = s.window.popleft()
     try:
       self._fold(s, index, pending)
     except SweepKilled:
+      if dev is not None:
+        self.pool.checkin(dev)
       s.checkpoint(force=True)
       raise
+    if dev is not None:
+      self._release(dev, t_dispatch, ok=s.state != "failed")
     return True
 
   def _fold(self, s: _SweepSession, index: int, result) -> None:
@@ -777,9 +815,12 @@ class ExplorationService:
             "n_overflows": float(s.counters["n_overflows"]),
             "session": float(s.sid),
             "service_slots": float(len(self.slots))}
+    meta["n_leaked_watchdogs"] = float(s.policy.watchdogs.n_live())
     meta.update(s.meta_extra)
     if self.breaker is not None:
       meta.update(self.breaker.meta())
+    if self.pool is not None:
+      meta.update(self.pool.meta())
     res = StreamResult(
         results={n: r.result() for n, r in s.reducers.items()},
         n_rows=s.counters["n_rows"], seconds=seconds, meta=meta)
@@ -905,6 +946,8 @@ class ExplorationService:
     meta["n_queued"] = len(self.queue)
     meta["n_active"] = sum(1 for s in self.slots if s is not None)
     meta["slots"] = len(self.slots)
+    if self.pool is not None:
+      meta.update(self.pool.meta())
     if self.breaker is not None:
       meta.update(self.breaker.meta())
     if self.store is not None:

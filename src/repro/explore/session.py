@@ -72,7 +72,7 @@ class ExplorationSession:
               reducers: Optional[Dict[str, Reducer]] = None,
               chunk_size: int = 65536, workers: Optional[int] = None,
               policy=None, resume_from=None, checkpoint_every: int = 1,
-              store=None) -> Union[ResultFrame, StreamResult]:
+              store=None, pool=None) -> Union[ResultFrame, StreamResult]:
     """Sample the space, evaluate `network`; optionally time the oracle on
     the first `measure_oracle` configs for the paper's speedup claim.
 
@@ -100,9 +100,10 @@ class ExplorationSession:
     if reducers is not None and not stream:
       raise ValueError("reducers only apply to the streaming engine; "
                        "pass stream=True")
-    if (policy is not None or resume_from is not None) and not stream:
-      raise ValueError("policy/resume_from apply to the streaming engine; "
-                       "pass stream=True")
+    if (policy is not None or resume_from is not None
+        or pool is not None) and not stream:
+      raise ValueError("policy/resume_from/pool apply to the streaming "
+                       "engine; pass stream=True")
     if store is not None and not stream:
       raise ValueError("store applies to the streaming engine; "
                        "pass stream=True")
@@ -119,13 +120,13 @@ class ExplorationSession:
                                      chunk_size=chunk_size, workers=workers,
                                      policy=policy,
                                      checkpoint_every=checkpoint_every,
-                                     store=store)
+                                     store=store, pool=pool)
       return stream_explore(self.backend, self.space, layers, network,
                             n_per_type=n_per_type, seed=seed, method=method,
                             reducers=reducers, chunk_size=chunk_size,
                             workers=workers, policy=policy,
                             resume_from=resume_from,
-                            checkpoint_every=checkpoint_every)
+                            checkpoint_every=checkpoint_every, pool=pool)
     if vectorized == "auto":
       use_table = bool(getattr(self.backend, "prefers_table", False))
     else:
@@ -307,7 +308,7 @@ class ExplorationSession:
                  reducers: Optional[Dict[str, Reducer]] = None,
                  chunk_size: int = 65536, workers: Optional[int] = None,
                  policy=None, resume_from=None, checkpoint_every: int = 1,
-                 store=None) -> Union[ResultFrame, StreamResult]:
+                 store=None, pool=None) -> Union[ResultFrame, StreamResult]:
     """Sampled HW x supernet-evaluated archs -> joint frame (Fig. 12).
 
     Rows carry a ``top1`` float column and an integer ``arch_id`` column
@@ -340,9 +341,10 @@ class ExplorationSession:
     if reducers is not None and not stream:
       raise ValueError("reducers only apply to the streaming engine; "
                        "pass stream=True")
-    if (policy is not None or resume_from is not None) and not stream:
-      raise ValueError("policy/resume_from apply to the streaming engine; "
-                       "pass stream=True")
+    if (policy is not None or resume_from is not None
+        or pool is not None) and not stream:
+      raise ValueError("policy/resume_from/pool apply to the streaming "
+                       "engine; pass stream=True")
     if store is not None and not stream:
       raise ValueError("store applies to the streaming engine; "
                        "pass stream=True")
@@ -359,14 +361,14 @@ class ExplorationSession:
                                         chunk_size=chunk_size,
                                         workers=workers, policy=policy,
                                         checkpoint_every=checkpoint_every,
-                                        store=store)
+                                        store=store, pool=pool)
       return stream_co_explore(self.backend, self.space, arch_accs,
                                n_hw_per_type=n_hw_per_type, seed=seed,
                                image_size=image_size, method=method,
                                reducers=reducers, chunk_size=chunk_size,
                                workers=workers, policy=policy,
                                resume_from=resume_from,
-                               checkpoint_every=checkpoint_every)
+                               checkpoint_every=checkpoint_every, pool=pool)
     from repro.core.supernet import arch_to_layers  # deferred: pulls jax
     if vectorized == "auto":
       use_joint = bool(getattr(self.backend, "prefers_table", False)) \

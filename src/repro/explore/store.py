@@ -35,12 +35,18 @@ store at admission time.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import os
 import pickle
 import threading
 import time
 from typing import Dict, List, Optional, Tuple
+
+try:
+  import fcntl
+except ImportError:  # non-posix: single-process use keeps working
+  fcntl = None
 
 import numpy as np
 
@@ -84,6 +90,7 @@ class ResultStore:
     os.makedirs(self.dir, exist_ok=True)
     self.quarantine_dir = os.path.join(self.dir, "quarantine")
     self._journal = SweepJournal(os.path.join(self.dir, "journal"))
+    self.lock_path = os.path.join(self.dir, "manifest.lock")
     self.n_hits = 0
     self.n_misses = 0
     self.n_quarantined = 0
@@ -167,6 +174,27 @@ class ResultStore:
               "n_quarantined": self.n_quarantined}
 
   # -- manifest index (delta-sweep base discovery) --------------------------
+  #
+  # The index is one shared append log — the only store file multiple
+  # *processes* mutate concurrently (results themselves are
+  # content-addressed: concurrent writers of the same key write identical
+  # bytes, and os.replace keeps each file internally consistent).  An
+  # fcntl advisory lock serializes index access across processes (and,
+  # because each acquisition opens its own file description, across
+  # threads).  Reads take the lock too: ``replay`` truncates trailing
+  # garbage *in place*, which must never race a concurrent append.
+
+  @contextlib.contextmanager
+  def _manifest_lock(self):
+    if fcntl is None:
+      yield
+      return
+    with open(self.lock_path, "a+b") as f:
+      fcntl.flock(f.fileno(), fcntl.LOCK_EX)
+      try:
+        yield
+      finally:
+        fcntl.flock(f.fileno(), fcntl.LOCK_UN)
 
   def put_final(self, key: str, state: Dict[str, object],
                 manifest: Optional[Dict[str, object]] = None) -> None:
@@ -176,16 +204,35 @@ class ResultStore:
     if manifest is not None:
       entry = dict(manifest)
       entry["key"] = key
-      self._journal.append(self.INDEX_KEY, entry)
+      with self._manifest_lock():
+        self._journal.append(self.INDEX_KEY, entry)
 
   def manifests(self) -> List[Dict[str, object]]:
     """Indexed manifests, newest last, deduplicated by key (last wins).
     The index is an append log — a kill mid-append costs at most the
     entry being written; the entries (and the store files) survive."""
     seen: Dict[str, Dict[str, object]] = {}
-    for entry in self._journal.replay(self.INDEX_KEY):
+    with self._manifest_lock():
+      entries = self._journal.replay(self.INDEX_KEY)
+    for entry in entries:
       seen[entry["key"]] = entry
     return list(seen.values())
+
+  def compact_manifests(self) -> int:
+    """Rewrite the manifest index keeping only the latest entry per key
+    (the append log otherwise grows one frame per re-recorded sweep
+    forever).  Runs under the manifest lock; the rewrite is atomic, so a
+    kill mid-compaction leaves the previous index intact.  Returns the
+    number of superseded entries dropped."""
+    with self._manifest_lock():
+      entries = self._journal.replay(self.INDEX_KEY)
+      seen: Dict[str, Dict[str, object]] = {}
+      for entry in entries:
+        seen[entry["key"]] = entry
+      dropped = len(entries) - len(seen)
+      if dropped:
+        self._journal.rewrite(self.INDEX_KEY, list(seen.values()))
+    return dropped
 
 
 # ---------------------------------------------------------------------------
@@ -319,7 +366,8 @@ def cached_stream_explore(backend, space: DesignSpace, layers,
                           workers: Optional[int] = None,
                           policy: Optional[ResiliencePolicy] = None,
                           checkpoint_every: int = 1,
-                          store=None, delta: bool = True) -> StreamResult:
+                          store=None, delta: bool = True,
+                          pool=None) -> StreamResult:
   """:func:`~repro.explore.streaming.stream_explore` through the store:
   an identical finished sweep is a store hit (no evaluation at all); a
   full-grid sweep one axis-edit away from a stored one runs as a
@@ -364,7 +412,7 @@ def cached_stream_explore(backend, space: DesignSpace, layers,
                        else workers,
                        policy=policy, resume_from=store.journal,
                        journal_key=delta_key,
-                       checkpoint_every=checkpoint_every)
+                       checkpoint_every=checkpoint_every, pool=pool)
       res.meta["delta_sweep"] = 1.0
       res.meta["n_delta_rows"] = float(res.n_rows)
       res.n_rows += int(base_state.get("n_rows", 0))
@@ -378,7 +426,7 @@ def cached_stream_explore(backend, space: DesignSpace, layers,
                        reducers=reducers, chunk_size=chunk_size,
                        workers=workers, policy=policy,
                        resume_from=store.journal,
-                       checkpoint_every=checkpoint_every)
+                       checkpoint_every=checkpoint_every, pool=pool)
   store.put_final(rkey, _snapshot_state(reducers, res),
                   _explore_manifest(space, network, method, rfp, full_grid))
   return res
@@ -392,7 +440,7 @@ def cached_stream_co_explore(backend, space: DesignSpace, arch_accs,
                              workers: Optional[int] = None,
                              policy: Optional[ResiliencePolicy] = None,
                              checkpoint_every: int = 1,
-                             store=None) -> StreamResult:
+                             store=None, pool=None) -> StreamResult:
   """:func:`~repro.explore.streaming.stream_co_explore` through the
   store: hit on an identical finished co-exploration, otherwise run
   (journaled) and record.  No delta path — the joint sweep's identity
@@ -418,6 +466,6 @@ def cached_stream_co_explore(backend, space: DesignSpace, arch_accs,
                           reducers=reducers, chunk_size=chunk_size,
                           workers=workers, policy=policy,
                           resume_from=store.journal,
-                          checkpoint_every=checkpoint_every)
+                          checkpoint_every=checkpoint_every, pool=pool)
   store.put_final(rkey, _snapshot_state(reducers, res))
   return res

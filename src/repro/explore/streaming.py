@@ -508,7 +508,7 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
                workers: int = 1, dispatch_ahead: int = DISPATCH_AHEAD,
                policy: Optional[ResiliencePolicy] = None,
                resume_from=None, journal_key: str = "",
-               checkpoint_every: int = 1) -> StreamResult:
+               checkpoint_every: int = 1, pool=None) -> StreamResult:
   """Drain ``tasks`` (each producing one evaluated chunk), folding every
   reducer as chunks complete.
 
@@ -542,7 +542,19 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
     reducers and already-folded chunks are skipped before dispatch.
     Chunk-order invariance makes the resumed final reductions
     bit-identical to an uninterrupted run.
+  * ``pool`` — a :class:`repro.explore.fleet.DevicePool`; the sweep is
+    handed to :func:`repro.explore.fleet.run_fleet`, which shards chunks
+    across the pool's devices with health tracking, straggler
+    speculation, elastic resharding and the silent-corruption sentinel.
+    Chunk-partition bit-identity keeps the fronts identical to this
+    single-device path.
   """
+  if pool is not None:
+    from repro.explore.fleet import run_fleet
+    return run_fleet(tasks, reducers, pool, policy=policy,
+                     dispatch_ahead=dispatch_ahead, resume_from=resume_from,
+                     journal_key=journal_key,
+                     checkpoint_every=checkpoint_every)
   workers = max(1, int(workers))
   t0 = time.perf_counter()
   journal = None
@@ -668,8 +680,10 @@ def run_stream(tasks: Iterable[Task], reducers: Dict[str, Reducer],
           "n_demotions": float(n_demotions),
           "n_resumed_chunks": float(n_resumed),
           "n_overflows": float(counters["n_overflows"])}
-  if policy is not None and policy.breaker is not None:
-    meta.update(policy.breaker.meta())
+  if policy is not None:
+    meta["n_leaked_watchdogs"] = float(policy.watchdogs.n_live())
+    if policy.breaker is not None:
+      meta.update(policy.breaker.meta())
   return StreamResult(
       results={name: r.result() for name, r in reducers.items()},
       n_rows=counters["n_rows"], seconds=seconds, meta=meta)
@@ -862,7 +876,7 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
                    workers: Optional[int] = None,
                    policy: Optional[ResiliencePolicy] = None,
                    resume_from=None,
-                   checkpoint_every: int = 1) -> StreamResult:
+                   checkpoint_every: int = 1, pool=None) -> StreamResult:
   """Sample -> evaluate -> reduce a plain HW sweep in bounded memory.
 
   Chunks come from ``space.iter_tables`` (bit-identical concatenation to
@@ -898,7 +912,8 @@ def stream_explore(backend, space: DesignSpace, layers, network: str = "net",
                     workers=default_workers(backend) if workers is None
                     else workers,
                     policy=policy, resume_from=resume_from,
-                    journal_key=key, checkpoint_every=checkpoint_every)
+                    journal_key=key, checkpoint_every=checkpoint_every,
+                    pool=pool)
 
 
 def stream_co_explore(backend, space: DesignSpace, arch_accs,
@@ -909,7 +924,7 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
                       workers: Optional[int] = None,
                       policy: Optional[ResiliencePolicy] = None,
                       resume_from=None,
-                      checkpoint_every: int = 1) -> StreamResult:
+                      checkpoint_every: int = 1, pool=None) -> StreamResult:
   """Joint HW x NN co-exploration in bounded memory: the arch x HW cross
   product is visited as ``JointTable.block_slices`` blocks (HW sampled
   once per PE type — the small input side; the 100M-pair product never
@@ -934,4 +949,5 @@ def stream_co_explore(backend, space: DesignSpace, arch_accs,
                     workers=default_workers(backend) if workers is None
                     else workers,
                     policy=policy, resume_from=resume_from,
-                    journal_key=key, checkpoint_every=checkpoint_every)
+                    journal_key=key, checkpoint_every=checkpoint_every,
+                    pool=pool)

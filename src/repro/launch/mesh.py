@@ -15,6 +15,8 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro.explore.fleet import visible_devices
+
 
 def make_production_mesh(*, multi_pod: bool = False):
   shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -22,7 +24,7 @@ def make_production_mesh(*, multi_pod: bool = False):
   n = 1
   for s in shape:
     n *= s
-  devices = jax.devices()[:n]
+  devices = visible_devices()[:n]
   if len(devices) < n:
     raise RuntimeError(
         f"mesh {shape} needs {n} devices, found {len(devices)}; the dry-run "
@@ -35,7 +37,7 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_host_mesh(model_parallel: int = 1):
   """Whatever this host actually has (tests / examples): (data, model)."""
-  devs = jax.devices()
+  devs = visible_devices()
   mp = model_parallel
   dp = max(len(devs) // mp, 1)
   return jax.make_mesh((dp, mp), ("data", "model"),
@@ -52,4 +54,4 @@ def make_elastic_mesh(data: int, model: int, pods: int = 1):
     n *= s
   return jax.make_mesh(shape, axes,
                        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-                       devices=jax.devices()[:n])
+                       devices=visible_devices()[:n])

@@ -404,6 +404,40 @@ class TestRobustness:
                    rules=["ROB002"])
     assert codes(rep) == []
 
+  def test_direct_device_enumeration_flagged_tree_wide(self, tmp_path):
+    # ROB003 is NOT scoped to explore/ — launch/serve placement code
+    # bypassing the fleet health registry is exactly the bug
+    rep = run_tree(tmp_path, {"launch/mesh.py":
+                              "import jax\n"
+                              "def mesh():\n"
+                              "  return jax.devices()\n",
+                              "serve/place.py":
+                              "import jax\n"
+                              "def place():\n"
+                              "  return jax.local_devices()[0]\n"},
+                   rules=["ROB003"])
+    assert codes(rep) == ["ROB003"] * 2
+
+  def test_fleet_module_is_the_sanctioned_call_site(self, tmp_path):
+    rep = run_tree(tmp_path, {"explore/fleet.py":
+                              "import jax\n"
+                              "def visible_devices():\n"
+                              "  return tuple(jax.devices())\n"},
+                   rules=["ROB003"])
+    assert codes(rep) == []
+
+  def test_fleet_routed_enumeration_clean(self, tmp_path):
+    # going through the fleet layer (or unrelated .devices() methods on
+    # non-jax objects) is fine
+    rep = run_tree(tmp_path, {"launch/mesh.py":
+                              "from repro.explore.fleet import "
+                              "visible_devices\n"
+                              "def mesh(registry):\n"
+                              "  return visible_devices() + "
+                              "registry.devices()\n"},
+                   rules=["ROB003"])
+    assert codes(rep) == []
+
 
 # ---------------------------------------------------------------------------
 # engine mechanics: suppressions, baseline, fingerprints, parse errors
